@@ -1,0 +1,108 @@
+"""Paper Figs 13, 14, 15: the three overhead experiments, on REAL wall-clock
+execution of reduced-scale JAX services (not simulated).
+
+- Fig 13 analog ("-rdynamic" vs base): JCT with kernel-ID construction ON
+  vs OFF at dispatch time. Paper: -2.38%..+1.55% (noise). Our kernel ID is
+  an aval hash — also expected to be noise-level.
+- Fig 14 (FIKIT sharing stage vs base): single profiled service under the
+  FIKIT engine vs direct execution. Paper: +0.09%..+4.93% (<5%).
+- Fig 15 (measuring stage vs base): per-kernel timed exclusive runs vs
+  direct execution. Paper: +34.5%..+71.8% (measurement is the expensive
+  phase — which is WHY the two-phase design exists).
+"""
+from __future__ import annotations
+
+import statistics as st
+import time
+
+import jax
+
+from benchmarks.common import WALLCLOCK_ARCHS, Csv
+from repro.config import get_config
+from repro.core.client import HookClient
+from repro.core.executor import WallClockEngine
+from repro.core.profiler import ProfiledData, Profiler
+from repro.core.scheduler import Mode
+from repro.core.task import TaskKey
+from repro.models import api
+from repro.models.segmentation import SegmentedService
+
+RUNS = 24
+WARM = 6
+ARCHS = WALLCLOCK_ARCHS[:5]
+
+
+def _service(arch: str, host_gap=0.0008):
+    cfg = get_config(arch).reduced()
+    params = api.build_params(cfg, jax.random.key(0))
+    # batch 8 x seq 64: per-segment kernels in the 1-5 ms range so python
+    # dispatch noise is small relative to device time
+    svc = SegmentedService(cfg, params, batch=8, seq=64, host_gap=host_gap)
+    svc.warmup()
+    svc.warmup()
+    return cfg, svc
+
+
+def _direct_jct(svc, runs=RUNS):
+    """Base environment: run segments directly, no engine, no hooks."""
+    jcts = []
+    for _ in range(runs):
+        state = svc.make_input()
+        t0 = time.perf_counter()
+        for seg in svc.segments:
+            state = seg.fn(state)
+            if seg.host_work is not None:
+                state = seg.host_work(state)
+        jcts.append(time.perf_counter() - t0)
+    return st.median(jcts[WARM:])
+
+
+def _engine_jct(svc, key, mode, profiled=None, identify=True, runs=RUNS,
+                measured=False):
+    with WallClockEngine(mode, profiled) as eng:
+        cl = HookClient(eng, key, 0, svc.segments, identify=identify)
+        jcts = []
+        prof = Profiler(key)
+        for _ in range(runs):
+            state = svc.make_input()
+            if measured:
+                _, jct = cl.measure_run(state, prof)
+            else:
+                _, jct = cl.run(state)
+            jcts.append(jct)
+    return st.median(jcts[WARM:]), prof
+
+
+def main(csvout=None):
+    csvout = csvout or Csv(("name", "base_ms", "overhead_pct"))
+    for arch in ARCHS:
+        cfg, svc = _service(arch)
+        key = TaskKey(cfg.name)
+        base = _direct_jct(svc)
+
+        # Fig 13: identification on vs off (sharing engine either way)
+        with_id, _ = _engine_jct(svc, key, Mode.SHARING, identify=True)
+        no_id, _ = _engine_jct(svc, key, Mode.SHARING, identify=False)
+        csvout.add(f"fig13 ident_on_vs_off {arch}",
+                   round(no_id * 1e3, 2),
+                   round(100 * (with_id - no_id) / no_id, 2))
+
+        # Fig 15: measuring stage vs base (also produces the profile)
+        meas, prof = _engine_jct(svc, key, Mode.EXCLUSIVE, measured=True)
+        csvout.add(f"fig15 measuring_vs_base {arch}", round(base * 1e3, 2),
+                   round(100 * (meas - base) / base, 2))
+
+        # Fig 14: FIKIT sharing stage (profiled) vs base
+        pd = ProfiledData()
+        pd.load(prof.statistics())
+        fikit, _ = _engine_jct(svc, key, Mode.FIKIT, profiled=pd)
+        csvout.add(f"fig14 sharing_stage_vs_base {arch}",
+                   round(base * 1e3, 2),
+                   round(100 * (fikit - base) / base, 2))
+    csvout.emit("Fig13/14/15: interception, sharing-stage and "
+                "measuring-stage overheads (wall clock)")
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

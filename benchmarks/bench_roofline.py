@@ -1,0 +1,105 @@
+"""Roofline analysis (deliverable g): per (arch x shape) on the single-pod
+mesh, derive the three roofline terms from the compiled dry-run artifact:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s      (197 TF bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw           (819 GB/s)
+    collective term = collective_bytes_per_device / ICI_bw    (~50 GB/s/link)
+
+``cost_analysis()`` and the parsed HLO are PER-DEVICE programs, so the
+"/(chips x ...)" division in the assignment's formulas is already applied.
+Also reports MODEL_FLOPS (6*N*D train / 2*N*D inference, N_active for MoE)
+and the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs x chips), which
+catches remat/capacity/dispatch waste.
+
+Reads dryrun_results.json produced by ``repro.launch.dryrun --all --out``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import jax
+
+from benchmarks.common import Csv
+from repro.config import MOE, SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = os.environ.get("DRYRUN_RESULTS",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "dryrun_results.json"))
+
+
+def param_counts(cfg):
+    """(total_params, active_params) from the SDS tree (no allocation)."""
+    from repro.models import api
+    tree = api.build_params(cfg, key=None)
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        n = math.prod(leaf.shape)
+        total += n
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("w1", "w2", "w3"):
+            routed += n
+    if cfg.family == MOE and cfg.num_experts:
+        active = total - routed + routed * cfg.top_k / cfg.num_experts
+    else:
+        active = total
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    _, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch          # ONE token per sequence
+    return 2.0 * active * tokens
+
+
+def roofline_terms(rec):
+    """Prefer trip-count-corrected totals (see repro.launch.hlo_cost);
+    fall back to raw cost_analysis numbers for old records."""
+    flops = rec.get("flops_corrected") or rec["flops"]
+    nbytes = rec.get("bytes_corrected") or rec["bytes_accessed"]
+    colls = rec.get("collective_bytes_corrected") or rec["collective_bytes"]
+    comp = flops / PEAK_FLOPS_BF16
+    mem = nbytes / HBM_BW
+    coll = sum(colls.values()) / ICI_BW
+    dom = max((comp, "compute"), (mem, "memory"), (coll, "collective"))
+    return comp, mem, coll, dom[1]
+
+
+def main(csvout=None):
+    csvout = csvout or Csv(("arch_x_shape", "terms_ms_c/m/coll",
+                            "dominant|useful_ratio|fits_hbm"))
+    if not os.path.exists(RESULTS):
+        csvout.add("missing", 0, f"run dryrun --all --out {RESULTS} first")
+        csvout.emit("Roofline (no dry-run results found)")
+        return csvout
+    with open(RESULTS) as f:
+        recs = json.load(f)
+    recs = [r for r in recs if r["mesh"] == "16x16"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        comp, mem, coll, dom = roofline_terms(r)
+        mf = model_flops(cfg, shape)
+        flops = r.get("flops_corrected") or r["flops"]
+        useful = mf / max(flops * r["devices"], 1.0)
+        peak = r["mem"]["peak_bytes"] / 2 ** 30
+        csvout.add(
+            f"{r['arch']} x {r['shape']}",
+            f"{comp*1e3:.2f}/{mem*1e3:.2f}/{coll*1e3:.2f}",
+            f"{dom}|{useful:.2f}|{'Y' if peak <= 16 else f'N({peak:.0f}G)'}")
+    csvout.emit("Roofline terms per (arch x shape), single-pod 16x16 "
+                "(per-chip seconds basis)")
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Scheduler-path microbenchmarks: the paper's <5% overhead budget requires
+each scheduling decision to cost << one kernel launch (0.1-2 ms).
+
+Measures: KernelID construction, BestPrioFit over loaded queues, a full
+FIKIT fill decision, and profiler statistics reduction.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.core.fikit import best_prio_fit, fikit_procedure
+from repro.core.kernel_id import KernelID, kernel_id_for
+from repro.core.profiler import ProfiledData, Profiler, TaskProfile
+from repro.core.queues import PriorityQueues
+from repro.core.task import KernelRequest, TaskKey
+
+
+def _timeit(fn, n=2000):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+def main(csvout=None):
+    csvout = csvout or Csv()
+    x = np.zeros((8, 128, 256), np.float32)
+    csvout.add("kernel_id_for(3d aval)",
+               round(_timeit(lambda: kernel_id_for("seg", [x, x])), 2),
+               "per dispatch (sharing stage)")
+
+    # queues with 64 waiting requests across priorities
+    pd = ProfiledData()
+    qs = PriorityQueues()
+    for i in range(64):
+        key = TaskKey(f"t{i}")
+        kid = KernelID(f"k{i}")
+        prof = TaskProfile(key=key, runs=1)
+        prof.SK[kid] = 0.001 * (1 + i % 7)
+        pd.load(prof)
+        qs.push(KernelRequest(task_key=key, kernel_id=kid, priority=i % 10))
+
+    def bpf():
+        r, d = best_prio_fit(qs, 0.0000001, pd)   # never fits: no dequeue
+        assert r is None
+    csvout.add("best_prio_fit(64 waiting, scan all)",
+               round(_timeit(bpf), 2), "per gap-fill decision")
+
+    def fill():
+        fikit_procedure(qs, TaskKey("t0"), KernelID("k0"), 0.0000001, pd,
+                        launch=lambda r: None)
+    csvout.add("fikit_procedure(no fit)", round(_timeit(fill), 2), "")
+
+    prof = Profiler(TaskKey("svc"))
+    kid = KernelID("k")
+    for _ in range(100):
+        prof.start_run()
+        for _ in range(50):
+            prof.record(kid, 0.001)
+            prof.record_gap(0.001)
+        prof.end_run()
+    csvout.add("profiler.statistics(100 runs x 50 kernels)",
+               round(_timeit(lambda: prof.statistics(), n=50), 2),
+               "offline, once per service")
+    csvout.emit("Scheduler-path microbenchmarks (decision cost must be "
+                "<< 0.1-2ms kernel launch)")
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Regenerate the §Roofline table in EXPERIMENTS.md from
+dryrun_results.json (single-pod baseline + multipod presence column)."""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+from benchmarks.bench_roofline import model_flops, roofline_terms
+from repro.config import SHAPES, get_config
+
+MARK_A = "## §Roofline — per (arch × shape), single-pod 16×16 (deliverable g)"
+MARK_B = "## §Perf"
+
+
+def table() -> str:
+    with open("dryrun_results.json") as f:
+        recs = json.load(f)
+    single = {(r["arch"], r["shape"]): r for r in recs
+              if r["mesh"] == "16x16"}
+    multi = {(r["arch"], r["shape"]) for r in recs if r["mesh"] == "2x16x16"}
+    rows = ["| arch × shape | compute ms | memory ms | collective ms | "
+            "dominant | useful | fits 16G | 512-chip |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(single):
+        r = single[key]
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        comp, mem, coll, dom = roofline_terms(r)
+        flops = r.get("flops_corrected") or r["flops"]
+        useful = model_flops(cfg, shape) / max(flops * r["devices"], 1.0)
+        peak = r["mem"]["peak_bytes"] / 2 ** 30
+        fits = "✓" if peak <= 16 else f"✗ {peak:.0f}G"
+        mp = "✓" if key in multi else "—"
+        rows.append(
+            f"| {r['arch']} × {r['shape']} | {comp*1e3:.1f} | {mem*1e3:.0f} "
+            f"| {coll*1e3:.0f} | {dom} | {useful:.2f} | {fits} | {mp} |")
+    notes = """
+Terms are per-chip seconds ×1e3 from the trip-count-corrected compiled
+artifact (`repro.launch.hlo_cost`): compute = dot-FLOPs / 197 TF; memory =
+top-level-op IO bytes / 819 GB/s; collective = collective traffic /
+50 GB/s. ``useful`` = MODEL_FLOPS (6·N·D train, 2·N·D prefill, 2·N_active·B
+decode) / (corrected FLOPs × 256 chips) — catches remat/capacity/dispatch
+waste. Outliers >1 (seamless train, recurrentgemma) are architectures whose
+useful work is not dot-shaped (encoder counted at decoder rate; elementwise
+RG-LRU recurrence) — noted, not errors. The memory term dominating most
+training rows reflects the fp32 intermediates this CPU-lowered artifact
+keeps; the per-combo one-liner "what would move the dominant term down" is
+the §Perf backlog list below.
+
+Per-combo "what would move the dominant term down":
+- train rows (memory-dominated): keep residuals/softmax in bf16
+  (≈2× bytes), larger microbatches once HBM allows, fused attention kernel
+  (flash_attention Pallas path) instead of the jnp reference path.
+- deepseek/llama4 train+prefill (✗ fits): H1 levers (bf16 moments,
+  ZeRO-over-pod) + capacity-factor 1.0 dispatch.
+- decode rows (collective-dominated before H2): fixed by
+  `DECODE_PREFER_SEQ_SHARD` (see §Perf H2) — baseline rows kept here.
+- recurrentgemma rows (collective): H3 gate-gather (see §Perf H3).
+- long_500k rows: already sub-ms; bound by per-step latency floors, not
+  throughput terms.
+"""
+    return "\n".join(rows) + "\n" + notes
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        txt = f.read()
+    a = txt.index(MARK_A)
+    b = txt.index(MARK_B)
+    new = txt[:a] + MARK_A + "\n\n" + table() + "\n" + txt[b:]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(new)
+    print("EXPERIMENTS.md §Roofline regenerated")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

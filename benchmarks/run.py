@@ -1,0 +1,54 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip-wallclock]
+
+Prints ``name,value,derived`` CSV blocks per benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("scheduler_micro", "benchmarks.bench_scheduler_micro"),
+    ("sharing_jct", "benchmarks.bench_sharing_jct"),          # Fig 16/17
+    ("vs_exclusive", "benchmarks.bench_vs_exclusive"),        # Fig 18
+    ("preemption", "benchmarks.bench_preemption"),            # Fig 19/20
+    ("stability", "benchmarks.bench_stability"),              # Fig 21/T3
+    ("roofline", "benchmarks.bench_roofline"),                # deliverable g
+    ("overheads", "benchmarks.bench_overheads"),              # Fig 13/14/15
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-wallclock", action="store_true",
+                    help="skip the slow real-execution overhead benchmarks")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+    failures = []
+    for name, module in BENCHES:
+        if args.only and args.only != name:
+            continue
+        if args.skip_wallclock and name == "overheads":
+            continue
+        print(f"=== {name} ===")
+        t = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"BENCH FAIL {name}: {e}")
+        print(f"({name}: {time.time()-t:.1f}s)\n")
+    print(f"total: {time.time()-t0:.1f}s")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

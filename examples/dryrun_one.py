@@ -1,0 +1,12 @@
+"""Lower + compile ONE (arch x shape) on the production mesh and print its
+memory/cost/roofline numbers — the per-combo view of deliverable (e)/(g).
+
+    PYTHONPATH=src python examples/dryrun_one.py --arch mamba2-2.7b \
+        --shape decode_32k [--multi-pod]
+"""
+import sys
+
+from repro.launch import dryrun
+
+if __name__ == "__main__":
+    sys.exit(dryrun.main())

@@ -1,0 +1,44 @@
+"""Quickstart: the FIKIT scheduling idea in 60 lines.
+
+Two services share one device: a high-priority interactive service with
+inter-kernel gaps, and a low-priority batch service. We profile both
+(measurement phase), then compare default sharing vs FIKIT scheduling.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+# High-priority service A: 20 kernels of 2 ms, 5 ms host gap after each
+# (tokenize/sample) — a low-GPU-saturation interactive inference.
+A = TaskSpec(TaskKey("svcA"), priority=0,
+             kernels=[TraceKernel(KernelID("A/layer"), 0.002, 0.005)] * 20)
+
+# Low-priority service B: 60 kernels of 3 ms, almost no gaps, async client
+# with 16 launches in flight — a device-bound batch job.
+B = TaskSpec(TaskKey("svcB"), priority=5,
+             kernels=[TraceKernel(KernelID("B/layer"), 0.003, 0.0002)] * 60,
+             max_inflight=16)
+
+# ---- measurement phase (paper Fig 3/6): T solo runs -> SK/SG statistics
+profiled = profile_tasks([A, B], T=20, jitter=0.05)
+profA = profiled.get(A.key)
+print("profiled SK[A/layer] = %.3f ms, SG[A/layer] = %.3f ms"
+      % (1e3 * list(profA.SK.values())[0], 1e3 * list(profA.SG.values())[0]))
+
+# ---- sharing phase: run both concurrently under each scheduling mode
+print(f"\nsolo JCTs: A={A.solo_jct*1e3:.1f} ms  B={B.solo_jct*1e3:.1f} ms\n")
+print(f"{'mode':<10} {'JCT_A':>9} {'JCT_B':>9} {'fills':>6} {'util':>6}")
+for mode in (Mode.EXCLUSIVE, Mode.SHARING, Mode.FIKIT):
+    rep = SimScheduler([A, B], mode, profiled, jitter=0.05, seed=1).run()
+    print(f"{mode.value:<10} {rep.jct(0)*1e3:8.1f}m {rep.jct(1)*1e3:8.1f}m "
+          f"{rep.fills:6d} {rep.utilization():6.2f}")
+
+print("""
+Reading the table:
+- SHARING inflates A's JCT (B's async launches flood the FIFO device queue).
+- EXCLUSIVE protects A but starves B.
+- FIKIT keeps A at ~solo JCT *and* advances B inside A's gaps
+  (fills > 0, highest device utilization) — the paper's headline result.
+""")

@@ -1,0 +1,16 @@
+"""End-to-end serving driver: two REAL reduced-scale models (qwen3 + mamba2)
+share the device through the wall-clock FIKIT engine — real jitted JAX
+segments, real threads, real measured JCTs.
+
+Lifecycle per the paper: onboard (measurement phase, exclusive, per-kernel
+timing) -> concurrent sharing phase under FIKIT vs default sharing.
+
+    PYTHONPATH=src python examples/serve_priority.py
+"""
+from repro.launch.serve import serve_pair
+
+for mode in ("sharing", "fikit"):
+    print(f"--- mode={mode} ---")
+    out = serve_pair("qwen3-4b", "mamba2-2.7b", mode=mode, requests=6,
+                     measure_runs=4)
+    print()

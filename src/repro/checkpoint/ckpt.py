@@ -1,0 +1,65 @@
+"""Checkpointing: pytree -> msgpack (+ atomic rename), with dtype/shape
+round-trip including bfloat16. No external deps beyond msgpack + numpy.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    a = np.asarray(jax.device_get(x))
+    if a.dtype == jnp.bfloat16:
+        return {"d": "bfloat16", "s": list(a.shape),
+                "b": a.view(np.uint16).tobytes()}
+    return {"d": a.dtype.name, "s": list(a.shape), "b": a.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    if d["d"] == "bfloat16":
+        a = np.frombuffer(d["b"], np.uint16).reshape(d["s"])
+        return a.view(jnp.bfloat16)
+    return np.frombuffer(d["b"], np.dtype(d["d"])).reshape(d["s"])
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [_pack_leaf(l) for l in leaves],
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(leaves):
+        raise ValueError(f"leaf count mismatch: ckpt {len(stored)} "
+                         f"vs target {len(leaves)}")
+    out = []
+    for tgt, d in zip(leaves, stored):
+        arr = _unpack_leaf(d)
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"shape mismatch {arr.shape} vs {tgt.shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), payload["step"]

@@ -1,0 +1,84 @@
+"""Algorithm 1 (FIKIT Procedure) and Algorithm 2 (BestPrioFit) — verbatim
+ports of the paper's pseudocode (Figs 9 and 10).
+
+Semantics preserved exactly:
+- BestPrioFit scans priorities 0..9; at the FIRST priority level containing
+  any fitting kernel it selects the kernel with the LONGEST predicted
+  duration that still fits the remaining idle time
+  (``bestKernelTime < predictedKernelTime < idleTime``), dequeues it and
+  returns it. Lower priority levels are not examined once a fit is found.
+- FIKIT looks up the predicted gap from profiled SG when idleTime == -1,
+  skips gaps <= EPSILON (paper: 0.1 ms — a kernel launch costs 0.1-2 ms),
+  then repeatedly calls BestPrioFit, launching every selected kernel and
+  decrementing the remaining idle time, until nothing fits.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.profiler import ProfiledData
+from repro.core.queues import PriorityQueues
+from repro.core.task import KernelRequest, TaskKey
+from repro.core.kernel_id import KernelID
+
+EPSILON = 1.0e-4  # 0.1 ms, paper §3.2 line 6-8 commentary
+
+
+def best_prio_fit(queues: PriorityQueues, idle_time: float,
+                  profiled: ProfiledData,
+                  ) -> Tuple[Optional[KernelRequest], float]:
+    """Algorithm 2: Sharing Stage Idling Gap Filling Policy."""
+    best_kernel_time = -1.0
+    best_kernel_req: Optional[KernelRequest] = None
+    best_priority = -1
+    with queues.lock():
+        for priority in range(queues.levels):          # highest -> lowest
+            for kernel_req in queues[priority]:        # every request here
+                task_key = kernel_req.task_key
+                kernel_id = kernel_req.kernel_id
+                predicted = profiled.predict_duration(task_key, kernel_id)
+                if best_kernel_time < predicted < idle_time:
+                    best_kernel_time = predicted
+                    best_kernel_req = kernel_req
+                    best_priority = priority
+            if best_kernel_time > 0:
+                break      # longest fit found at this priority level
+        if best_kernel_req is not None:
+            queues[best_priority].remove(best_kernel_req)
+    return best_kernel_req, best_kernel_time
+
+
+def fikit_procedure(queues: PriorityQueues, task_key: TaskKey,
+                    kernel_id: KernelID, idle_time: float,
+                    profiled: ProfiledData,
+                    launch: Callable[[KernelRequest], None],
+                    epsilon: float = EPSILON,
+                    remaining_gap: Optional[Callable[[], float]] = None,
+                    ) -> List[KernelRequest]:
+    """Algorithm 1: FIKIT Procedure.
+
+    ``launch`` sends the selected kernel request to the GPU device queue.
+    ``remaining_gap`` is the real-time feedback hook (Fig 12): when given,
+    it returns the currently-known remaining idle time (0 once the next
+    high-priority kernel has actually arrived); the fill loop re-reads it
+    before each selection so prediction error does not propagate.
+
+    Returns the list of launched filler requests.
+    """
+    launched: List[KernelRequest] = []
+    if idle_time == -1:
+        idle_time = profiled.predict_gap(task_key, kernel_id)
+    if idle_time <= epsilon:                      # skip small gaps
+        return launched
+    while idle_time > 0.0:
+        if remaining_gap is not None:
+            idle_time = min(idle_time, remaining_gap())
+            if idle_time <= 0.0:
+                break                             # early stop (feedback)
+        fill_req, fill_time = best_prio_fit(queues, idle_time, profiled)
+        if fill_time == -1:
+            break
+        launch(fill_req)
+        launched.append(fill_req)
+        idle_time -= fill_time
+    return launched

@@ -1,0 +1,51 @@
+"""Kernel identification (paper §3.2, Fig 4).
+
+Paper: ``kernel ID = (function name, blockDim, gridDim)`` recovered via
+CUDA hooks + a ``-rdynamic`` recompiled framework. The ID deliberately does
+NOT include kernel inputs (they are ``void*`` at the CUDA runtime level), so
+kernels with the same function and parallelization but different input
+scales share an ID — mitigated by averaging (SK) + runtime feedback.
+
+TPU/JAX adaptation: the dispatch unit is a jit-compiled program segment.
+The natural analog of (name, blockDim, gridDim) is
+(segment name, input shapes/dtypes, mesh fingerprint) — exactly the key JAX
+uses for compiled-executable lookup, and, like the paper's ID, it is
+available at dispatch time with zero measurement cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True, order=True)
+class KernelID:
+    name: str
+    grid: Tuple = ()          # paper: gridDim  | here: output aval fingerprint
+    block: Tuple = ()         # paper: blockDim | here: input aval fingerprint
+
+    def __str__(self) -> str:
+        g = "x".join(map(str, self.grid)) or "-"
+        b = "x".join(map(str, self.block)) or "-"
+        return f"{self.name}<<<{g},{b}>>>"
+
+    def encode(self) -> str:
+        return f"{self.name}|{self.grid}|{self.block}"
+
+
+def _aval_fp(x) -> Tuple:
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return tuple(x.shape) + (np.dtype(x.dtype).name,)
+    return (type(x).__name__,)
+
+
+def kernel_id_for(name: str, inputs=(), outputs=(), mesh_fp: str = "") \
+        -> KernelID:
+    """Construct a KernelID from a segment name and its avals."""
+    block = tuple(f for x in inputs for f in _aval_fp(x))
+    grid = tuple(f for x in outputs for f in _aval_fp(x))
+    if mesh_fp:
+        grid = grid + (mesh_fp,)
+    return KernelID(name=name, grid=grid, block=block)

@@ -1,0 +1,57 @@
+"""Persistence for profiled data: TaskKey -> (SK, SG) as JSON.
+
+The paper loads profiling output into the scheduler's memory at startup;
+this store is the on-disk format between the measurement and sharing phases.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from repro.core.kernel_id import KernelID
+from repro.core.profiler import ProfiledData, TaskProfile
+from repro.core.task import TaskKey
+
+
+def _kid_to_json(kid: KernelID) -> list:
+    return [kid.name, list(kid.grid), list(kid.block)]
+
+
+def _kid_from_json(j) -> KernelID:
+    return KernelID(j[0], tuple(_detuple(x) for x in j[1]),
+                    tuple(_detuple(x) for x in j[2]))
+
+
+def _detuple(x):
+    return tuple(x) if isinstance(x, list) else x
+
+
+def save_profiles(path: str, data: ProfiledData) -> None:
+    out = []
+    for key, prof in data._by_key.items():
+        out.append({
+            "process": key.process,
+            "args": list(key.args),
+            "runs": prof.runs,
+            "SK": [[_kid_to_json(k), v] for k, v in prof.SK.items()],
+            "SG": [[_kid_to_json(k), v] for k, v in prof.SG.items()],
+        })
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f)
+
+
+def load_profiles(path: str) -> ProfiledData:
+    data = ProfiledData()
+    if not os.path.exists(path):
+        return data
+    with open(path) as f:
+        raw = json.load(f)
+    for entry in raw:
+        key = TaskKey(entry["process"], tuple(entry["args"]))
+        prof = TaskProfile(key=key, runs=entry["runs"])
+        prof.SK = {_kid_from_json(k): v for k, v in entry["SK"]}
+        prof.SG = {_kid_from_json(k): v for k, v in entry["SG"]}
+        data.load(prof)
+    return data

@@ -1,0 +1,126 @@
+"""Measurement phase (paper §3.2, Fig 6): per-kernel execution time and
+inter-kernel idle (gap) collection over T runs, reduced to the SK / SG
+statistics with Kronecker-delta means:
+
+    SK_j = mean of K_{ID_{t,i}} over all (t, i) with ID_{t,i} == j
+    SG_j = mean of G_{ID_{t,i}} over all (t, i < N_t) with ID_{t,i} == j
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.kernel_id import KernelID
+from repro.core.task import TaskKey
+
+
+@dataclass
+class TaskProfile:
+    """Profiled statistics for one TaskKey (the paper's
+    ``TaskKey = (SK, SG)`` output)."""
+    key: TaskKey
+    SK: Dict[KernelID, float] = field(default_factory=dict)
+    SG: Dict[KernelID, float] = field(default_factory=dict)
+    runs: int = 0
+
+    @property
+    def unique_ids(self):
+        return set(self.SK)
+
+    def predict_duration(self, kid: KernelID) -> float:
+        return self.SK.get(kid, -1.0)
+
+    def predict_gap(self, kid: KernelID) -> float:
+        return self.SG.get(kid, 0.0)
+
+
+class Profiler:
+    """Collects per-run kernel records and emits SK/SG statistics.
+
+    Usage per measured run::
+
+        prof.start_run()
+        prof.record(kid, duration)          # kernel executed
+        prof.record_gap(kid, gap)           # idle observed after kid
+        prof.end_run()
+        ...
+        profile = prof.statistics()
+    """
+
+    def __init__(self, key: TaskKey):
+        self.key = key
+        self._runs: List[List[Tuple[KernelID, float, Optional[float]]]] = []
+        self._cur: Optional[List] = None
+
+    # ------------------------------------------------------------- recording
+    def start_run(self) -> None:
+        if self._cur is not None:
+            raise RuntimeError("previous run not ended")
+        self._cur = []
+
+    def record(self, kid: KernelID, duration: float) -> None:
+        if self._cur is None:
+            raise RuntimeError("start_run() first")
+        self._cur.append([kid, float(duration), None])
+
+    def record_gap(self, gap: float) -> None:
+        """Gap after the most recently recorded kernel."""
+        if self._cur is None or not self._cur:
+            raise RuntimeError("no kernel to attach gap to")
+        self._cur[-1][2] = float(gap)
+
+    def end_run(self) -> None:
+        if self._cur is None:
+            raise RuntimeError("start_run() first")
+        # last kernel of a run has no following gap (paper: N_t - 1 gaps)
+        if self._cur:
+            self._cur[-1][2] = None
+        self._runs.append(self._cur)
+        self._cur = None
+
+    @property
+    def num_runs(self) -> int:
+        return len(self._runs)
+
+    # ------------------------------------------------------------ statistics
+    def statistics(self) -> TaskProfile:
+        ksum: Dict[KernelID, float] = {}
+        kcnt: Dict[KernelID, int] = {}
+        gsum: Dict[KernelID, float] = {}
+        gcnt: Dict[KernelID, int] = {}
+        for run in self._runs:
+            for kid, dur, gap in run:
+                ksum[kid] = ksum.get(kid, 0.0) + dur
+                kcnt[kid] = kcnt.get(kid, 0) + 1
+                if gap is not None:
+                    gsum[kid] = gsum.get(kid, 0.0) + gap
+                    gcnt[kid] = gcnt.get(kid, 0) + 1
+        prof = TaskProfile(key=self.key, runs=len(self._runs))
+        prof.SK = {k: ksum[k] / kcnt[k] for k in ksum}
+        prof.SG = {k: gsum[k] / gcnt[k] for k in gsum}
+        return prof
+
+
+class ProfiledData:
+    """The scheduler's global loaded profile (Algorithm 1 ``ProfiledData``):
+    TaskKey -> TaskProfile."""
+
+    def __init__(self):
+        self._by_key: Dict[TaskKey, TaskProfile] = {}
+
+    def load(self, profile: TaskProfile) -> None:
+        self._by_key[profile.key] = profile
+
+    def get(self, key: TaskKey) -> Optional[TaskProfile]:
+        return self._by_key.get(key)
+
+    def __contains__(self, key: TaskKey) -> bool:
+        return key in self._by_key
+
+    def predict_duration(self, key: TaskKey, kid: KernelID) -> float:
+        p = self._by_key.get(key)
+        return p.predict_duration(kid) if p else -1.0
+
+    def predict_gap(self, key: TaskKey, kid: KernelID) -> float:
+        p = self._by_key.get(key)
+        return p.predict_gap(kid) if p else 0.0

@@ -1,0 +1,61 @@
+"""Priority queues Q0..Q9 (paper Fig 7): the scheduler scans queues from
+highest (Q0) to lowest (Q9); within a queue, requests keep FIFO order."""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Iterator, List, Optional
+
+from repro.core.task import NUM_PRIORITIES, KernelRequest
+
+
+class PriorityQueues:
+    def __init__(self, levels: int = NUM_PRIORITIES):
+        self.levels = levels
+        self._qs: List[deque] = [deque() for _ in range(levels)]
+        self._lock = threading.RLock()
+
+    def push(self, req: KernelRequest) -> None:
+        with self._lock:
+            self._qs[req.priority].append(req)
+
+    def __getitem__(self, priority: int) -> deque:
+        return self._qs[priority]
+
+    def remove(self, req: KernelRequest) -> None:
+        with self._lock:
+            self._qs[req.priority].remove(req)
+
+    def pop_highest(self) -> Optional[KernelRequest]:
+        """FIFO pop from the highest-priority non-empty queue."""
+        with self._lock:
+            for q in self._qs:
+                if q:
+                    return q.popleft()
+        return None
+
+    def peek_highest(self) -> Optional[KernelRequest]:
+        with self._lock:
+            for q in self._qs:
+                if q:
+                    return q[0]
+        return None
+
+    def highest_nonempty(self) -> Optional[int]:
+        with self._lock:
+            for p, q in enumerate(self._qs):
+                if q:
+                    return p
+        return None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._qs)
+
+    def __iter__(self) -> Iterator[KernelRequest]:
+        with self._lock:
+            for q in self._qs:
+                yield from list(q)
+
+    def lock(self):
+        return self._lock

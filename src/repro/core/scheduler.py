@@ -1,0 +1,361 @@
+"""FIKIT scheduler over a serial device — discrete-event simulator.
+
+Models the paper's system (Figs 7, 8, 11, 12):
+
+- Each *client* (one per task) issues kernel launches on its own host
+  timeline. A synchronous client (``max_inflight=1``) issues kernel i+1
+  only after observing kernel i's completion plus a host gap — this creates
+  the inter-kernel device idle ("gap") FIKIT scavenges. An async client
+  (``max_inflight=m>1``) issues launch i+1 a host-gap after launch i with
+  up to m kernels in flight — the CUDA-stream behavior that lets a
+  device-bound low-priority task flood the FIFO device queue and inflate a
+  high-priority co-tenant's JCT in default sharing mode (Fig 2 "Sharing 1").
+- The *device* executes launched kernels serially in launch (FIFO) order.
+  Kernels are non-preemptible.
+- Modes:
+    EXCLUSIVE — tasks serialized in arrival order (paper "A,B Exclusive").
+    SHARING   — every issue launches immediately; kernels from different
+                tasks interleave FIFO (paper "default GPU sharing").
+    FIKIT     — priority queues + gap filling + feedback: the highest-
+                priority active task ("holder") launches directly; lower-
+                priority issues are queued (Q0-Q9); on each holder kernel
+                completion the predicted gap SG[kid] is filled via
+                BestPrioFit; the holder's next actual issue closes the gap
+                early (real-time feedback, Fig 12). At most
+                ``pipeline_depth`` fillers sit in the device queue at once —
+                fillers already queued when the gap closes early are the
+                paper's "overhead 2".
+
+Determinism: the event heap is ordered by (time, seq); ties resolve by
+insertion order, so simulations are exactly reproducible.
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+import random as _random
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.fikit import EPSILON, best_prio_fit
+from repro.core.profiler import ProfiledData, Profiler
+from repro.core.queues import PriorityQueues
+from repro.core.task import KernelRequest, TaskSpec
+
+
+class Mode(enum.Enum):
+    EXCLUSIVE = "exclusive"
+    SHARING = "sharing"
+    FIKIT = "fikit"
+
+
+@dataclass
+class KernelExec:
+    """One executed kernel interval on the device timeline."""
+    task: int
+    seq: int
+    start: float
+    end: float
+    filler: bool = False
+
+
+@dataclass
+class TaskResult:
+    arrival: float
+    start: float = -1.0
+    completion: float = -1.0
+
+    @property
+    def jct(self) -> float:
+        return self.completion - self.arrival
+
+
+@dataclass
+class SimReport:
+    results: List[TaskResult]
+    timeline: List[KernelExec]
+    fills: int = 0
+    overshoot_time: float = 0.0   # filler time past actual gap end ("ovh 2")
+
+    def jct(self, i: int) -> float:
+        return self.results[i].jct
+
+    @property
+    def makespan(self) -> float:
+        return max((r.completion for r in self.results), default=0.0)
+
+    def device_busy(self) -> float:
+        return sum(k.end - k.start for k in self.timeline)
+
+    def utilization(self) -> float:
+        ms = self.makespan
+        return self.device_busy() / ms if ms > 0 else 0.0
+
+
+class SimScheduler:
+    def __init__(self, tasks: List[TaskSpec], mode: Mode,
+                 profiled: Optional[ProfiledData] = None,
+                 pipeline_depth: int = 2, feedback: bool = True,
+                 epsilon: float = EPSILON,
+                 measurement_overhead: float = 0.0,
+                 jitter: float = 0.0, seed: int = 0):
+        """measurement_overhead: multiplier on kernel durations (the paper's
+        20-80% measuring-stage slowdown), used to simulate the measurement
+        phase. jitter: multiplicative gaussian noise on true durations/gaps
+        (run-to-run variance the SK/SG averages + feedback must absorb)."""
+        self.tasks = tasks
+        self.mode = mode
+        self.profiled = profiled or ProfiledData()
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.feedback = feedback
+        self.epsilon = epsilon
+        self.meas_ovh = measurement_overhead
+        self.jitter = jitter
+        self._rng = _random.Random(seed)
+
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.device_free = 0.0
+        self.timeline: List[KernelExec] = []
+        self.queues = PriorityQueues()
+        self.results = [TaskResult(arrival=t.arrival) for t in tasks]
+        n = len(tasks)
+        self._next_k = [0] * n          # next kernel index to issue
+        self._done_k = [0] * n          # kernels completed
+        self._issued = [0] * n
+        self._pending_issue: List[Optional[int]] = [None] * n
+        self._active: set = set()
+        self._excl_queue: List[int] = []
+        self._excl_running: Optional[int] = None
+        # FIKIT gap state
+        self._gap_open = False
+        self._gap_remaining = 0.0
+        self._gap_end_actual: Optional[float] = None
+        self._fills_in_flight = 0
+        self._fill_count = 0
+        self._overshoot = 0.0
+
+    # ----------------------------------------------------------------- noise
+    def _noisy(self, x: float) -> float:
+        if self.jitter <= 0:
+            return x
+        return x * max(0.05, 1.0 + self._rng.gauss(0.0, self.jitter))
+
+    # ------------------------------------------------------------- event API
+    def _push(self, time: float, kind: str, payload: tuple) -> None:
+        heapq.heappush(self._heap, (time, next(self._seq), kind, payload))
+
+    def run(self) -> SimReport:
+        for i, t in enumerate(self.tasks):
+            self._push(t.arrival, "arrival", (i,))
+        while self._heap:
+            self.now, _, kind, payload = heapq.heappop(self._heap)
+            getattr(self, "_on_" + kind)(*payload)
+        return SimReport(self.results, self.timeline, fills=self._fill_count,
+                         overshoot_time=self._overshoot)
+
+    # --------------------------------------------------------------- clients
+    def _on_arrival(self, ti: int) -> None:
+        self._active.add(ti)
+        if self.mode is Mode.EXCLUSIVE:
+            if self._excl_running is None:
+                self._excl_running = ti
+                self._on_issue(ti, 0)
+            else:
+                self._excl_queue.append(ti)
+        else:
+            self._on_issue(ti, 0)
+
+    def _on_issue(self, ti: int, ki: int) -> None:
+        """Host of task ti is ready to issue kernel ki."""
+        task = self.tasks[ti]
+        if ki >= len(task.kernels):
+            return
+        if self._issued[ti] - self._done_k[ti] >= task.max_inflight:
+            self._pending_issue[ti] = ki          # wait for a flight slot
+            return
+        self._issue(ti, ki)
+
+    def _issue(self, ti: int, ki: int) -> None:
+        task = self.tasks[ti]
+        self._issued[ti] += 1
+        self._next_k[ti] = ki + 1
+        req = KernelRequest(task_key=task.key,
+                            kernel_id=task.kernels[ki].kid,
+                            priority=task.priority, task_instance=ti,
+                            seq_index=ki, submit_time=self.now,
+                            payload=task.kernels[ki].duration)
+        # async clients schedule the next host-side issue now
+        if task.max_inflight > 1 and ki + 1 < len(task.kernels):
+            self._push(self.now + self._noisy(task.kernels[ki].gap_after),
+                       "issue", (ti, ki + 1))
+        self._route(req)
+
+    def _route(self, req: KernelRequest) -> None:
+        ti = req.task_instance
+        if self.mode is not Mode.FIKIT:
+            self._launch(req)
+            return
+        holder = self._holder()
+        task = self.tasks[ti]
+        if holder == ti:
+            if self._gap_open:                     # real-time feedback
+                self._gap_open = False
+                self._gap_remaining = 0.0
+            self._launch(req)
+        elif holder is not None and task.priority == self.tasks[holder].priority:
+            self._launch(req)                      # equal prio: FIFO (case C)
+        else:
+            self.queues.push(req)
+            self._try_fill()                       # Fig 7: scan on enqueue
+
+    # ---------------------------------------------------------------- device
+    def _launch(self, req: KernelRequest, filler: bool = False) -> None:
+        dur = self._noisy(float(req.payload)) * (1.0 + self.meas_ovh)
+        start = max(self.now, self.device_free)
+        end = start + dur
+        self.device_free = end
+        ti = req.task_instance
+        if self.results[ti].start < 0:
+            self.results[ti].start = start
+        self.timeline.append(KernelExec(ti, req.seq_index, start, end,
+                                        filler=filler))
+        self._push(end, "kernel_end", (ti, req.seq_index, filler))
+
+    def _on_kernel_end(self, ti: int, ki: int, filler: bool) -> None:
+        task = self.tasks[ti]
+        self._done_k[ti] = ki + 1
+        if filler:
+            self._fills_in_flight -= 1
+            if (self._gap_end_actual is not None
+                    and self.now > self._gap_end_actual):
+                self._overshoot += self.now - self._gap_end_actual
+        last = ki == len(task.kernels) - 1
+        if last:
+            self.results[ti].completion = self.now
+            self._active.discard(ti)
+            self._on_task_done(ti)
+        elif task.max_inflight == 1:
+            # synchronous client: host consumes result, then issues next
+            self._push(self.now + self._noisy(task.kernels[ki].gap_after),
+                       "issue", (ti, ki + 1))
+        elif self._pending_issue[ti] is not None:
+            nxt = self._pending_issue[ti]
+            self._pending_issue[ti] = None
+            self._issue(ti, nxt)                   # flight slot freed
+        if self.mode is Mode.FIKIT:
+            holder = self._holder()
+            if holder == ti and not last:
+                predicted = self.profiled.predict_gap(task.key,
+                                                      task.kernels[ki].kid)
+                if predicted > self.epsilon:       # skip small gaps
+                    self._gap_open = True
+                    self._gap_remaining = predicted
+                    self._gap_end_actual = (
+                        self.now + task.kernels[ki].gap_after
+                        if self.feedback else None)
+            self._try_fill()
+
+    def _on_task_done(self, ti: int) -> None:
+        if self.mode is Mode.EXCLUSIVE:
+            self._excl_running = None
+            if self._excl_queue:
+                nxt = self._excl_queue.pop(0)
+                self._excl_running = nxt
+                self._on_issue(nxt, 0)
+        elif self.mode is Mode.FIKIT:
+            self._gap_open = False
+            self._gap_remaining = 0.0
+            self._release_new_holder()
+
+    # ------------------------------------------------------------ FIKIT bits
+    def _holder(self) -> Optional[int]:
+        """Highest-priority active task (ties: earliest arrival, then id)."""
+        best = None
+        for ti in self._active:
+            if best is None:
+                best = ti
+                continue
+            a, b = self.tasks[ti], self.tasks[best]
+            if (a.priority, self.results[ti].arrival, ti) < \
+                    (b.priority, self.results[best].arrival, best):
+                best = ti
+        return best
+
+    def _release_new_holder(self) -> None:
+        holder = self._holder()
+        if holder is None:
+            req = self.queues.pop_highest()        # drain leftovers FIFO
+            while req is not None:
+                self._launch(req)
+                req = self.queues.pop_highest()
+            return
+        with self.queues.lock():
+            for req in list(self.queues):
+                if req.task_instance == holder or (
+                        self.tasks[req.task_instance].priority
+                        == self.tasks[holder].priority):
+                    self.queues.remove(req)
+                    self._launch(req)
+
+    def _try_fill(self) -> None:
+        """Fill an open gap (Algorithm 1, incremental with feedback and a
+        bounded device-queue lookahead)."""
+        if self.mode is not Mode.FIKIT or not self._gap_open:
+            return
+        while (self._fills_in_flight < self.pipeline_depth
+               and self._gap_remaining > 0.0):
+            req, fill_time = best_prio_fit(self.queues, self._gap_remaining,
+                                           self.profiled)
+            if fill_time == -1:
+                break
+            self._fills_in_flight += 1
+            self._fill_count += 1
+            self._gap_remaining -= fill_time
+            self._launch(req, filler=True)
+
+
+# ---------------------------------------------------------------------------
+# Measurement phase (paper Fig 3/6): run a task solo T times, record device
+# timeline, emit SK/SG statistics. Durations are what the device measured;
+# the JCT overhead of measuring (20-80%) applies to the run's wall time.
+# ---------------------------------------------------------------------------
+def measure_task(spec: TaskSpec, T: int = 10, jitter: float = 0.0,
+                 measurement_overhead: float = 0.5, seed: int = 0,
+                 ) -> Tuple["Profiler", List[float]]:
+    """Returns (profiler with T solo runs recorded, per-run measured JCTs)."""
+    prof = Profiler(spec.key)
+    jcts = []
+    for t in range(T):
+        solo = TaskSpec(spec.key, spec.priority, spec.kernels, arrival=0.0,
+                        max_inflight=spec.max_inflight)
+        sim = SimScheduler([solo], Mode.EXCLUSIVE, jitter=jitter,
+                           seed=seed * 10_007 + t,
+                           measurement_overhead=measurement_overhead)
+        rep = sim.run()
+        jcts.append(rep.jct(0))
+        prof.start_run()
+        tl = sorted(rep.timeline, key=lambda k: k.start)
+        for i, k in enumerate(tl):
+            kid = spec.kernels[k.seq].kid
+            # the device measured the kernel under measurement overhead;
+            # report the de-rated (true) duration like cudaEvent timing
+            prof.record(kid, (k.end - k.start) / (1.0 + measurement_overhead))
+            if i < len(tl) - 1:
+                prof.record_gap(max(0.0, tl[i + 1].start - k.end))
+        prof.end_run()
+    return prof, jcts
+
+
+def profile_tasks(specs: List[TaskSpec], T: int = 10, jitter: float = 0.0,
+                  measurement_overhead: float = 0.5, seed: int = 0,
+                  ) -> ProfiledData:
+    data = ProfiledData()
+    for i, spec in enumerate(specs):
+        prof, _ = measure_task(spec, T=T, jitter=jitter,
+                               measurement_overhead=measurement_overhead,
+                               seed=seed + i)
+        data.load(prof.statistics())
+    return data

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1.0e30
+
+
+def decode_attention_ref(q, k, v, kpos, pos, *, window=None, chunk=None,
+                         scale=None):
+    """q: [B, H, D]; k/v: [B, Kh, C, D]; kpos: [C]; pos scalar."""
+    B, H, D = q.shape
+    Kh, C = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = scale if scale is not None else D ** -0.5
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.asarray(pos, jnp.int32)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        valid &= pos - kpos < window
+    if chunk is not None:
+        valid &= (pos // chunk) == (kpos // chunk)
+    logits = jnp.where(valid[None, None, :], logits, NEG)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

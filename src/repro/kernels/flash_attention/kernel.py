@@ -1,0 +1,121 @@
+"""Flash attention Pallas TPU kernel: blockwise prefill attention with
+online softmax; causal / sliding-window / chunked (iRoPE) masks; GQA.
+
+Tiling: grid = (B, H, num_q_blocks, num_kv_blocks), kv innermost — TPU grid
+iterations run sequentially on a core, so the running max / denominator /
+accumulator live in VMEM scratch across kv steps. Block shapes are
+(block_q, head_dim) / (block_k, head_dim), 128-aligned for the MXU; the
+softmax statistics are carried at fp32 in (block_q, 128) scratch (values
+replicated across lanes).
+
+Positions are derived from program ids (prefill positions are always
+0..S-1), so masks cost no memory traffic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1.0e30
+LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  chunk: Optional[int], block_q: int, block_k: int,
+                  num_k: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                     # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale         # [bq, bk]
+
+    qpos = i * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    if chunk is not None:
+        mask &= (qpos // chunk) == (kpos // chunk)
+    logits = jnp.where(mask, logits, NEG)
+
+    m_prev = m_scr[:, :1]                                   # [bq, 1]
+    l_prev = l_scr[:, :1]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)         # [bq, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                         # rescale old
+    p = jnp.exp(logits - m_new)                             # [bq, bk]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(j == num_k - 1)
+    def _out():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=None, chunk=None,
+                           scale=None, block_q=128, block_k=128,
+                           interpret=False):
+    """q: [B, H, Sq, D]; k/v: [B, Kh, Sk, D] -> [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        chunk=chunk, block_q=block_q, block_k=block_k, num_k=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=_scratch(block_q, D),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(block_q: int, D: int):
+    from jax.experimental.pallas import tpu as pltpu
+    return [
+        pltpu.VMEM((block_q, LANES), jnp.float32),   # running max
+        pltpu.VMEM((block_q, LANES), jnp.float32),   # running denom
+        pltpu.VMEM((block_q, D), jnp.float32),       # output accumulator
+    ]

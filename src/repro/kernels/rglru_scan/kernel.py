@@ -1,0 +1,66 @@
+"""RG-LRU linear recurrence Pallas TPU kernel: h_t = a_t * h_{t-1} + b_t.
+
+The recurrence is diagonal (elementwise in the width dim), so the natural
+TPU decomposition is: grid = (batch tiles, width tiles, seq blocks) with the
+seq dimension innermost (sequential on-core) carrying the running state in
+VMEM scratch. Within a seq block the recurrence runs as an in-VMEM
+fori_loop over rows — every step is a fused multiply-add on a
+(block_b, block_w) vector tile, which is VPU-shaped work; the HBM traffic
+is exactly one read of a/b and one write of h (memory-bound by design,
+matching the roofline's memory term for recurrent layers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, block_s: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    def body(t, h):
+        a_t = a_ref[:, t, :].astype(jnp.float32)
+        b_t = b_ref[:, t, :].astype(jnp.float32)
+        h = a_t * h + b_t
+        o_ref[:, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, body, h_scr[...])
+    h_scr[...] = h
+
+
+def rglru_scan_kernel(a, b, h0, *, block_b=8, block_w=128, block_s=128,
+                      interpret=False):
+    """a/b: [B, S, W]; h0: [B, W]. Returns h: [B, S, W] (all prefixes)."""
+    B, S, W = a.shape
+    block_b = min(block_b, B)
+    block_w = min(block_w, W)
+    block_s = min(block_s, S)
+    assert B % block_b == 0 and W % block_w == 0 and S % block_s == 0
+    grid = (B // block_b, W // block_w, S // block_s)
+
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s, block_w),
+                         lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((block_b, block_s, block_w),
+                         lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((block_b, block_w), lambda i, j, s: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_s, block_w),
+                               lambda i, j, s: (i, s, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

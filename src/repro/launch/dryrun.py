@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is the actual dry-run driver.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and dump the roofline
+inputs (FLOPs, bytes, per-collective traffic) as JSON.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import sys        # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.config import SHAPES, get_config          # noqa: E402
+from repro.launch.hlo_cost import (                   # noqa: E402
+    bytes_accessed_corrected, collective_bytes_corrected,
+    dot_flops_corrected)
+from repro.configs import ARCH_IDS                   # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.launch.steps import make_step             # noqa: E402
+
+# (arch, shape) combos excluded from long_500k: pure full-attention archs
+# (quadratic decode state) — documented in DESIGN.md §Arch-applicability.
+LONG_SKIP = {
+    "stablelm-1.6b": "full attention, no sub-quadratic variant",
+    "granite-20b": "full attention, no sub-quadratic variant",
+    "qwen3-4b": "full attention, no sub-quadratic variant",
+    "deepseek-v2-236b": "full MLA attention, no sub-quadratic variant",
+    "seamless-m4t-medium": "enc-dec with full decoder attention",
+}
+
+
+def combos():
+    for arch in ARCH_IDS:
+        for sname in SHAPES:
+            if sname == "long_500k" and arch in LONG_SKIP:
+                continue
+            yield arch, sname
+
+
+# ---------------------------------------------------------------------------
+# Collective traffic: parse the HLO and sum operand bytes per collective op.
+# ---------------------------------------------------------------------------
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|u32|s8|u8|s64|u64|pred|s16|u16)"
+                       r"\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "s64": 8, "u64": 8, "pred": 1, "s16": 2,
+                "u16": 2}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum of OUTPUT shape bytes per collective kind (per-device program)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(3)
+        nbytes = _shape_bytes(m.group(2))
+        out[kind] = out.get(kind, 0) + nbytes
+    # ignore -done duplicates: the regex matches both start and done lines;
+    # conservatively halve pairs by matching only '-start' when present
+    starts = len(re.findall(r"-start\(", hlo_text))
+    return out, starts
+
+
+def run_one(arch: str, sname: str, multi_pod: bool = False,
+            verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[sname]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        jitted, args = make_step(cfg, mesh, shape)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll, _ = collective_bytes(hlo)
+    # trip-count-corrected totals (XLA cost analysis visits loop bodies
+    # only once; see repro.launch.hlo_cost)
+    coll_c = collective_bytes_corrected(hlo)
+    flops_c = dot_flops_corrected(hlo)
+    bytes_c = bytes_accessed_corrected(hlo)
+    rec = {
+        "arch": arch,
+        "shape": sname,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": mesh.size,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": coll,
+        "flops_corrected": flops_c,
+        "bytes_corrected": bytes_c,
+        "collective_bytes_corrected": coll_c,
+        "mem": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "output_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {sname} on {rec['mesh']}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: args={rec['mem']['argument_bytes']/2**30:.2f}GiB "
+              f"out={rec['mem']['output_bytes']/2**30:.2f}GiB "
+              f"temp={rec['mem']['temp_bytes']/2**30:.2f}GiB")
+        print(f"  cost_analysis: flops={rec['flops']:.3e} "
+              f"bytes={rec['bytes_accessed']:.3e}")
+        print(f"  corrected:     flops={flops_c:.3e} bytes={bytes_c:.3e}")
+        print(f"  collectives (corrected): "
+              f"{ {k: round(v/2**30, 2) for k, v in coll_c.items()} } GiB")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) on the single-pod mesh")
+    ap.add_argument("--all-multipod", action="store_true",
+                    help="run every (arch x shape) on the 2x16x16 mesh")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args(argv)
+
+    records = []
+    if args.all or args.all_multipod:
+        todo = [(a, s, args.all_multipod) for a, s in combos()]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        if args.shape == "long_500k" and args.arch in LONG_SKIP:
+            print(f"[dryrun] SKIP {args.arch} x long_500k: "
+                  f"{LONG_SKIP[args.arch]}")
+            return 0
+        todo = [(args.arch, args.shape, args.multi_pod)]
+
+    def save(recs):
+        if not args.out or not recs:
+            return
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        keyed = {(r["arch"], r["shape"], r["mesh"]): r for r in existing}
+        for r in recs:
+            keyed[(r["arch"], r["shape"], r["mesh"])] = r
+        with open(args.out, "w") as f:
+            json.dump(list(keyed.values()), f, indent=1)
+
+    failures = []
+    for arch, sname, mp in todo:
+        try:
+            rec = run_one(arch, sname, multi_pod=mp)
+            records.append(rec)
+            save([rec])         # incremental: survive interruption
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, sname, repr(e)))
+            print(f"[dryrun] FAIL {arch} x {sname}: {e}")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES")
+        return 1
+    print(f"[dryrun] OK ({len(records)} combos)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

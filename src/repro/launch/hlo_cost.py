@@ -1,0 +1,312 @@
+"""HLO cost extraction with loop trip-count correction.
+
+XLA's HloCostAnalysis (behind ``compiled.cost_analysis()``) visits each
+while-loop body ONCE, so anything inside a ``lax.scan`` (layers,
+microbatches, flash q-blocks) is undercounted by its trip count. The
+compiled HLO, however, carries ``known_trip_count`` backend configs. This
+module walks the computation graph, propagates multipliers through while
+bodies / fusions / calls, and produces trip-count-corrected totals for:
+
+- per-collective traffic bytes (exact, from op output shapes), and
+- dot FLOPs (2 * prod(output dims) * prod(contracting dims)).
+
+Used by the dry-run and the roofline analysis.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "s64": 8, "u64": 8, "pred": 1, "s16": 2,
+                "u16": 2, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str, with_headers: bool = False):
+    """computation name -> list of body lines (optionally also headers)."""
+    comps: Dict[str, List[str]] = {}
+    headers: Dict[str, str] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # computation headers sit at column 0: ``%name (params...) -> T {``
+        # (params may contain nested tuple types) or ``ENTRY %name (...)``
+        if (not line.startswith(" ") and line.rstrip().endswith("{")
+                and ") -> " in line
+                and (line.startswith("%") or line.startswith("ENTRY"))):
+            m = _COMP_NAME.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                headers[cur] = line
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+                    headers["__entry__"] = line
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    if with_headers:
+        return comps, headers
+    return comps
+
+
+_CALL_RE = re.compile(
+    r"(?:body=%?([\w.\-]+))|(?:calls=%?([\w.\-]+))|"
+    r"(?:to_apply=%?([\w.\-]+))|(?:condition=%?([\w.\-]+))")
+_TRIP_RE = re.compile(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)')
+
+
+def _line_children(line: str) -> List[Tuple[str, int]]:
+    """(child computation, multiplier) refs on this op line."""
+    out = []
+    is_while = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+while\(", line)
+    trip = 1
+    if is_while:
+        m = _TRIP_RE.search(line)
+        trip = int(m.group(1)) if m else 1
+    for m in _CALL_RE.finditer(line):
+        body, calls, to_apply, cond = m.groups()
+        if body:
+            out.append((body, trip))
+        if calls:
+            out.append((calls, 1))
+        if to_apply:
+            out.append((to_apply, 1))
+        if cond:
+            out.append((cond, 1))
+    return out
+
+
+def computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """Effective execution count per computation, from ENTRY down."""
+    entry = "__entry__"
+    mult: Dict[str, int] = defaultdict(int)
+    stack = [(entry, 1)]
+    # build static edges once
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        e: List[Tuple[str, int]] = []
+        for line in lines:
+            e.extend(_line_children(line))
+        edges[name] = e
+    seen_guard = 0
+    while stack:
+        name, m = stack.pop()
+        seen_guard += 1
+        if seen_guard > 200_000:  # cycles shouldn't exist; guard anyway
+            break
+        mult[name] += m
+        for child, k in edges.get(name, ()):
+            if child in comps:
+                stack.append((child, m * k))
+    return dict(mult)
+
+
+_TYPE = r"(\([^()]*\)|\S+)"   # tuple type (no nested parens) or one token
+_COLL_OP = re.compile(
+    r"=\s*" + _TYPE + r"\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+_DOT_OUT = re.compile(r"%?[\w.\-]+\s*=\s*" + _TYPE + r"\s+dot\(")
+_VARDEF = re.compile(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*" + _TYPE + r"\s")
+_CONTRACT = re.compile(r"(?:lhs_contracting_dims|rhs_contracting_dims)="
+                       r"{([\d,]*)}")
+_OPERANDS = re.compile(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+
+
+def collective_bytes_corrected(hlo: str) -> Dict[str, float]:
+    """Per-collective-kind traffic bytes, x loop trip counts (per device)."""
+    comps = split_computations(hlo)
+    mult = computation_multipliers(comps)
+    totals: Dict[str, float] = defaultdict(float)
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0 or name == "__entry__" and "__entry__" != name:
+            continue
+        if name == "__entry__":
+            continue  # alias of the real entry computation
+        for line in lines:
+            cm = _COLL_OP.search(line)
+            if not cm:
+                continue
+            result_ty, kind, phase = cm.groups()
+            if phase == "-done":
+                continue  # counted at -start
+            shapes = _shapes(result_ty)
+            if phase == "-start" and len(shapes) > 1:
+                # start result is a (operand, result, ...) tuple: count the
+                # result element only
+                dt, dims = shapes[1]
+                n = 1
+                for d in dims:
+                    n *= d
+                nbytes = n * _DTYPE_BYTES[dt]
+            else:
+                nbytes = _bytes_of(result_ty)
+            totals[kind] += nbytes * m
+    return dict(totals)
+
+
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([\w\[\],]+)")
+
+_SKIP_OPS = re.compile(
+    r"=\s*(?:\([^()]*\)|\S+)\s+"
+    r"(get-tuple-element|tuple|parameter|constant|bitcast|after-all|"
+    r"partition-id|replica-id|iota)\b")
+_OPNAME = re.compile(r"=\s*(?:\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_ARGS = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+
+
+def _control_computations(comps) -> Dict[str, int]:
+    """Computations whose ops execute at top level (entry, while bodies /
+    conds, call targets) with their multipliers — fusions and reducers are
+    charged at their call site, not walked."""
+    mult = computation_multipliers(comps)
+    control = {"__entry__"}
+    for name, lines in comps.items():
+        for line in lines:
+            if re.search(r"\s+(while|conditional)\(", line):
+                for m in _CALL_RE.finditer(line):
+                    body, _, _, cond = m.groups()
+                    if body:
+                        control.add(body)
+                    if cond:
+                        control.add(cond)
+    return {n: mult.get(n, 0) for n in control if n in comps}
+
+
+def bytes_accessed_corrected(hlo: str) -> float:
+    """Trip-count-corrected HBM traffic estimate (per device): sum of
+    output + operand bytes over top-level (post-fusion) ops, x loop trip
+    counts — the same op-IO model HloCostAnalysis uses, with loops
+    actually multiplied out."""
+    comps, headers = split_computations(hlo, with_headers=True)
+    control = _control_computations(comps)
+    total = 0.0
+    for name, m in control.items():
+        if m == 0 or name == "__entry__":
+            continue
+        lines = comps[name]
+        shapes_by_var: Dict[str, int] = {}
+        hdr = headers.get(name, "")
+        if "(" in hdr:
+            for pm in _PARAM_RE.finditer(hdr[hdr.index("(") + 1:]):
+                shapes_by_var[pm.group(1)] = _bytes_of(pm.group(2))
+        for line in lines:
+            vm = _VARDEF.match(line)
+            if vm:
+                shapes_by_var[vm.group(1)] = _bytes_of(vm.group(2))
+        for line in lines:
+            if _SKIP_OPS.search(line):
+                continue
+            vm = _VARDEF.match(line)
+            if not vm:
+                continue
+            out_bytes = _bytes_of(vm.group(2))
+            opnd_bytes = 0
+            am = _ARGS.search(line[line.index("=") + 1:]) \
+                if "=" in line else None
+            if am:
+                for ref in re.findall(r"%([\w.\-]+)", am.group(1)):
+                    opnd_bytes += shapes_by_var.get(ref, 0)
+            total += (out_bytes + opnd_bytes) * m
+    # add the entry computation itself (multiplier 1)
+    comps2 = comps["__entry__"]
+    shapes_by_var = {}
+    for line in comps2:
+        vm = _VARDEF.match(line)
+        if vm:
+            shapes_by_var[vm.group(1)] = _bytes_of(vm.group(2))
+    for line in comps2:
+        if _SKIP_OPS.search(line):
+            continue
+        vm = _VARDEF.match(line)
+        if not vm:
+            continue
+        out_bytes = _bytes_of(vm.group(2))
+        opnd_bytes = 0
+        am = _ARGS.search(line[line.index("=") + 1:]) if "=" in line else None
+        if am:
+            for ref in re.findall(r"%([\w.\-]+)", am.group(1)):
+                opnd_bytes += shapes_by_var.get(ref, 0)
+        total += out_bytes + opnd_bytes
+    return total
+
+
+def dot_flops_corrected(hlo: str) -> float:
+    """Trip-count-corrected dot FLOPs (per device program)."""
+    comps, headers = split_computations(hlo, with_headers=True)
+    mult = computation_multipliers(comps)
+    # symbol table of output shapes per computation
+    total = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0 or name == "__entry__":
+            continue
+        shapes_by_var: Dict[str, List[int]] = {}
+        hdr = headers.get(name, "")
+        if "(" in hdr:
+            params = hdr[hdr.index("(") + 1:]
+            for pm in _PARAM_RE.finditer(params):
+                sh = _shapes(pm.group(2))
+                if sh:
+                    shapes_by_var[pm.group(1)] = sh[0][1]
+        for line in lines:
+            vm = _VARDEF.match(line)
+            if vm:
+                sh = _shapes(vm.group(2))
+                if sh:
+                    shapes_by_var[vm.group(1)] = sh[0][1]
+        for line in lines:
+            if " dot(" not in line:
+                continue
+            om = _DOT_OUT.search(line)
+            ops = _OPERANDS.search(line)
+            cm = _CONTRACT.search(line)
+            if not (om and ops and cm):
+                continue
+            out_shapes = _shapes(om.group(1))
+            if not out_shapes:
+                continue
+            out_elems = 1
+            for d in out_shapes[0][1]:
+                out_elems *= d
+            lhs = shapes_by_var.get(ops.group(1), [])
+            cdims = [int(d) for d in cm.group(1).split(",") if d]
+            contract = 1
+            for ci in cdims:
+                if ci < len(lhs):
+                    contract *= lhs[ci]
+            total += 2.0 * out_elems * contract * m
+    return total

@@ -1,0 +1,246 @@
+"""Step builders: train_step / prefill_step / serve_step as jit-able
+functions with input specs (ShapeDtypeStructs) and shardings per
+(architecture x input shape x mesh).
+
+Used by the dry-run (lower+compile only) and by the real train/serve
+drivers at reduced scale.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ENCDEC, VLM, InputShape, ModelConfig
+from repro.models import api
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.sharding import specs as sh
+from repro.sharding.context import mesh_context
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — never allocate)
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, B: int, S: int) -> Any:
+    """Model-input stand-ins for a full sequence (train / prefill)."""
+    if cfg.family == ENCDEC:
+        return (_sds((B, cfg.encoder_frames, cfg.d_model), cfg.dtype),
+                _sds((B, S), jnp.int32))
+    if cfg.family == VLM:
+        st = max(S - cfg.num_patches, 1)
+        return (_sds((B, cfg.num_patches, cfg.d_model), cfg.dtype),
+                _sds((B, st), jnp.int32))
+    return _sds((B, S), jnp.int32)
+
+
+def batch_in_specs(cfg: ModelConfig, mesh, B: int):
+    if cfg.family in (ENCDEC, VLM):
+        return (sh.embeds_spec(mesh, B), sh.token_spec(mesh, B))
+    return sh.token_spec(mesh, B)
+
+
+def label_specs(cfg: ModelConfig, B: int, S: int):
+    # labels cover the full (possibly patch/frame-prefixed) logit stream;
+    # the train step truncates to the logits length.
+    return _sds((B, S), jnp.int32)
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return api.build_params(cfg, key=None)   # SDS tree
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+ACT_BUDGET_BYTES = 2 << 30   # residual-carry budget per device
+
+
+def default_grad_accum(cfg: ModelConfig, mesh, shape: InputShape) -> int:
+    """Microbatch count: smallest power-of-2 A such that the per-device
+    layer-boundary residuals (L x (B/shards/A) x S x D x 2B) fit the
+    activation budget, with (B/A) still divisible by the batch shards."""
+    B, S = shape.global_batch, shape.seq_len
+    nsh = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            nsh *= mesh.shape[a]
+    L = cfg.num_layers
+    A = 1
+    while True:
+        act = L * (B // nsh / A) * S * cfg.d_model * 2
+        if act <= ACT_BUDGET_BYTES or A * 2 > B // nsh:
+            return A
+        A *= 2
+
+
+def _split_micro(tree, A):
+    return jax.tree.map(
+        lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), tree)
+
+
+def make_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                    grad_accum: int = 0, moments_dtype=None,
+                    zero_pod: bool = False):
+    """moments_dtype / zero_pod are the H1 levers (EXPERIMENTS.md §Perf):
+    bf16 optimizer moments and ZeRO-style moment sharding across the pod
+    axis (pods are otherwise pure DP replicas of the optimizer state)."""
+    import jax.numpy as _jnp
+    B, S = shape.global_batch, shape.seq_len
+    A = grad_accum or default_grad_accum(cfg, mesh, shape)
+    params_sds = params_specs(cfg)
+    opt_sds = adamw_init(params_sds,
+                         moments_dtype=moments_dtype or _jnp.float32)
+    p_spec = sh.param_specs(params_sds, mesh)
+    o_spec = sh.opt_specs(opt_sds, p_spec)
+    if zero_pod and "pod" in mesh.axis_names:
+        o_spec = sh.opt_specs(opt_sds, p_spec, zero_axis="pod",
+                              params=params_sds, mesh=mesh)
+    batch_sds = batch_specs(cfg, B, S)
+    lbl_sds = label_specs(cfg, B, S)
+    b_spec = batch_in_specs(cfg, mesh, B)
+    l_spec = sh.token_spec(mesh, B)
+
+    def train_step(params, opt_state, batch, labels):
+        # mesh_context at trace time: model code (MoE shard_map, sharding
+        # constraints inside scan bodies) reads the mesh from context.
+        with mesh_context(mesh):
+            def loss(p, b, l):
+                logits, aux = api.forward(p, b, cfg)
+                L_ = logits.shape[1]
+                return api.loss_fn(logits, l[:, :L_], aux)
+
+            if A == 1:
+                lval, grads = jax.value_and_grad(loss)(params, batch, labels)
+            else:
+                mb = _split_micro(batch, A)
+                ml = _split_micro(labels, A)
+                mbax = sh.batch_axes(mesh)
+
+                def constrain_mb(x):
+                    from jax.sharding import NamedSharding
+                    spec = P(*((None, mbax) + (None,) * (x.ndim - 2)))
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, spec))
+
+                mb = jax.tree.map(constrain_mb, mb)
+                ml = jax.tree.map(constrain_mb, ml)
+
+                def micro(acc, xs):
+                    b, l = xs
+                    lv, g = jax.value_and_grad(loss)(params, b, l)
+                    acc = jax.tree.map(
+                        lambda a, gi: a + (gi / A).astype(a.dtype), acc, g)
+                    return acc, lv
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                  params)
+                grads, lvals = jax.lax.scan(micro, g0, (mb, ml))
+                lval = jnp.mean(lvals)
+            new_params, new_opt, metrics = adamw_update(grads, opt_state,
+                                                        params)
+            metrics["loss"] = lval
+            return new_params, new_opt, metrics
+
+    ns = partial(NamedSharding, mesh)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(jax.tree.map(ns, p_spec), jax.tree.map(ns, o_spec),
+                      jax.tree.map(ns, b_spec) if isinstance(b_spec, tuple)
+                      else ns(b_spec), ns(l_spec)),
+        out_shardings=(jax.tree.map(ns, p_spec), jax.tree.map(ns, o_spec),
+                       None),
+        donate_argnums=(0, 1),
+    )
+    args = (params_sds, opt_sds, batch_sds, lbl_sds)
+    return jitted, args
+
+
+# ---------------------------------------------------------------------------
+# prefill_step
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, mesh, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    params_sds = params_specs(cfg)
+    p_spec = sh.param_specs(params_sds, mesh)
+    batch_sds = batch_specs(cfg, B, S)
+    b_spec = batch_in_specs(cfg, mesh, B)
+    cache_sds = jax.eval_shape(
+        lambda: api.init_decode_caches(cfg, B, S))
+    c_spec = sh.cache_specs(cfg, cache_sds, mesh, B)
+
+    def prefill_step(params, batch):
+        with mesh_context(mesh):
+            logits, caches = api.prefill(params, batch, cfg)
+            return logits, caches
+
+    ns = partial(NamedSharding, mesh)
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(jax.tree.map(ns, p_spec),
+                      jax.tree.map(ns, b_spec) if isinstance(b_spec, tuple)
+                      else ns(b_spec)),
+        out_shardings=(ns(sh.logits_spec(mesh, B, cfg.vocab_size)),
+                       jax.tree.map(ns, c_spec,
+                                    is_leaf=lambda x: isinstance(x, P))),
+    )
+    return jitted, (params_sds, batch_sds)
+
+
+# ---------------------------------------------------------------------------
+# serve_step (decode): ONE token with a KV cache of seq_len
+# ---------------------------------------------------------------------------
+def make_serve_step(cfg: ModelConfig, mesh, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    params_sds = params_specs(cfg)
+    p_spec = sh.param_specs(params_sds, mesh)
+    cache_sds = jax.eval_shape(lambda: api.init_decode_caches(cfg, B, S))
+    c_spec = sh.cache_specs(cfg, cache_sds, mesh, B)
+    tok_sds = _sds((B, 1), jnp.int32)
+    pos_sds = _sds((), jnp.int32)
+
+    def serve_step(params, token, pos, caches):
+        with mesh_context(mesh):
+            logits, caches = api.decode_step(params, token, pos, caches, cfg)
+            return logits, caches
+
+    ns = partial(NamedSharding, mesh)
+    c_shard = jax.tree.map(ns, c_spec, is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(jax.tree.map(ns, p_spec), ns(sh.token_spec(mesh, B)),
+                      None, c_shard),
+        out_shardings=(ns(sh.logits_spec(mesh, B, cfg.vocab_size)), c_shard),
+        donate_argnums=(3,),
+    )
+    return jitted, (params_sds, tok_sds, pos_sds, cache_sds)
+
+
+def make_step(cfg: ModelConfig, mesh, shape: InputShape):
+    """Dispatch by shape kind. Returns (jitted_fn, example_args_sds).
+
+    Env flags (EXPERIMENTS.md §Perf hillclimbs): REPRO_MOMENTS_BF16=1 uses
+    bf16 optimizer moments; REPRO_ZERO_POD=1 shards moments across pods."""
+    import os
+
+    import jax.numpy as _jnp
+    kw = {}
+    if os.environ.get("REPRO_MOMENTS_BF16", "0") == "1":
+        kw["moments_dtype"] = _jnp.bfloat16
+    if os.environ.get("REPRO_ZERO_POD", "0") == "1":
+        kw["zero_pod"] = True
+    if os.environ.get("REPRO_GRAD_ACCUM"):
+        kw["grad_accum"] = int(os.environ["REPRO_GRAD_ACCUM"])
+    with mesh_context(mesh):
+        if shape.kind == "train":
+            return make_train_step(cfg, mesh, shape, **kw)
+        if shape.kind == "prefill":
+            return make_prefill_step(cfg, mesh, shape)
+        return make_serve_step(cfg, mesh, shape)

@@ -1,0 +1,89 @@
+"""Training driver: real training at reduced scale on CPU (the end-to-end
+example path) and the same code path the dry-run lowers at full scale.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 50 \
+        --reduced --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import InputShape, get_config
+from repro.data.pipeline import SyntheticTextPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import api
+from repro.optim.adamw import adamw_init
+
+
+def train(arch: str, steps: int = 20, batch: int = 8, seq: int = 128,
+          reduced: bool = True, seed: int = 0, log_every: int = 5,
+          ckpt_path: str = "", mesh=None):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = mesh or make_host_mesh()
+    shape = InputShape("cli", seq, batch, "train")
+    step_fn, _ = make_train_step(cfg, mesh, shape, grad_accum=1)
+
+    params = api.build_params(cfg, jax.random.key(seed))
+    opt = adamw_init(params)
+    pipe = SyntheticTextPipeline(cfg.vocab_size, batch, seq,
+                                 seed=seed).start()
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        tb = next(pipe)
+        tokens = jnp.asarray(tb.tokens)
+        labels = jnp.asarray(tb.labels)
+        if cfg.family == "vlm":
+            from repro.models.vlm import stub_patches
+            P = cfg.num_patches
+            batch_in = (stub_patches(cfg, batch), tokens[:, :seq - P])
+            labels = jnp.concatenate(
+                [jnp.full((batch, P), -100, jnp.int32), labels[:, :seq - P]],
+                axis=1)
+        elif cfg.family == "encdec":
+            frames = jnp.zeros((batch, cfg.encoder_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+            batch_in = (frames, tokens)
+        else:
+            batch_in = tokens
+        with mesh:
+            params, opt, metrics = step_fn(params, opt, batch_in, labels)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:4d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)")
+    pipe.stop()
+    if ckpt_path:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(ckpt_path, {"params": params, "opt": opt},
+                        step=steps)
+        print(f"saved checkpoint to {ckpt_path}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    losses = train(args.arch, steps=args.steps, batch=args.batch,
+                   seq=args.seq, reduced=args.reduced, ckpt_path=args.ckpt)
+    print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: pure-JAX functional model definitions for all assigned archs."""
+from repro.models import api  # noqa: F401

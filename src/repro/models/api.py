@@ -1,0 +1,104 @@
+"""Uniform model API over all architecture families.
+
+    params = build_params(cfg, key)          # arrays, or SDS when key=None
+    logits, aux = forward(params, batch, cfg)
+    logits, caches = prefill(params, batch, cfg)
+    logits, caches = decode_step(params, token, pos, caches, cfg)
+    caches = init_decode_caches(cfg, batch, seq_len)   # key-ful
+    batch = make_batch(cfg, shape_or_dims, key)        # real arrays
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (DENSE, ENCDEC, HYBRID, MOE, SSM, VLM, InputShape,
+                          ModelConfig)
+from repro.models import encdec, mamba2, moe, rglru, transformer, vlm
+
+
+def _mod(cfg: ModelConfig):
+    return {DENSE: transformer, MOE: moe, SSM: mamba2, HYBRID: rglru,
+            ENCDEC: encdec, VLM: vlm}[cfg.family]
+
+
+def build_params(cfg: ModelConfig, key=None):
+    return _mod(cfg).build_params(cfg, key)
+
+
+def forward(params, batch, cfg: ModelConfig) -> Tuple[Any, Any]:
+    """Returns (logits, aux_loss)."""
+    m = _mod(cfg)
+    if cfg.family == MOE:
+        return m.forward(params, batch, cfg)
+    if cfg.family in (ENCDEC, VLM):
+        return m.forward(params, batch, cfg), jnp.zeros((), jnp.float32)
+    return m.forward(params, batch, cfg), jnp.zeros((), jnp.float32)
+
+
+def prefill(params, batch, cfg: ModelConfig, extra_capacity: int = 0):
+    m = _mod(cfg)
+    if cfg.family in (ENCDEC, VLM):
+        return m.prefill(params, batch, cfg, extra_capacity=extra_capacity)
+    return m.prefill(params, batch, cfg, extra_capacity=extra_capacity)
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    return _mod(cfg).decode_step(params, token, pos, caches, cfg)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    return _mod(cfg).init_decode_caches(cfg, batch, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Batch construction (real arrays, for smoke tests / reduced-scale serving)
+# ---------------------------------------------------------------------------
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, key=None):
+    key = key if key is not None else jax.random.key(0)
+    if cfg.family == ENCDEC:
+        Sf = cfg.encoder_frames
+        frames = (jax.random.normal(key, (batch, Sf, cfg.d_model),
+                                    jnp.float32) * 0.02)
+        tokens = jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size)
+        return (frames.astype(jnp.dtype(cfg.dtype)), tokens.astype(jnp.int32))
+    if cfg.family == VLM:
+        P = cfg.num_patches
+        st = max(seq_len - P, 1)
+        patches = vlm.stub_patches(cfg, batch)
+        tokens = jax.random.randint(key, (batch, st), 0, cfg.vocab_size)
+        return (patches, tokens.astype(jnp.int32))
+    tokens = jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size)
+    return tokens.astype(jnp.int32)
+
+
+def batch_labels(cfg: ModelConfig, batch) -> jax.Array:
+    """Next-token labels aligned to the logits of ``forward(batch)``."""
+    if cfg.family == ENCDEC:
+        tokens = batch[1]
+        return jnp.roll(tokens, -1, axis=1)
+    if cfg.family == VLM:
+        patches, tokens = batch
+        P = patches.shape[1]
+        lab = jnp.roll(tokens, -1, axis=1)
+        pad = jnp.full((tokens.shape[0], P), -100, jnp.int32)  # ignore vision
+        return jnp.concatenate([pad, lab], axis=1)
+    return jnp.roll(batch, -1, axis=1)
+
+
+def loss_fn(logits, labels, aux, aux_weight: float = 0.01):
+    """Masked next-token cross entropy (labels == -100 ignored).
+
+    Vocab stays sharded: logsumexp reduces over the (possibly model-sharded)
+    vocab axis; GSPMD inserts the psum.
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    picked = jnp.take_along_axis(lg, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * valid.astype(jnp.float32)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + aux_weight * aux

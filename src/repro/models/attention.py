@@ -1,0 +1,296 @@
+"""Attention: blockwise (flash-style) jnp attention with GQA, causal /
+sliding-window / chunked masks, KV caches, and MLA (deepseek-v2).
+
+The blockwise q-scan keeps peak memory at O(S * q_block) instead of O(S^2),
+which is what lets ``prefill_32k`` fit on a v5e during the dry-run. The
+Pallas kernel in ``repro.kernels.flash_attention`` is the TPU fast path;
+this module is the lowering-friendly reference path (and the oracle).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope  # re-export  # noqa: F401
+
+NEG_INF = -2.0e38
+
+
+def _mask(qpos, kpos, *, causal: bool, window: Optional[int],
+          chunk: Optional[int]):
+    """qpos: [..., Q], kpos: [..., K] int32 -> bool [..., Q, K].
+
+    kpos < 0 marks an invalid (unwritten) cache slot.
+    """
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    m = k >= 0
+    if causal:
+        m = m & (k <= q)
+    if window is not None:
+        m = m & (q - k < window)
+    if chunk is not None:
+        m = m & ((q // chunk) == (k // chunk))
+    return m
+
+
+def _expand_kv(k, H: int):
+    """Broadcast kv heads to the full H query heads (GQA). Keeping a single
+    head dim (instead of a [Kh, G] split) gives GSPMD one cleanly
+    model-sharded axis; XLA fuses the broadcast so only each device's head
+    slice materializes."""
+    Kh = k.shape[2]
+    if Kh == H:
+        return k
+    G = H // Kh
+    B, S, _, Dh = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, Kh, G, Dh))
+    return k.reshape(B, S, H, Dh)
+
+
+def _sdpa_block(qblk, k, v, qpos, kpos, *, causal, window, chunk, scale,
+                shard=("batch", "model", None, None)):
+    """qblk: [B,Qb,H,Dh], k/v: [B,S,H,Dh] -> [B,Qb,H,Dh].
+
+    ``shard`` pins the [B,H,Qb,S] logits/probs layout: head-sharded for
+    full-sequence attention, seq(kv)-sharded for decode over a seq-sharded
+    cache (H2)."""
+    from repro.sharding.context import constrain
+    logits = jnp.einsum("bqhd,bshd->bhqs", qblk, k,
+                        preferred_element_type=jnp.float32) * scale
+    # GSPMD loses shardings inside scanned bodies and would replicate the
+    # [B,H,Qb,S] tensors -> pin shardings explicitly.
+    lg_shard = (shard[0], shard[1], None, shard[3]) \
+        if len(shard) == 4 else shard
+    logits = constrain(logits, *lg_shard)
+    m = _mask(qpos, kpos, causal=causal, window=window, chunk=chunk)
+    logits = jnp.where(m[:, None], logits, NEG_INF)
+    # softmax in fp32; fully-masked rows produce zeros
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    mx = jnp.maximum(mx, -1e30)
+    p = jnp.exp(logits - mx)
+    denom = jnp.sum(p, axis=-1, keepdims=True) + 1e-30
+    p = (p / denom).astype(v.dtype)
+    p = constrain(p, *lg_shard)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v)
+
+
+def attend(q, k, v, qpos, kpos, *, causal=True, window=None, chunk=None,
+           q_block: int = 512, scale: Optional[float] = None):
+    """Blockwise attention.
+
+    q: [B, Sq, H, Dh]; k/v: [B, Sk, Kh, Dh]; qpos: [Sq] or [B,Sq];
+    kpos: [Sk] or [B,Sk]. Returns [B, Sq, H, Dh].
+    """
+    B, Sq, H, Dh = q.shape
+    scale = scale if scale is not None else Dh ** -0.5
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if qpos.ndim == 1:
+        qpos = jnp.broadcast_to(qpos[None], (1, Sq))
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos[None], (1, k.shape[1]))
+
+    if Sq <= q_block:
+        return _sdpa_block(q, k, v, qpos, kpos, causal=causal, window=window,
+                           chunk=chunk, scale=scale)
+
+    nb = Sq // q_block
+    assert Sq % q_block == 0, f"Sq={Sq} not divisible by q_block={q_block}"
+    qs = q.reshape(B, nb, q_block, H, Dh).transpose(1, 0, 2, 3, 4)
+    qps = qpos.reshape(qpos.shape[0], nb, q_block).transpose(1, 0, 2)
+
+    def body(_, blk):
+        qb, qp = blk
+        o = _sdpa_block(qb, k, v, qp, kpos, causal=causal, window=window,
+                        chunk=chunk, scale=scale)
+        return None, o
+
+    # checkpoint: recompute the per-block softmax in backward instead of
+    # saving [B,H,q_block,S] probabilities for every block (flash-style).
+    _, outs = jax.lax.scan(jax.checkpoint(body), None, (qs, qps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer when window/chunk-limited)
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array        # [B, C, Kh, Dh]
+    v: jax.Array        # [B, C, Kh, Dh]
+    pos: jax.Array      # [C] int32, position held in each slot (-1 = empty)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(batch: int, capacity: int, kv_heads: int, head_dim: int,
+                  dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+        pos=jnp.full((capacity,), -1, jnp.int32),
+    )
+
+
+def cache_capacity(seq_len: int, window: Optional[int],
+                   chunk: Optional[int]) -> int:
+    """Ring-buffer capacity needed to decode at positions up to seq_len."""
+    if window is not None:
+        return min(seq_len, window)
+    if chunk is not None:
+        return min(seq_len, chunk)
+    return seq_len
+
+
+def cache_write(cache: KVCache, k_new, v_new, pos) -> KVCache:
+    """Write one token (k_new/v_new: [B, 1, Kh, Dh]) at position ``pos``."""
+    slot = jnp.mod(pos, cache.capacity)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+    p = jax.lax.dynamic_update_slice(cache.pos,
+                                     jnp.asarray(pos, jnp.int32)[None], (slot,))
+    return KVCache(k, v, p)
+
+
+def cache_prefill(cache: KVCache, k_all, v_all, start: int = 0) -> KVCache:
+    """Bulk write S tokens (positions start..start+S-1). S <= capacity uses a
+    tail write for ring semantics; S == capacity overwrites fully."""
+    S = k_all.shape[1]
+    C = cache.capacity
+    if S >= C:
+        k = k_all[:, S - C:].astype(cache.k.dtype)
+        v = v_all[:, S - C:].astype(cache.v.dtype)
+        p = jnp.arange(start + S - C, start + S, dtype=jnp.int32)
+        # slot i holds position p where p % C == i
+        order = jnp.argsort(jnp.mod(p, C))
+        return KVCache(k[:, order], v[:, order], p[order])
+    pos = jnp.arange(start, start + S, dtype=jnp.int32)
+    slots = jnp.mod(pos, C)
+    k = cache.k.at[:, slots].set(k_all.astype(cache.k.dtype))
+    v = cache.v.at[:, slots].set(v_all.astype(cache.v.dtype))
+    p = cache.pos.at[slots].set(pos)
+    return KVCache(k, v, p)
+
+
+# H2 (EXPERIMENTS.md §Perf): when the KV cache is sharded on its sequence
+# dim (kv_heads not divisible by the model axis), keep it that way during
+# decode — compute seq-sharded partial softmax + psum of the tiny context
+# instead of all-gathering gigabytes of cache per decoded token.
+import os as _os
+DECODE_PREFER_SEQ_SHARD = _os.environ.get("REPRO_DECODE_SEQ_SHARD", "1") == "1"  # H2: on by default (validated)
+
+
+def decode_attend(q, cache: KVCache, pos, *, causal=True, window=None,
+                  chunk=None, scale=None):
+    """One-token attention against a cache. q: [B, 1, H, Dh]."""
+    from repro.sharding.context import constrain, model_axis_size
+    B, _, H, Dh = q.shape
+    Kh, C = cache.k.shape[2], cache.k.shape[1]
+    scale = scale if scale is not None else Dh ** -0.5
+    msize = model_axis_size()
+    seq_sharded = (DECODE_PREFER_SEQ_SHARD and msize > 1
+                   and Kh % msize != 0 and C % msize == 0)
+    k = _expand_kv(cache.k, H)
+    v = _expand_kv(cache.v, H)
+    if seq_sharded:
+        k = constrain(k, "batch", "model", None, None)   # [B,C,H,Dh]: C
+        v = constrain(v, "batch", "model", None, None)
+    qpos = jnp.asarray(pos, jnp.int32)[None, None]        # [1,1]
+    kpos = cache.pos[None]                                # [1,C]
+    shard = (("batch", None, None, "model") if seq_sharded
+             else ("batch", "model", None, None))
+    return _sdpa_block(q, k, v, qpos, kpos, causal=causal,
+                       window=window, chunk=chunk, scale=scale,
+                       shard=shard)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): compressed-KV attention. Cache = (c_kv, k_rope, pos).
+# ---------------------------------------------------------------------------
+class MLACache(NamedTuple):
+    c: jax.Array        # [B, C, r]        compressed latent
+    kr: jax.Array       # [B, C, Dr]       rope'd shared key part
+    pos: jax.Array      # [C]
+
+    @property
+    def capacity(self) -> int:
+        return self.c.shape[1]
+
+
+def init_mla_cache(batch: int, capacity: int, r: int, rope_dim: int,
+                   dtype) -> MLACache:
+    return MLACache(
+        c=jnp.zeros((batch, capacity, r), dtype),
+        kr=jnp.zeros((batch, capacity, rope_dim), dtype),
+        pos=jnp.full((capacity,), -1, jnp.int32),
+    )
+
+
+def mla_attend_full(q_nope, q_rope, c, k_rope, w_uk, w_uv, qpos, kpos,
+                    *, causal=True, q_block: int = 512):
+    """Absorbed MLA attention over full sequences.
+
+    q_nope: [B,Sq,H,dh], q_rope: [B,Sq,H,Dr], c: [B,Sk,r], k_rope: [B,Sk,Dr],
+    w_uk: [H,dh,r], w_uv: [H,r,dv]. Returns [B,Sq,H,dv].
+    """
+    B, Sq, H, dh = q_nope.shape
+    Dr = q_rope.shape[-1]
+    scale = (dh + Dr) ** -0.5
+    qc = jnp.einsum("bqhd,hdr->bqhr", q_nope, w_uk)       # absorb W_uk
+    if qpos.ndim == 1:
+        qpos = qpos[None]
+    if kpos.ndim == 1:
+        kpos = kpos[None]
+
+    def blockfn(qc_b, qr_b, qp):
+        from repro.sharding.context import constrain
+        lg = (jnp.einsum("bqhr,bsr->bhqs", qc_b, c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsd->bhqs", qr_b, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+        lg = constrain(lg, "batch", "model", None, None)
+        m = _mask(qp, kpos, causal=causal, window=None, chunk=None)
+        lg = jnp.where(m[:, None], lg, NEG_INF)
+        mx = jnp.maximum(jnp.max(lg, axis=-1, keepdims=True), -1e30)
+        p = jnp.exp(lg - mx)
+        p = (p / (jnp.sum(p, axis=-1, keepdims=True) + 1e-30)).astype(c.dtype)
+        p = constrain(p, "batch", "model", None, None)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", p, c)
+        return jnp.einsum("bqhr,hrv->bqhv", ctx, w_uv)
+
+    if Sq <= q_block:
+        return blockfn(qc, q_rope, qpos)
+    nb = Sq // q_block
+    qc_s = qc.reshape(B, nb, q_block, H, -1).transpose(1, 0, 2, 3, 4)
+    qr_s = q_rope.reshape(B, nb, q_block, H, Dr).transpose(1, 0, 2, 3, 4)
+    qp_s = qpos.reshape(qpos.shape[0], nb, q_block).transpose(1, 0, 2)
+
+    def body(_, blk):
+        a, b_, p_ = blk
+        return None, blockfn(a, b_, p_)
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None, (qc_s, qr_s, qp_s))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, -1)
+
+
+def mla_cache_write(cache: MLACache, c_new, kr_new, pos) -> MLACache:
+    slot = jnp.mod(pos, cache.capacity)
+    c = jax.lax.dynamic_update_slice(cache.c, c_new.astype(cache.c.dtype),
+                                     (0, slot, 0))
+    kr = jax.lax.dynamic_update_slice(cache.kr, kr_new.astype(cache.kr.dtype),
+                                      (0, slot, 0))
+    p = jax.lax.dynamic_update_slice(cache.pos,
+                                     jnp.asarray(pos, jnp.int32)[None], (slot,))
+    return MLACache(c, kr, p)
+
+
+def mla_decode_attend(q_nope, q_rope, cache: MLACache, w_uk, w_uv, pos):
+    qpos = jnp.asarray(pos, jnp.int32)[None, None]
+    return mla_attend_full(q_nope, q_rope, cache.c, cache.kr, w_uk, w_uv,
+                           qpos[0], cache.pos, causal=True)

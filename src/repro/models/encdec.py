@@ -1,0 +1,187 @@
+"""Encoder-decoder backbone (seamless-m4t-medium, arXiv:2308.11596).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a STUB
+per the assignment: the encoder consumes precomputed frame embeddings
+[B, S_frames, D] provided by ``input_specs()``. This module implements the
+transformer backbone: bidirectional encoder + causal decoder with
+cross-attention.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.layers import Maker, mlp_apply, mlp_build, rms_norm
+
+
+class DecCache(NamedTuple):
+    self_kv: attn.KVCache
+    cross_k: jax.Array       # [B, Sf, Kh, Dh] static after prefill
+    cross_v: jax.Array
+
+
+def _enc_layer_build(make: Maker, cfg: ModelConfig, stack=()):
+    D = cfg.d_model
+    s = tuple(stack)
+    return {
+        "ln1": make("enc_ln1", s + (D,), "zeros"),
+        "attn": tfm.attn_build(make, cfg, stack=s, prefix="enc_"),
+        "ln2": make("enc_ln2", s + (D,), "zeros"),
+        "mlp": mlp_build(make, D, cfg.d_ff, prefix="enc_", stack=s),
+    }
+
+
+def _dec_layer_build(make: Maker, cfg: ModelConfig, stack=()):
+    D = cfg.d_model
+    s = tuple(stack)
+    return {
+        "ln1": make("dec_ln1", s + (D,), "zeros"),
+        "attn": tfm.attn_build(make, cfg, stack=s, prefix="dec_"),
+        "lnx": make("dec_lnx", s + (D,), "zeros"),
+        "xattn": tfm.attn_build(make, cfg, stack=s, prefix="dec_x_"),
+        "ln2": make("dec_ln2", s + (D,), "zeros"),
+        "mlp": mlp_build(make, D, cfg.d_ff, prefix="dec_", stack=s),
+    }
+
+
+def build_params(cfg: ModelConfig, key=None):
+    make = Maker(key, cfg.dtype)
+    Le = cfg.num_encoder_layers or cfg.num_layers
+    Ld = cfg.num_decoder_layers or cfg.num_layers
+    p = {
+        "embed": make("embed", (cfg.vocab_size, cfg.d_model), "embed"),
+        "enc_in": make("enc_in", (cfg.d_model, cfg.d_model)),
+        "enc_layers": _enc_layer_build(make, cfg, stack=(Le,)),
+        "enc_norm": make("enc_norm", (cfg.d_model,), "zeros"),
+        "dec_layers": _dec_layer_build(make, cfg, stack=(Ld,)),
+        "final_norm": make("final_norm", (cfg.d_model,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = make("lm_head", (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: [B, Sf, D] stub embeddings -> encoder output [B, Sf, D]."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(jnp.dtype(cfg.dtype)),
+                   params["enc_in"])
+    Sf = x.shape[1]
+    positions = jnp.arange(Sf, dtype=jnp.int32)
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        carry = carry + tfm.attn_apply_full(lp["attn"], h, positions, cfg,
+                                            causal=False)
+        h = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        return carry + mlp_apply(lp["mlp"], h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, lp["xattn"]["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _dec_layer(lp, x, positions, enc_out, cfg: ModelConfig):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + tfm.attn_apply_full(lp["attn"], h, positions, cfg)
+    h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+    k, v = _cross_kv(lp, enc_out, cfg)
+    kpos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+    x = x + tfm.attn_apply_full(lp["xattn"], h, positions, cfg,
+                                causal=False, kv=(k, v, kpos))
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """batch: (frames [B,Sf,D], tokens [B,St]) -> logits [B,St,V]."""
+    frames, tokens = batch
+    enc_out = encode(params, frames, cfg)
+    x = tfm.embed_tokens(params, tokens, cfg)
+    St = x.shape[1]
+    positions = jnp.arange(St, dtype=jnp.int32)
+
+    def body(carry, lp):
+        return _dec_layer(lp, carry, positions, enc_out, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return tfm.unembed(params, x, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, extra_capacity: int = 0):
+    frames, tokens = batch
+    enc_out = encode(params, frames, cfg)
+    x = tfm.embed_tokens(params, tokens, cfg)
+    St = x.shape[1]
+    positions = jnp.arange(St, dtype=jnp.int32)
+    capacity = St + extra_capacity
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        y, self_cache = tfm.attn_prefill(lp["attn"], h, positions, cfg,
+                                         capacity)
+        x = carry + y
+        h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        k, v = _cross_kv(lp, enc_out, cfg)
+        kpos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        x = x + tfm.attn_apply_full(lp["xattn"], h, positions, cfg,
+                                    causal=False, kv=(k, v, kpos))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h)
+        return x, DecCache(self_cache, k, v)
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    return tfm.unembed(params, x[:, -1:, :], cfg), caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    x = tfm.embed_tokens(params, token, cfg)
+
+    def body(carry, xs):
+        lp, cache = xs
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        y, self_cache = tfm.attn_apply_decode(lp["attn"], h, cache.self_kv,
+                                              pos, cfg)
+        x = carry + y
+        h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        positions = jnp.asarray(pos, jnp.int32)[None]
+        kpos = jnp.arange(cache.cross_k.shape[1], dtype=jnp.int32)
+        x = x + tfm.attn_apply_full(lp["xattn"], h, positions, cfg,
+                                    causal=False,
+                                    kv=(cache.cross_k, cache.cross_v, kpos))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h)
+        return x, DecCache(self_cache, cache.cross_k, cache.cross_v)
+
+    x, caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    return tfm.unembed(params, x, cfg), caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    Ld = cfg.num_decoder_layers or cfg.num_layers
+    Sf = cfg.encoder_frames
+    one = DecCache(
+        self_kv=attn.init_kv_cache(batch, seq_len, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim, dt),
+        cross_k=jnp.zeros((batch, Sf, cfg.num_kv_heads,
+                           cfg.resolved_head_dim), dt),
+        cross_v=jnp.zeros((batch, Sf, cfg.num_kv_heads,
+                           cfg.resolved_head_dim), dt),
+    )
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (Ld,) + a.shape), one)

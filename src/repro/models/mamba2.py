@@ -1,0 +1,251 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) decoder LM.
+
+Chunked SSD algorithm in pure JAX: within-chunk quadratic ("attention-like")
+term + inter-chunk linear recurrence over chunk states (lax.scan). Decode is
+a single O(1)-state update, which is why mamba2 runs the ``long_500k`` shape.
+
+Sharding: SSM heads on ``model``, batch on ``data``/``pod`` — all via GSPMD
+(no shard_map needed; the recurrence is elementwise in the head dim).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import Maker, rms_norm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array     # [B, H, P, N]
+    conv_x: jax.Array    # [B, K-1, d_inner]
+    conv_B: jax.Array    # [B, K-1, N]
+    conv_C: jax.Array    # [B, K-1, N]
+
+
+def layer_build(make: Maker, cfg: ModelConfig, stack=()):
+    D, W = cfg.d_model, cfg.ssm_d_inner
+    N, H, K = cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv
+    s = tuple(stack)
+    return {
+        "ln": make("ln", s + (D,), "zeros"),
+        "w_z": make("w_z", s + (D, W)),
+        "w_x": make("w_x", s + (D, W)),
+        "w_B": make("w_B", s + (D, N)),
+        "w_C": make("w_C", s + (D, N)),
+        "w_dt": make("w_dt", s + (D, H)),
+        "conv_x": make("conv_x", s + (K, W), scale=0.5),
+        "conv_B": make("conv_B", s + (K, N), scale=0.5),
+        "conv_C": make("conv_C", s + (K, N), scale=0.5),
+        "A_log": make("A_log", s + (H,), "zeros"),
+        "dt_bias": make("dt_bias", s + (H,), "zeros"),
+        "D_skip": make("D_skip", s + (H,), "zeros"),
+        "out_norm": make("out_norm", s + (W,), "zeros"),
+        "w_out": make("w_out", s + (W, D)),
+    }
+
+
+def build_params(cfg: ModelConfig, key=None):
+    make = Maker(key, cfg.dtype)
+    p = {
+        "embed": make("embed", (cfg.vocab_size, cfg.d_model), "embed"),
+        "layers": layer_build(make, cfg, stack=(cfg.num_layers,)),
+        "final_norm": make("final_norm", (cfg.d_model,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = make("lm_head", (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def _causal_conv(x, w, buf=None):
+    """Depthwise causal conv. x: [B,S,F], w: [K,F]. buf: [B,K-1,F] history.
+
+    Returns (y [B,S,F], new_buf [B,K-1,F]).
+    """
+    K = w.shape[0]
+    if buf is None:
+        buf = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    # y_t = sum_k w[k] * xp[t + k]
+    S = x.shape[1]
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        y = y + xp[:, k:k + S] * w[k]
+    new_buf = xp[:, -(K - 1):] if K > 1 else buf
+    return y, new_buf
+
+
+def _ssd_chunked(xh, dt, A, B_, C_, chunk: int):
+    """SSD scan. xh: [B,S,H,P]; dt: [B,S,H]; A: [H]; B_/C_: [B,S,N].
+
+    Scans over chunks so the quadratic within-chunk tensors only ever exist
+    for ONE chunk at a time (peak memory O(B * Lc^2 * H) instead of
+    O(B * S * Lc * H)); the inter-chunk state recurrence rides the same scan.
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bb, S, H, Pd = xh.shape
+    N = B_.shape[-1]
+    Lc = min(chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+    f32 = jnp.float32
+    xs = xh.reshape(Bb, nc, Lc, H, Pd).transpose(1, 0, 2, 3, 4).astype(f32)
+    dts = dt.reshape(Bb, nc, Lc, H).transpose(1, 0, 2, 3).astype(f32)
+    Bs = B_.reshape(Bb, nc, Lc, N).transpose(1, 0, 2, 3).astype(f32)
+    Cs = C_.reshape(Bb, nc, Lc, N).transpose(1, 0, 2, 3).astype(f32)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def body(h, inp):
+        x_c, dt_c, B_c, C_c = inp                    # [B,Lc,...] one chunk
+        dA = dt_c * A                                # [B,Lc,H] (negative)
+        seg = jnp.cumsum(dA, axis=1)
+        total = seg[:, -1, :]                        # [B,H]
+        # within-chunk decay L[l,m] = exp(seg_l - seg_m) * dt_m, m <= l
+        dec = seg[:, :, None, :] - seg[:, None, :, :]        # [B,l,m,H]
+        dec = jnp.where(mask[None, :, :, None], dec, -jnp.inf)
+        Lmat = jnp.exp(dec) * dt_c[:, None, :, :]
+        att = jnp.einsum("bln,bmn->blm", C_c, B_c,
+                         preferred_element_type=f32)
+        y_diag = jnp.einsum("blm,blmh,bmhp->blhp", att, Lmat, x_c)
+        # contribution of carried state
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", C_c, h, jnp.exp(seg))
+        # chunk state + recurrence
+        decay_to_end = jnp.exp(total[:, None, :] - seg) * dt_c  # [B,Lc,H]
+        s_c = jnp.einsum("blh,bln,blhp->bhpn", decay_to_end, B_c, x_c)
+        h_new = h * jnp.exp(total)[:, :, None, None] + s_c
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((Bb, H, Pd, N), f32)
+    hT, ys = jax.lax.scan(body, h0, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, Pd).astype(xh.dtype)
+    return y, hT
+
+
+def _gated_out(p, y, z, x_in, cfg: ModelConfig):
+    W = cfg.ssm_d_inner
+    y = y + x_in * p["D_skip"][..., None]                # skip connection
+    y = y.reshape(y.shape[0], -1, W) if y.ndim == 4 else y
+    z = z.reshape(z.shape[0], -1, W)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+
+
+def layer_apply(lp, x, cfg: ModelConfig, cache: SSMCache = None,
+                return_cache: bool = False):
+    """Full-sequence SSD mixer. x: [B,S,D]."""
+    Bb, S, D = x.shape
+    H, Pd, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,dw->bsw", h, lp["w_z"])
+    xi = jnp.einsum("bsd,dw->bsw", h, lp["w_x"])
+    Bi = jnp.einsum("bsd,dn->bsn", h, lp["w_B"])
+    Ci = jnp.einsum("bsd,dn->bsn", h, lp["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", h, lp["w_dt"])
+
+    bufs = (None, None, None) if cache is None else (
+        cache.conv_x, cache.conv_B, cache.conv_C)
+    xi, bx = _causal_conv(xi, lp["conv_x"], bufs[0])
+    Bi, bB = _causal_conv(Bi, lp["conv_B"], bufs[1])
+    Ci, bC = _causal_conv(Ci, lp["conv_C"], bufs[2])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(xi.dtype)
+    Bi = jax.nn.silu(Bi.astype(jnp.float32)).astype(Bi.dtype)
+    Ci = jax.nn.silu(Ci.astype(jnp.float32)).astype(Ci.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xi.reshape(Bb, S, H, Pd)
+    y, hT = _ssd_chunked(xh, dt, A, Bi, Ci, cfg.ssm_chunk)
+    out = _gated_out(lp, y, z, xh, cfg)
+    x = x + out
+    if return_cache:
+        return x, SSMCache(hT.astype(jnp.float32), bx, bB, bC)
+    return x
+
+
+def layer_decode(lp, x, cache: SSMCache, cfg: ModelConfig):
+    """One token. x: [B,1,D]."""
+    Bb = x.shape[0]
+    H, Pd, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,dw->bsw", h, lp["w_z"])
+    xi = jnp.einsum("bsd,dw->bsw", h, lp["w_x"])
+    Bi = jnp.einsum("bsd,dn->bsn", h, lp["w_B"])
+    Ci = jnp.einsum("bsd,dn->bsn", h, lp["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", h, lp["w_dt"])
+
+    xi, bx = _causal_conv(xi, lp["conv_x"], cache.conv_x)
+    Bi, bB = _causal_conv(Bi, lp["conv_B"], cache.conv_B)
+    Ci, bC = _causal_conv(Ci, lp["conv_C"], cache.conv_C)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(xi.dtype)
+    Bi = jax.nn.silu(Bi.astype(jnp.float32)).astype(Bi.dtype)
+    Ci = jax.nn.silu(Ci.astype(jnp.float32)).astype(Ci.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])[:, 0]  # [B,H]
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xi.reshape(Bb, H, Pd).astype(jnp.float32)
+    g = jnp.exp(dt * A)                                    # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bi[:, 0].astype(jnp.float32), xh)
+    state = cache.state * g[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Ci[:, 0].astype(jnp.float32))
+    y = y[:, None].astype(x.dtype)                         # [B,1,H,P]
+    out = _gated_out(lp, y, z, xh[:, None].astype(x.dtype), cfg)
+    return x + out, SSMCache(state, bx, bB, bC)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg: ModelConfig, extra_embeds=None):
+    x = tfm.embed_tokens(params, tokens, cfg, extra_embeds)
+
+    def body(carry, lp):
+        return layer_apply(lp, carry, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return tfm.unembed(params, x, cfg)
+
+
+def prefill(params, tokens, cfg: ModelConfig, extra_embeds=None,
+            extra_capacity: int = 0):
+    x = tfm.embed_tokens(params, tokens, cfg, extra_embeds)
+
+    def body(carry, lp):
+        y, cache = layer_apply(lp, carry, cfg, return_cache=True)
+        return y, cache
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    return tfm.unembed(params, x[:, -1:, :], cfg), caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    del pos  # SSM state is position-free
+    x = tfm.embed_tokens(params, token, cfg)
+
+    def body(carry, xs):
+        lp, cache = xs
+        return layer_decode(lp, carry, cache, cfg)
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    return tfm.unembed(params, x, cfg), caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    del seq_len
+    H, Pd, N, K, W = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                      cfg.ssm_conv, cfg.ssm_d_inner)
+    dt = jnp.dtype(cfg.dtype)
+    one = SSMCache(
+        state=jnp.zeros((batch, H, Pd, N), jnp.float32),
+        conv_x=jnp.zeros((batch, K - 1, W), dt),
+        conv_B=jnp.zeros((batch, K - 1, N), dt),
+        conv_C=jnp.zeros((batch, K - 1, N), dt),
+    )
+    L = cfg.num_layers
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)

@@ -1,0 +1,346 @@
+"""Mixture-of-Experts decoder LM (llama4-scout: 16e top-1 + shared expert +
+chunked attention; deepseek-v2: 160e top-6 + 2 shared experts + MLA).
+
+Expert parallelism: experts are sharded on the ``model`` mesh axis and the
+MoE block runs under ``shard_map`` — every expert-parallel rank routes the
+full local token set to *its* experts (activations are already replicated
+over ``model`` at this point), computes capacity-bounded expert FFNs with a
+sort-based dispatch (no T×E×C dense dispatch einsum), and the partial
+outputs are combined with a single psum over ``model``. FSDP-sharded expert
+weights are all-gathered over ``data`` inside the block, exactly like a
+hand-written FSDP layer.
+
+With no mesh in context (smoke tests) the same math runs single-device.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import Maker, rms_norm
+from repro.sharding import context as shctx
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def moe_ffn_build(make: Maker, cfg: ModelConfig, stack=()):
+    D, E = cfg.d_model, cfg.num_experts
+    F = cfg.resolved_moe_d_ff
+    s = tuple(stack)
+    p = {
+        "router": make("router", s + (D, E), scale=0.1),
+        "w1": make("moe_w1", s + (E, D, F)),          # gate proj
+        "w3": make("moe_w3", s + (E, D, F)),          # up proj
+        "w2": make("moe_w2", s + (E, F, D)),          # down proj
+    }
+    if cfg.num_shared_experts:
+        Fs = F * cfg.num_shared_experts
+        p["sh_gate"] = make("moe_sh_gate", s + (D, Fs))
+        p["sh_up"] = make("moe_sh_up", s + (D, Fs))
+        p["sh_down"] = make("moe_sh_down", s + (Fs, D))
+    return p
+
+
+def layer_build(make: Maker, cfg: ModelConfig, stack=()):
+    D = cfg.d_model
+    s = tuple(stack)
+    return {
+        "ln1": make("ln1", s + (D,), "zeros"),
+        "attn": tfm.attn_build(make, cfg, stack=s),
+        "ln2": make("ln2", s + (D,), "zeros"),
+        "moe": moe_ffn_build(make, cfg, stack=s),
+    }
+
+
+def build_params(cfg: ModelConfig, key=None):
+    make = Maker(key, cfg.dtype)
+    p = {
+        "embed": make("embed", (cfg.vocab_size, cfg.d_model), "embed"),
+        "layers": layer_build(make, cfg, stack=(cfg.num_layers,)),
+        "final_norm": make("final_norm", (cfg.d_model,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = make("lm_head", (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing + capacity dispatch (runs per expert-parallel rank)
+# ---------------------------------------------------------------------------
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(cfg.capacity_factor * num_tokens * cfg.top_k
+                      / max(cfg.num_experts, 1)))
+    c = max(c, 8)
+    return min(-(-c // 8) * 8, num_tokens * cfg.top_k)
+
+
+def _moe_ffn_block(x2, p, cfg: ModelConfig, e_start: int, e_local: int,
+                   w1, w3, w2):
+    """Expert contribution of experts [e_start, e_start+e_local) to tokens.
+
+    x2: [T, D] local tokens (replicated over the expert axis).
+    Returns (partial_y [T, D], aux_loss scalar partial, router probs [T, E]).
+    """
+    T, D = x2.shape
+    E, k = cfg.num_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", x2, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                  # [T,k]
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+
+    flat_e = idx.reshape(-1)                              # [T*k]
+    flat_t = jnp.arange(T * k, dtype=jnp.int32) // k
+    local_e = flat_e - e_start
+    is_local = (local_e >= 0) & (local_e < e_local)
+    sort_key = jnp.where(is_local, local_e, e_local)      # non-local -> end
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_e = sort_key[order]
+    pos_in_grp = (jnp.arange(T * k, dtype=jnp.int32)
+                  - jnp.searchsorted(sorted_e, sorted_e, side="left"))
+    C = _capacity(T, cfg)
+    keep = (sorted_e < e_local) & (pos_in_grp < C)
+    dest = jnp.where(keep, sorted_e * C + pos_in_grp, e_local * C)
+
+    gathered = x2[flat_t[order]]                          # [T*k, D]
+    buf = jnp.zeros((e_local * C + 1, D), x2.dtype).at[dest].add(
+        jnp.where(keep[:, None], gathered, 0))
+    buf = buf[: e_local * C].reshape(e_local, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1).astype(jnp.float32))
+    h = h.astype(x2.dtype) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    out = jnp.einsum("ecf,efd->ecd", h, w2).reshape(e_local * C, D)
+    out = jnp.concatenate([out, jnp.zeros((1, D), out.dtype)], axis=0)
+
+    contrib_sorted = out[dest] * keep[:, None].astype(out.dtype)
+    inv = jnp.argsort(order)
+    contrib = contrib_sorted[inv]                         # [T*k, D]
+    y = (contrib * gates.reshape(-1, 1).astype(contrib.dtype)
+         ).reshape(T, k, D).sum(axis=1)
+
+    # Switch-style load-balance aux loss (over ALL experts; identical on
+    # every rank, so dividing by the expert-parallel degree after psum is
+    # handled by the caller).
+    me = jnp.mean(probs, axis=0)                          # [E]
+    ce = jnp.mean(
+        (jax.nn.one_hot(idx, E, dtype=jnp.float32)).sum(1), axis=0)
+    aux = E * jnp.sum(me * ce) * (1.0 / k)
+    return y, aux
+
+
+def _shared_expert(x2, p, lo: int, hi: int):
+    """Shared-expert MLP on a column slice [lo, hi) of the hidden dim."""
+    g = jnp.einsum("td,df->tf", x2, p["sh_gate"][:, lo:hi])
+    u = jnp.einsum("td,df->tf", x2, p["sh_up"][:, lo:hi])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x2.dtype) * u
+    return jnp.einsum("tf,fd->td", h, p["sh_down"][lo:hi, :])
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: [B, S, D] -> (y [B, S, D], aux scalar)."""
+    B, S, D = x.shape
+    mesh = shctx.get_mesh()
+    ep = shctx.model_axis_size()
+    if mesh is None or ep == 1 or cfg.num_experts < ep:
+        x2 = x.reshape(B * S, D)
+        y, aux = _moe_ffn_block(x2, p, cfg, 0, cfg.num_experts,
+                                p["w1"], p["w3"], p["w2"])
+        if cfg.num_shared_experts:
+            y = y + _shared_expert(x2, p, 0, p["sh_gate"].shape[1])
+        return y.reshape(B, S, D), aux
+
+    baxes = shctx.batch_axes()
+    if baxes:
+        nshards = 1
+        for a in baxes:
+            nshards *= mesh.shape[a]
+        if B % nshards != 0:
+            baxes = None          # tiny/unshardable batch: replicate tokens
+    E_loc = cfg.num_experts // ep
+    Fs = p["sh_gate"].shape[1] if cfg.num_shared_experts else 0
+    Fs_loc = Fs // ep if Fs else 0
+
+    def block(x_blk, p_blk):
+        ei = jax.lax.axis_index("model")
+        # FSDP: gather the data-sharded weight dims before use.
+        w1 = jax.lax.all_gather(p_blk["w1"], "data", axis=1, tiled=True)
+        w3 = jax.lax.all_gather(p_blk["w3"], "data", axis=1, tiled=True)
+        w2 = jax.lax.all_gather(p_blk["w2"], "data", axis=2, tiled=True)
+        T_loc = x_blk.shape[0] * x_blk.shape[1]
+        x2 = x_blk.reshape(T_loc, D)
+        y, aux = _moe_ffn_block(x2, p_blk, cfg, ei * E_loc, E_loc, w1, w3, w2)
+        if cfg.num_shared_experts:
+            y = y + _shared_expert(x2, p_blk, 0, Fs_loc)
+        y = jax.lax.psum(y, "model")
+        # aux varies across token shards only (it is invariant over the
+        # expert-parallel axis) -> mean over the batch axes.
+        if baxes:
+            nb = 1
+            for a in baxes:
+                nb *= mesh.shape[a]
+            aux = jax.lax.psum(aux, baxes) / nb
+        return y.reshape(x_blk.shape), aux
+
+    in_specs = (
+        P(baxes, None, None),
+        {
+            "router": P(),
+            "w1": P("model", "data", None),
+            "w3": P("model", "data", None),
+            "w2": P("model", None, "data"),
+            **({"sh_gate": P(None, "model"), "sh_up": P(None, "model"),
+                "sh_down": P("model", None)} if cfg.num_shared_experts else {}),
+        },
+    )
+    # With a replicated batch (long_500k, B=1) the outputs are data-invariant
+    # because the FSDP all_gather returns identical weights on every data
+    # rank — a fact the static vma checker cannot prove, so disable it.
+    y, aux = jax.shard_map(
+        block, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(baxes, None, None), P()),
+        check_vma=baxes is not None,
+    )(x, p)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Layers + model (mirrors transformer.py but FFN -> MoE, returns aux loss)
+# ---------------------------------------------------------------------------
+def _layer_kinds(cfg: ModelConfig):
+    """(window, chunk) per layer. llama4: 3-of-4 chunked, every 4th full."""
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.chunk_pattern and (i + 1) % cfg.chunk_pattern == 0:
+            kinds.append((cfg.sliding_window, None))      # full/NoPE layer
+        else:
+            kinds.append((cfg.sliding_window, cfg.attention_chunk))
+    return kinds
+
+
+def layer_apply(lp, x, positions, cfg: ModelConfig, *, window, chunk):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + tfm.attn_apply_full(lp["attn"], h, positions, cfg, window=window,
+                                chunk=chunk)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y, aux = moe_apply(lp["moe"], h, cfg)
+    return x + y, aux
+
+
+def _grouped_scan(params_layers, cfg: ModelConfig, per_layer_fn, init,
+                  carries_cache=None):
+    """Scan over layer groups honouring the chunk pattern.
+
+    per_layer_fn(lp, carry, is_full_attn, cache_slice) -> (carry, aux, new_cache)
+    """
+    L = cfg.num_layers
+    pat = cfg.chunk_pattern or 1
+    assert L % pat == 0, (L, pat)
+    ngroups = L // pat
+    grouped = jax.tree.map(
+        lambda a: a.reshape((ngroups, pat) + a.shape[1:]), params_layers)
+    gcache = None
+    if carries_cache is not None:
+        gcache = jax.tree.map(
+            lambda a: a.reshape((ngroups, pat) + a.shape[1:]), carries_cache)
+
+    def body(carry, xs):
+        if gcache is None:
+            lp_grp = xs
+        else:
+            lp_grp, cache_grp = xs
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_caches = []
+        x = carry
+        for j in range(pat):
+            lp = jax.tree.map(lambda a: a[j], lp_grp)
+            is_full = cfg.chunk_pattern and (j + 1) % pat == 0
+            cache_j = (jax.tree.map(lambda a: a[j], cache_grp)
+                       if gcache is not None else None)
+            x, aux, nc = per_layer_fn(lp, x, bool(is_full), cache_j)
+            aux_tot = aux_tot + aux
+            if nc is not None:
+                new_caches.append(nc)
+        ys = aux_tot
+        if new_caches:
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_caches)
+            ys = (aux_tot, stacked)
+        return x, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = grouped if gcache is None else (grouped, gcache)
+    x, ys = jax.lax.scan(body, init, xs)
+    return x, ys
+
+
+def forward(params, tokens, cfg: ModelConfig, extra_embeds=None):
+    x = tfm.embed_tokens(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def per_layer(lp, x, is_full, _cache):
+        window, chunk = ((cfg.sliding_window, None) if is_full
+                         else (cfg.sliding_window, cfg.attention_chunk))
+        x, aux = layer_apply(lp, x, positions, cfg, window=window, chunk=chunk)
+        return x, aux, None
+
+    x, aux = _grouped_scan(params["layers"], cfg, per_layer, x)
+    return tfm.unembed(params, x, cfg), jnp.sum(aux)
+
+
+def prefill(params, tokens, cfg: ModelConfig, extra_embeds=None,
+            extra_capacity: int = 0):
+    from repro.models import attention as attn
+    x = tfm.embed_tokens(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    capacity = attn.cache_capacity(S + extra_capacity, cfg.sliding_window,
+                                   cfg.attention_chunk)
+
+    def per_layer(lp, x, is_full, _):
+        window, chunk = ((cfg.sliding_window, None) if is_full
+                         else (cfg.sliding_window, cfg.attention_chunk))
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, cache = tfm.attn_prefill(lp["attn"], h, positions, cfg, capacity,
+                                    window=window, chunk=chunk)
+        x = x + y
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, aux = moe_apply(lp["moe"], h, cfg)
+        return x + y, aux, cache
+
+    x, (aux, caches) = _grouped_scan(params["layers"], cfg, per_layer, x)
+    caches = jax.tree.map(
+        lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), caches)
+    return tfm.unembed(params, x[:, -1:, :], cfg), caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    x = tfm.embed_tokens(params, token, cfg)
+
+    def per_layer(lp, x, is_full, cache):
+        window, chunk = ((cfg.sliding_window, None) if is_full
+                         else (cfg.sliding_window, cfg.attention_chunk))
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, cache = tfm.attn_apply_decode(lp["attn"], h, cache, pos, cfg,
+                                         window=window, chunk=chunk)
+        x = x + y
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, aux = moe_apply(lp["moe"], h, cfg)
+        return x + y, aux, cache
+
+    x, (_, caches) = _grouped_scan(params["layers"], cfg, per_layer, x,
+                                   carries_cache=caches)
+    caches = jax.tree.map(
+        lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), caches)
+    return tfm.unembed(params, x, cfg), caches
+
+
+init_decode_caches = tfm.init_decode_caches

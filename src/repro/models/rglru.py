@@ -1,0 +1,241 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent
+blocks interleaved with local (sliding-window) attention blocks, pattern
+(rec, rec, attn) repeating. Decode state is O(lru_width) + O(window), so
+this arch runs ``long_500k``.
+
+The RG-LRU diagonal linear recurrence h_t = a_t * h_{t-1} + b_t is computed
+with ``jax.lax.associative_scan`` (log-depth) for full sequences and as a
+single fused update for decode. The Pallas kernel in
+``repro.kernels.rglru_scan`` is the TPU fast path for the same recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.layers import Maker, mlp_apply, mlp_build, rms_norm
+
+C_SCALE = 8.0  # RG-LRU "c" constant
+
+# H3 (EXPERIMENTS.md §Perf): the r/i gate matmuls contract over the
+# model-sharded width dim against replicated-row [W,W] weights, which GSPMD
+# resolves with an fp32 psum of [B,S,W] per gate per layer. Gathering the
+# (bf16, 2x smaller) activations once instead and computing gates with
+# output-sharded columns removes those all-reduces.
+import os as _os
+GATE_GATHER = _os.environ.get("REPRO_GATE_GATHER", "0") == "1"
+
+
+class RecCache(NamedTuple):
+    h: jax.Array         # [B, W] fp32 recurrent state
+    conv: jax.Array      # [B, K-1, W] conv history
+
+
+def block_kinds(cfg: ModelConfig):
+    """Static per-layer kind list, e.g. 38 layers of (rec, rec, attn)."""
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def _rec_build(make: Maker, cfg: ModelConfig, i: int):
+    D, W = cfg.d_model, cfg.resolved_lru_width
+    K = cfg.ssm_conv or 4
+    pre = f"b{i}_"
+    return {
+        "ln": make(pre + "ln", (D,), "zeros"),
+        "w_y": make(pre + "w_y", (D, W)),
+        "w_gate": make(pre + "w_gate", (D, W)),
+        "conv": make(pre + "conv", (K, W), scale=0.5),
+        "w_r": make(pre + "w_r", (W, W), scale=0.5),
+        "w_i": make(pre + "w_i", (W, W), scale=0.5),
+        "lam": make(pre + "lam", (W,), "ones"),
+        "w_out": make(pre + "w_out", (W, D)),
+        "ln2": make(pre + "ln2", (D,), "zeros"),
+        "mlp": mlp_build(make, D, cfg.d_ff, prefix=pre),
+    }
+
+
+def _attn_build(make: Maker, cfg: ModelConfig, i: int):
+    D = cfg.d_model
+    pre = f"b{i}_"
+    # attn_build uses fixed param names; wrap with per-layer prefix via a
+    # shim Maker.
+    class _Pre:
+        def __call__(self, name, shape, kind="dense", scale=1.0):
+            return make(pre + name, shape, kind, scale)
+    return {
+        "ln1": make(pre + "ln1", (D,), "zeros"),
+        "attn": tfm.attn_build(_Pre(), cfg),
+        "ln2": make(pre + "ln2", (D,), "zeros"),
+        "mlp": mlp_build(make, D, cfg.d_ff, prefix=pre),
+    }
+
+
+def build_params(cfg: ModelConfig, key=None):
+    make = Maker(key, cfg.dtype)
+    blocks = []
+    for i, kind in enumerate(block_kinds(cfg)):
+        blocks.append(_rec_build(make, cfg, i) if kind == "rec"
+                      else _attn_build(make, cfg, i))
+    p = {
+        "embed": make("embed", (cfg.vocab_size, cfg.d_model), "embed"),
+        "blocks": blocks,
+        "final_norm": make("final_norm", (cfg.d_model,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = make("lm_head", (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrence
+# ---------------------------------------------------------------------------
+def _rglru_gates(lp, y, cfg: ModelConfig):
+    """y: [B,S,W] post-conv. Returns (a [B,S,W] fp32, gated input fp32)."""
+    y_in = y
+    if GATE_GATHER:
+        from repro.sharding.context import constrain
+        y_in = constrain(y, "batch", None, None)   # gather W once (bf16)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", y_in, lp["w_r"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", y_in, lp["w_i"])
+                       .astype(jnp.float32))
+    log_a = -C_SCALE * r * jax.nn.softplus(lp["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * y.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan_full(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a/b: [B,S,W] fp32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del aa
+    return hh
+
+
+def _rec_apply(lp, x, cfg: ModelConfig, cache: RecCache = None,
+               return_cache: bool = False):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate"])
+                       .astype(jnp.float32)).astype(h.dtype)
+    y = jnp.einsum("bsd,dw->bsw", h, lp["w_y"])
+    from repro.models.mamba2 import _causal_conv
+    y, buf = _causal_conv(y, lp["conv"], None if cache is None else cache.conv)
+    a, b = _rglru_gates(lp, y, cfg)
+    hs = rglru_scan_full(a, b, None if cache is None else cache.h)
+    out = (hs.astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, lp["w_out"])
+    x = x + out
+    if return_cache:
+        return x, RecCache(hs[:, -1], buf)
+    return x
+
+
+def _rec_decode(lp, x, cache: RecCache, cfg: ModelConfig):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate"])
+                       .astype(jnp.float32)).astype(h.dtype)
+    y = jnp.einsum("bsd,dw->bsw", h, lp["w_y"])
+    from repro.models.mamba2 import _causal_conv
+    y, buf = _causal_conv(y, lp["conv"], cache.conv)
+    a, b = _rglru_gates(lp, y, cfg)
+    h_new = a[:, 0] * cache.h + b[:, 0]                    # [B,W]
+    out = (h_new[:, None].astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, lp["w_out"])
+    return x + out, RecCache(h_new, buf)
+
+
+def _mlp_res(lp, x, cfg):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h)
+
+
+# ---------------------------------------------------------------------------
+# Model (python loop over heterogeneous blocks)
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg: ModelConfig, extra_embeds=None):
+    x = tfm.embed_tokens(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    kinds = block_kinds(cfg)
+
+    for lp, kind in zip(params["blocks"], kinds):
+        def blockfn(x, lp=lp, kind=kind):
+            if kind == "rec":
+                x = _rec_apply(lp, x, cfg)
+            else:
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                x = x + tfm.attn_apply_full(lp["attn"], h, positions, cfg,
+                                            window=cfg.local_window)
+            return _mlp_res(lp, x, cfg)
+        x = jax.checkpoint(blockfn)(x) if cfg.remat else blockfn(x)
+    return tfm.unembed(params, x, cfg)
+
+
+def prefill(params, tokens, cfg: ModelConfig, extra_embeds=None,
+            extra_capacity: int = 0):
+    x = tfm.embed_tokens(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    capacity = min(S + extra_capacity, cfg.local_window or S)
+    kinds = block_kinds(cfg)
+    caches = []
+    for lp, kind in zip(params["blocks"], kinds):
+        if kind == "rec":
+            x, cache = _rec_apply(lp, x, cfg, return_cache=True)
+        else:
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, cache = tfm.attn_prefill(lp["attn"], h, positions, cfg,
+                                        capacity, window=cfg.local_window)
+            x = x + y
+        x = _mlp_res(lp, x, cfg)
+        caches.append(cache)
+    return tfm.unembed(params, x[:, -1:, :], cfg), caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    x = tfm.embed_tokens(params, token, cfg)
+    kinds = block_kinds(cfg)
+    new_caches = []
+    for lp, kind, cache in zip(params["blocks"], kinds, caches):
+        if kind == "rec":
+            x, cache = _rec_decode(lp, x, cache, cfg)
+        else:
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, cache = tfm.attn_apply_decode(lp["attn"], h, cache, pos, cfg,
+                                             window=cfg.local_window)
+            x = x + y
+        x = _mlp_res(lp, x, cfg)
+        new_caches.append(cache)
+    return tfm.unembed(params, x, cfg), new_caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    W = cfg.resolved_lru_width
+    K = cfg.ssm_conv or 4
+    capacity = min(seq_len, cfg.local_window or seq_len)
+    caches = []
+    for kind in block_kinds(cfg):
+        if kind == "rec":
+            caches.append(RecCache(jnp.zeros((batch, W), jnp.float32),
+                                   jnp.zeros((batch, K - 1, W), dt)))
+        else:
+            caches.append(attn.init_kv_cache(batch, capacity,
+                                             cfg.num_kv_heads,
+                                             cfg.resolved_head_dim, dt))
+    return caches

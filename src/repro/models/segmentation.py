@@ -1,0 +1,225 @@
+"""Segmentation: split a model's forward pass into dispatchable "kernels"
+(program segments) for the FIKIT scheduler.
+
+A service's inference = [embed] + [layer]*L + [head]. The layer segment is
+ONE jitted program reused for every layer (layer params are an argument), so
+all L dispatches share a KernelID — exactly the paper's observation that a
+task repeatedly calls kernels with the same ID (Fig 5), and the reason SK
+averaging + runtime feedback exist.
+
+Host work (tokenize / sample / detokenize) runs client-side between
+segments — the genuine origin of inter-kernel device idle gaps.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DENSE, ENCDEC, HYBRID, MOE, SSM, VLM, ModelConfig
+from repro.core.client import Segment
+from repro.models import mamba2, moe, rglru, transformer as tfm, vlm as vlm_m
+from repro.models.layers import rms_norm
+
+
+def _sync(x):
+    jax.block_until_ready(x)
+    return x
+
+
+def _sleep_work(seconds: float) -> Optional[Callable]:
+    if seconds <= 0:
+        return None
+
+    def work(state):
+        time.sleep(seconds)
+        return state
+    return work
+
+
+class SegmentedService:
+    """A reduced-scale model packaged as FIKIT-schedulable segments.
+
+    host_gap: host think-time injected after each layer segment (models
+    the CPU-side work real serving stacks do between dispatches).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, batch: int, seq: int,
+                 host_gap: float = 0.0, tail_gap: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.seq = seq
+        self.host_gap = host_gap
+        self.tail_gap = tail_gap
+        self._build()
+
+    # ------------------------------------------------------------- builders
+    def _build(self):
+        cfg = self.cfg
+        if cfg.family in (DENSE, VLM, MOE, SSM):
+            self._build_decoder_lm()
+        elif cfg.family == HYBRID:
+            self._build_hybrid()
+        elif cfg.family == ENCDEC:
+            self._build_encdec()
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+
+    def _positions(self, S):
+        return jnp.arange(S, dtype=jnp.int32)
+
+    def _build_decoder_lm(self):
+        cfg, params = self.cfg, self.params
+
+        @jax.jit
+        def embed(tokens):
+            if cfg.family == VLM:
+                patches = vlm_m.stub_patches(cfg, tokens.shape[0])
+                return _sync(tfm.embed_tokens(params, tokens, cfg, patches))
+            return _sync(tfm.embed_tokens(params, tokens, cfg))
+
+        if cfg.family == MOE:
+            def _layer(lp, x, i):
+                pat = cfg.chunk_pattern or 1
+                is_full = bool(cfg.chunk_pattern) and (i + 1) % pat == 0
+                window, chunk = ((cfg.sliding_window, None) if is_full
+                                 else (cfg.sliding_window,
+                                       cfg.attention_chunk))
+                y, _aux = moe.layer_apply(lp, x, self._positions(x.shape[1]),
+                                          cfg, window=window, chunk=chunk)
+                return y
+            layer = jax.jit(_layer, static_argnums=(2,))
+        elif cfg.family == SSM:
+            layer = jax.jit(lambda lp, x, i: mamba2.layer_apply(lp, x, cfg),
+                            static_argnums=(2,))
+        else:
+            def _layer(lp, x, i):
+                return tfm.layer_apply(lp, x, self._positions(x.shape[1]),
+                                       cfg, window=cfg.sliding_window,
+                                       chunk=cfg.attention_chunk)
+            layer = jax.jit(_layer, static_argnums=(2,))
+
+        @jax.jit
+        def head(x):
+            return _sync(tfm.unembed(params, x, cfg))
+
+        L = cfg.num_layers
+        lps = [jax.tree.map(lambda a, i=i: a[i], params["layers"])
+               for i in range(L)]
+        segs = [Segment(f"{cfg.name}/embed", lambda t: embed(t))]
+        for i in range(L):
+            segs.append(Segment(
+                f"{cfg.name}/layer",
+                partial(self._run_layer, layer, lps[i], i),
+                host_work=_sleep_work(self.host_gap)))
+        segs.append(Segment(f"{cfg.name}/head", lambda x: head(x),
+                            host_work=self._sample_work()))
+        self.segments = segs
+
+    @staticmethod
+    def _run_layer(layer, lp, i, x):
+        return _sync(layer(lp, x, i))
+
+    def _build_hybrid(self):
+        cfg, params = self.cfg, self.params
+        kinds = rglru.block_kinds(cfg)
+
+        @jax.jit
+        def embed(tokens):
+            return _sync(tfm.embed_tokens(params, tokens, cfg))
+
+        def rec_block(lp, x):
+            x = rglru._rec_apply(lp, x, cfg)
+            return rglru._mlp_res(lp, x, cfg)
+
+        def attn_block(lp, x):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            x = x + tfm.attn_apply_full(lp["attn"], h,
+                                        self._positions(x.shape[1]), cfg,
+                                        window=cfg.local_window)
+            return rglru._mlp_res(lp, x, cfg)
+
+        rec_j, attn_j = jax.jit(rec_block), jax.jit(attn_block)
+
+        @jax.jit
+        def head(x):
+            return _sync(tfm.unembed(params, x, cfg))
+
+        segs = [Segment(f"{cfg.name}/embed", lambda t: embed(t))]
+        for lp, kind in zip(params["blocks"], kinds):
+            fn = rec_j if kind == "rec" else attn_j
+            segs.append(Segment(
+                f"{cfg.name}/{kind}",
+                partial(lambda f, p, x: _sync(f(p, x)), fn, lp),
+                host_work=_sleep_work(self.host_gap)))
+        segs.append(Segment(f"{cfg.name}/head", lambda x: head(x),
+                            host_work=self._sample_work()))
+        self.segments = segs
+
+    def _build_encdec(self):
+        cfg, params = self.cfg, self.params
+
+        @jax.jit
+        def encode(batch):
+            frames, tokens = batch
+            return _sync((encdec_encode(params, frames, cfg),
+                          tfm.embed_tokens(params, tokens, cfg)))
+
+        from repro.models import encdec as ed
+        encdec_encode = ed.encode
+
+        def dec_layer(lp, state):
+            enc_out, x = state
+            x = ed._dec_layer(lp, x, self._positions(x.shape[1]), enc_out,
+                              cfg)
+            return (enc_out, x)
+        dec_j = jax.jit(dec_layer)
+
+        @jax.jit
+        def head(state):
+            _, x = state
+            return _sync(tfm.unembed(params, x, cfg))
+
+        Ld = cfg.num_decoder_layers or cfg.num_layers
+        lps = [jax.tree.map(lambda a, i=i: a[i], params["dec_layers"])
+               for i in range(Ld)]
+        segs = [Segment(f"{cfg.name}/encode", lambda b: encode(b))]
+        for i in range(Ld):
+            segs.append(Segment(
+                f"{cfg.name}/dec_layer",
+                partial(lambda p, s: _sync(dec_j(p, s)), lps[i]),
+                host_work=_sleep_work(self.host_gap)))
+        segs.append(Segment(f"{cfg.name}/head", lambda s: head(s),
+                            host_work=self._sample_work()))
+        self.segments = segs
+
+    # -------------------------------------------------------------- helpers
+    def _sample_work(self):
+        tail = self.tail_gap
+
+        def work(logits):
+            # host-side sampling: argmax -> python ints (detokenize analog)
+            import numpy as np
+            toks = np.asarray(jax.device_get(jnp.argmax(logits[..., :64],
+                                                        axis=-1)))
+            if tail > 0:
+                time.sleep(tail)
+            return toks
+        return work
+
+    def make_input(self, key=None):
+        from repro.models import api
+        return api.make_batch(self.cfg, self.batch, self.seq, key)
+
+    def warmup(self):
+        """Compile all segment programs once (outside any measurement)."""
+        state = self.make_input()
+        for seg in self.segments:
+            state = seg.fn(state)
+            if seg.host_work is not None and seg is self.segments[-1]:
+                pass
+        return True

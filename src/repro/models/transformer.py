@@ -1,0 +1,316 @@
+"""Dense decoder-only transformer LM (GQA / MQA / qk_norm / partial rotary /
+sliding-window / chunked attention). Also provides the attention sublayer
+used by the MoE, hybrid and enc-dec models, including MLA (deepseek-v2).
+
+Everything is functional: ``build_params(cfg, key)`` returns real arrays when
+``key`` is given, or ShapeDtypeStructs when ``key=None`` (dry-run path).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import Maker, mlp_apply, mlp_build, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer
+# ---------------------------------------------------------------------------
+def attn_build(make: Maker, cfg: ModelConfig, stack=(), prefix=""):
+    D, H, Kh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    Dh = cfg.resolved_head_dim
+    s = tuple(stack)
+    if cfg.use_mla:
+        r, Dr, dv = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.resolved_v_head_dim
+        p = {
+            "wq": make(prefix + "wq", s + (D, H, Dh + Dr)),
+            "w_dkv": make(prefix + "w_dkv", s + (D, r + Dr)),
+            "kv_norm": make(prefix + "kv_norm", s + (r,), "zeros"),
+            "w_uk": make(prefix + "w_uk", s + (H, Dh, r)),
+            "w_uv": make(prefix + "w_uv", s + (H, r, dv)),
+            "wo": make(prefix + "wo", s + (H, dv, D)),
+        }
+        if cfg.q_lora_rank:
+            rq = cfg.q_lora_rank
+            p["w_dq"] = make(prefix + "w_dq", s + (D, rq))
+            p["q_norm_lora"] = make(prefix + "q_norm_lora", s + (rq,), "zeros")
+            p["wq"] = make(prefix + "wq", s + (rq, H, Dh + Dr))
+        return p
+    p = {
+        "wq": make(prefix + "wq", s + (D, H, Dh)),
+        "wk": make(prefix + "wk", s + (D, Kh, Dh)),
+        "wv": make(prefix + "wv", s + (D, Kh, Dh)),
+        "wo": make(prefix + "wo", s + (H, Dh, D)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = make(prefix + "q_norm", s + (Dh,), "zeros")
+        p["k_norm"] = make(prefix + "k_norm", s + (Dh,), "zeros")
+    return p
+
+
+def _qkv(p, h, positions, cfg: ModelConfig, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = attn.apply_rope(q, positions, cfg.rotary_pct, cfg.rope_theta)
+        k = attn.apply_rope(k, positions, cfg.rotary_pct, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply_full(p, h, positions, cfg: ModelConfig, *, window=None,
+                    chunk=None, causal=True, rope=True, kv=None,
+                    return_kv=False):
+    """Full-sequence self (or cross, via kv=(k,v)) attention sublayer."""
+    if cfg.use_mla:
+        return _mla_apply_full(p, h, positions, cfg, return_kv=return_kv)
+    if kv is None:
+        q, k, v = _qkv(p, h, positions, cfg, rope=rope)
+        kpos = positions
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k, v, kpos = kv
+    out = attn.attend(q, k, v, positions, kpos, causal=causal, window=window,
+                      chunk=chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _mla_apply_full(p, h, positions, cfg: ModelConfig, return_kv=False):
+    Dh, Dr = cfg.resolved_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        hq = rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]),
+                      p["q_norm_lora"], cfg.norm_eps)
+    else:
+        hq = h
+    qall = jnp.einsum("bsd,dhk->bshk", hq, p["wq"])
+    q_nope, q_rope = qall[..., :Dh], qall[..., Dh:]
+    q_rope = attn.apply_rope(q_rope, positions, 1.0, cfg.rope_theta)
+    ckr = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+    c, kr = ckr[..., :cfg.kv_lora_rank], ckr[..., cfg.kv_lora_rank:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    kr = attn.apply_rope(kr[:, :, None, :], positions, 1.0,
+                         cfg.rope_theta)[:, :, 0, :]
+    out = attn.mla_attend_full(q_nope, q_rope, c, kr, p["w_uk"], p["w_uv"],
+                               positions, positions, causal=True)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (c, kr)
+    return y
+
+
+def attn_apply_decode(p, h, cache, pos, cfg: ModelConfig, *, window=None,
+                      chunk=None, rope=True):
+    """One-token self-attention. h: [B,1,D]. Returns (y, new_cache)."""
+    if cfg.use_mla:
+        return _mla_apply_decode(p, h, cache, pos, cfg)
+    positions = jnp.asarray(pos, jnp.int32)[None]
+    q, k, v = _qkv(p, h, positions, cfg, rope=rope)
+    cache = attn.cache_write(cache, k, v, pos)
+    out = attn.decode_attend(q, cache, pos, window=window, chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def _mla_apply_decode(p, h, cache, pos, cfg: ModelConfig):
+    Dh = cfg.resolved_head_dim
+    positions = jnp.asarray(pos, jnp.int32)[None]
+    if cfg.q_lora_rank:
+        hq = rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]),
+                      p["q_norm_lora"], cfg.norm_eps)
+    else:
+        hq = h
+    qall = jnp.einsum("bsd,dhk->bshk", hq, p["wq"])
+    q_nope, q_rope = qall[..., :Dh], qall[..., Dh:]
+    q_rope = attn.apply_rope(q_rope, positions, 1.0, cfg.rope_theta)
+    ckr = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+    c, kr = ckr[..., :cfg.kv_lora_rank], ckr[..., cfg.kv_lora_rank:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    kr = attn.apply_rope(kr[:, :, None, :], positions, 1.0,
+                         cfg.rope_theta)[:, :, 0, :]
+    cache = attn.mla_cache_write(cache, c, kr, pos)
+    out = attn.mla_decode_attend(q_nope, q_rope, cache, p["w_uk"], p["w_uv"],
+                                 pos)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"]), cache
+
+
+def attn_prefill(p, h, positions, cfg: ModelConfig, capacity: int, *,
+                 window=None, chunk=None):
+    """Full-seq attention that also builds the decode cache (ring layout)."""
+    B = h.shape[0]
+    dt = h.dtype
+    if cfg.use_mla:
+        y, (c, kr) = _mla_apply_full(p, h, positions, cfg, return_kv=True)
+        zc = attn.init_mla_cache(B, capacity, cfg.kv_lora_rank,
+                                 cfg.rope_head_dim, dt)
+        return y, _mla_cache_prefill(zc, c, kr)
+    y, (k, v) = attn_apply_full(p, h, positions, cfg, window=window,
+                                chunk=chunk, return_kv=True)
+    Kh, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    zero = attn.init_kv_cache(B, capacity, Kh, Dh, dt)
+    cache = attn.cache_prefill(zero, k, v)
+    return y, cache
+
+
+def _mla_cache_prefill(cache, c_all, kr_all):
+    S, C = c_all.shape[1], cache.capacity
+    if S >= C:
+        c = c_all[:, S - C:]
+        kr = kr_all[:, S - C:]
+        pos = jnp.arange(S - C, S, dtype=jnp.int32)
+        order = jnp.argsort(jnp.mod(pos, C))
+        return attn.MLACache(c[:, order].astype(cache.c.dtype),
+                             kr[:, order].astype(cache.kr.dtype), pos[order])
+    pos = jnp.arange(S, dtype=jnp.int32)
+    slots = jnp.mod(pos, C)
+    return attn.MLACache(cache.c.at[:, slots].set(c_all.astype(cache.c.dtype)),
+                         cache.kr.at[:, slots].set(kr_all.astype(cache.kr.dtype)),
+                         cache.pos.at[slots].set(pos))
+
+
+# ---------------------------------------------------------------------------
+# Dense decoder layer
+# ---------------------------------------------------------------------------
+def layer_build(make: Maker, cfg: ModelConfig, stack=()):
+    D = cfg.d_model
+    s = tuple(stack)
+    return {
+        "ln1": make("ln1", s + (D,), "zeros"),
+        "attn": attn_build(make, cfg, stack=s),
+        "ln2": make("ln2", s + (D,), "zeros"),
+        "mlp": mlp_build(make, cfg.d_model, cfg.d_ff, stack=s),
+    }
+
+
+def layer_apply(lp, x, positions, cfg: ModelConfig, *, window=None,
+                chunk=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + attn_apply_full(lp["attn"], h, positions, cfg, window=window,
+                            chunk=chunk)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h)
+
+
+def layer_prefill(lp, x, positions, cfg: ModelConfig, capacity, *,
+                  window=None, chunk=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, cache = attn_prefill(lp["attn"], h, positions, cfg, capacity,
+                            window=window, chunk=chunk)
+    x = x + y
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h), cache
+
+
+def layer_decode(lp, x, cache, pos, cfg: ModelConfig, *, window=None,
+                 chunk=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, cache = attn_apply_decode(lp["attn"], h, cache, pos, cfg,
+                                 window=window, chunk=chunk)
+    x = x + y
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h), cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+def build_params(cfg: ModelConfig, key=None):
+    make = Maker(key, cfg.dtype)
+    p = {
+        "embed": make("embed", (cfg.vocab_size, cfg.d_model), "embed"),
+        "layers": layer_build(make, cfg, stack=(cfg.num_layers,)),
+        "final_norm": make("final_norm", (cfg.d_model,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = make("lm_head", (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, extra_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def unembed(params, x, cfg: ModelConfig):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def forward(params, tokens, cfg: ModelConfig, extra_embeds=None):
+    """tokens: [B, S_text] -> logits [B, S_total, V]."""
+    x = embed_tokens(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, lp):
+        return layer_apply(lp, carry, positions, cfg,
+                           window=cfg.sliding_window,
+                           chunk=cfg.attention_chunk), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return unembed(params, x, cfg)
+
+
+def prefill(params, tokens, cfg: ModelConfig, extra_embeds=None,
+            extra_capacity: int = 0):
+    """Returns (last-position logits [B,1,V], stacked caches)."""
+    x = embed_tokens(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    capacity = attn.cache_capacity(S + extra_capacity, cfg.sliding_window,
+                                   cfg.attention_chunk)
+
+    def body(carry, lp):
+        y, cache = layer_prefill(lp, carry, positions, cfg, capacity,
+                                 window=cfg.sliding_window,
+                                 chunk=cfg.attention_chunk)
+        return y, cache
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    return unembed(params, x[:, -1:, :], cfg), caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    """token: [B,1] int32; caches: stacked over layers. -> (logits, caches)."""
+    x = embed_tokens(params, token, cfg)
+
+    def body2(carry, xs):
+        lp, cache = xs
+        y, new_cache = layer_decode(lp, carry, cache, pos, cfg,
+                                    window=cfg.sliding_window,
+                                    chunk=cfg.attention_chunk)
+        return y, new_cache
+
+    x, caches = jax.lax.scan(body2, x, (params["layers"], caches))
+    return unembed(params, x, cfg), caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    """Stacked (over layers) empty caches sized for decoding at seq_len."""
+    capacity = attn.cache_capacity(seq_len, cfg.sliding_window,
+                                   cfg.attention_chunk)
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    if cfg.use_mla:
+        one = attn.init_mla_cache(batch, capacity, cfg.kv_lora_rank,
+                                  cfg.rope_head_dim, dt)
+    else:
+        one = attn.init_kv_cache(batch, capacity, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim, dt)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)

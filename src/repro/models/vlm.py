@@ -1,0 +1,38 @@
+"""VLM backbone (llava-next-mistral-7b): Mistral decoder consuming anyres
+patch embeddings from a STUB vision frontend (per assignment: the ViT/
+projector is not implemented; ``input_specs()`` supplies patch embeddings of
+the right shape, prepended to the text tokens).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as tfm
+
+build_params = tfm.build_params
+init_decode_caches = tfm.init_decode_caches
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """batch: (patches [B,P,D], tokens [B,St]) -> logits [B, P+St, V]."""
+    patches, tokens = batch
+    return tfm.forward(params, tokens, cfg, extra_embeds=patches)
+
+
+def prefill(params, batch, cfg: ModelConfig, extra_capacity: int = 0):
+    patches, tokens = batch
+    return tfm.prefill(params, tokens, cfg, extra_embeds=patches,
+                       extra_capacity=extra_capacity)
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    return tfm.decode_step(params, token, pos, caches, cfg)
+
+
+def stub_patches(cfg: ModelConfig, batch: int, dtype=None):
+    """Deterministic stand-in for the vision tower output."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    P, D = cfg.num_patches, cfg.d_model
+    base = jnp.linspace(-0.5, 0.5, P * D, dtype=jnp.float32).reshape(1, P, D)
+    return jnp.broadcast_to(base.astype(dt), (batch, P, D))

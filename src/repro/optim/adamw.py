@@ -1,0 +1,90 @@
+"""AdamW + global-norm clipping + linear-warmup cosine schedule, pure JAX.
+
+Moments are fp32 regardless of param dtype; the update is applied in fp32
+and cast back (mixed-precision training convention). Works on arbitrary
+pytrees, including ShapeDtypeStruct trees (for the dry-run: ``adamw_init``
+maps shapes to shapes so the optimizer state can be lowered without
+allocation).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def _zeros_like(p, dtype):
+    if isinstance(p, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct(p.shape, dtype)
+    return jnp.zeros(p.shape, dtype)
+
+
+def adamw_init(params, moments_dtype=jnp.float32) -> AdamWState:
+    """moments_dtype=bfloat16 halves optimizer-state HBM — the lever used
+    in EXPERIMENTS.md H1 to fit deepseek-v2-236b training on v5e."""
+    import functools
+    step = (jax.ShapeDtypeStruct((), jnp.int32)
+            if any(isinstance(l, jax.ShapeDtypeStruct)
+                   for l in jax.tree.leaves(params))
+            else jnp.zeros((), jnp.int32))
+    zl = functools.partial(_zeros_like, dtype=jnp.dtype(moments_dtype))
+    return AdamWState(
+        step=step,
+        mu=jax.tree.map(zl, params),
+        nu=jax.tree.map(zl, params),
+    )
+
+
+def schedule(step, base_lr: float, warmup: int = 100,
+             total: int = 10_000, min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(s < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr: float = 3e-4,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.01, clip_norm: float = 1.0,
+                 warmup: int = 100, total_steps: int = 10_000):
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gn + 1e-9))
+    lr_t = schedule(step, lr, warmup, total_steps)
+
+    def upd(g, m, v, p):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay \
+            * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+        return newp, m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gn,
+                                                   "lr": lr_t}

@@ -1,0 +1,1 @@
+from repro.serving.engine import InferenceService, ServingSystem  # noqa: F401

@@ -1,0 +1,116 @@
+"""Priority serving engine: hosts multiple model services on ONE device
+under the FIKIT scheduler (the paper's cloud-serving deployment).
+
+Lifecycle per the paper (Fig 3):
+1. A new service is profiled: T exclusive measured runs -> SK/SG stats
+   loaded into the scheduler (measurement phase).
+2. All later invocations run in the sharing phase: kernel-ID identification
+   only, priority queues + gap filling decide placement.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.config import ModelConfig
+from repro.core.client import HookClient
+from repro.core.executor import WallClockEngine
+from repro.core.profiler import ProfiledData, Profiler
+from repro.core.scheduler import Mode
+from repro.core.task import TaskKey
+from repro.models import api
+from repro.models.segmentation import SegmentedService
+
+
+class InferenceService:
+    """One hosted model + its priority + its profile state."""
+
+    def __init__(self, cfg: ModelConfig, priority: int, batch: int = 1,
+                 seq: int = 32, host_gap: float = 0.0, tail_gap: float = 0.0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.priority = priority
+        self.key = TaskKey(cfg.name, (batch, seq))
+        params = api.build_params(cfg, jax.random.key(seed))
+        self.svc = SegmentedService(cfg, params, batch, seq,
+                                    host_gap=host_gap, tail_gap=tail_gap)
+        self.profiled = False
+
+    def client(self, engine: WallClockEngine, identify: bool = True):
+        return HookClient(engine, self.key, self.priority,
+                          self.svc.segments, identify=identify)
+
+
+class ServingSystem:
+    """Owns the engine + profile store; runs measurement then sharing."""
+
+    def __init__(self, mode: Mode = Mode.FIKIT, measure_runs: int = 5):
+        self.profiles = ProfiledData()
+        self.mode = mode
+        self.measure_runs = measure_runs
+        self.engine: Optional[WallClockEngine] = None
+
+    def __enter__(self):
+        self.engine = WallClockEngine(self.mode, self.profiles).start()
+        return self
+
+    def __exit__(self, *exc):
+        self.engine.stop()
+
+    # ------------------------------------------------------------ lifecycle
+    def onboard(self, service: InferenceService) -> List[float]:
+        """Measurement phase: T exclusive measured runs (paper: T in
+        [10, 1000]); returns the measured-phase JCTs."""
+        service.svc.warmup()
+        prof = Profiler(service.key)
+        jcts = []
+        meas_engine = WallClockEngine(Mode.EXCLUSIVE).start()
+        try:
+            cl = HookClient(meas_engine, service.key, service.priority,
+                            service.svc.segments)
+            for _ in range(self.measure_runs):
+                state = service.svc.make_input()
+                _, jct = cl.measure_run(state, prof)
+                jcts.append(jct)
+        finally:
+            meas_engine.stop()
+        self.profiles.load(prof.statistics())
+        service.profiled = True
+        return jcts
+
+    def invoke(self, service: InferenceService, n: int = 1,
+               interval: float = 0.0) -> List[float]:
+        """n sharing-phase invocations; returns JCTs."""
+        assert self.engine is not None, "use as context manager"
+        cl = service.client(self.engine)
+        jcts = []
+        for _ in range(n):
+            state = service.svc.make_input()
+            _, jct = cl.run(state)
+            jcts.append(jct)
+            if interval > 0:
+                time.sleep(interval)
+        return jcts
+
+    def invoke_concurrent(self, plans) -> Dict[str, List[float]]:
+        """plans: list of (name, service, n, interval, start_delay).
+        Runs each plan in its own client thread; returns JCTs per name."""
+        assert self.engine is not None
+        out: Dict[str, List[float]] = {}
+        threads = []
+
+        def runner(name, service, n, interval, delay):
+            if delay > 0:
+                time.sleep(delay)
+            out[name] = self.invoke(service, n=n, interval=interval)
+
+        for plan in plans:
+            threads.append(threading.Thread(target=runner, args=plan))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return out

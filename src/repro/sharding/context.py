@@ -1,0 +1,80 @@
+"""Mesh context: lets model code (e.g. the MoE shard_map block) know which
+mesh the surrounding pjit is using without threading it through every call.
+
+The launch layer sets the context; model code queries it. With no mesh set
+(unit tests, reduced smoke models) the single-device code path is used.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+_state = threading.local()
+
+
+def set_mesh(mesh) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def batch_axes() -> Optional[Tuple[str, ...]]:
+    """Mesh axes over which the global batch is sharded."""
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names) or None
+
+
+def model_axis_size() -> int:
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the context mesh; no-op without a
+    mesh. ``spec`` entries: "batch" -> the batch axes (dropped when the dim
+    is not divisible), "model" -> the model axis (dropped when not
+    divisible), None -> unconstrained.
+
+    Model code uses this inside scan bodies where GSPMD's propagation
+    otherwise loses shardings and replicates large intermediates.
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    bax = batch_axes()
+    out = []
+    for dim, s in zip(x.shape, spec):
+        if s == "batch":
+            n = 1
+            for a in (bax or ()):
+                n *= mesh.shape[a]
+            out.append(bax if (bax and dim % n == 0) else None)
+        elif s == "model":
+            ok = "model" in mesh.axis_names and \
+                dim % mesh.shape["model"] == 0
+            out.append("model" if ok else None)
+        else:
+            out.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))

@@ -1,0 +1,257 @@
+"""PartitionSpec rules for params, optimizer state, activations and caches.
+
+Layout policy (single pod mesh (16,16) axes ("data","model"); multi-pod
+(2,16,16) axes ("pod","data","model")):
+
+- 2-D weight sharding: feature-in ("fan-in") dims on ``data`` (FSDP/ZeRO-3),
+  feature-out / heads / experts / vocab dims on ``model`` (tensor/expert
+  parallel). Replicated across ``pod`` (pods are pure data parallel).
+- Optimizer moments: identical specs to their params (fp32).
+- Activations: batch on ("pod","data"), heads / hidden-parallel dims on
+  ``model``. Batch=1 shapes (long_500k) replicate batch and let the data
+  axis idle (recorded in the roofline notes).
+- KV caches: kv-head dim on ``model`` when divisible, else the cache
+  sequence dim goes on ``model`` (ring-buffer writes lower fine under
+  GSPMD either way).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ENCDEC, HYBRID, MOE, SSM, VLM, ModelConfig
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _n_batch_shards(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def bspec(mesh, batch: int, *rest) -> P:
+    """Batch-leading spec; replicates batch when not divisible."""
+    ax = batch_axes(mesh)
+    if batch % max(_n_batch_shards(mesh), 1) != 0:
+        return P(None, *rest)
+    return P(ax, *rest)
+
+
+# ---------------------------------------------------------------------------
+# Param specs: name-based rules applied leaf-wise (stacked layer dims get a
+# leading None automatically by rank matching).
+# ---------------------------------------------------------------------------
+_D, _M = "data", "model"
+
+# trailing-dims spec per param name (applied to the last len(spec) dims)
+_RULES = {
+    # embeddings / head
+    "embed": (_M, _D),
+    "lm_head": (_D, _M),
+    "enc_in": (_D, None),
+    # attention
+    "wq": (_D, _M, None),
+    "wk": (_D, _M, None),
+    "wv": (_D, _M, None),
+    "wo": (_M, None, _D),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # MLA
+    "w_dq": (_D, None),
+    "q_norm_lora": (None,),
+    "w_dkv": (_D, None),
+    "kv_norm": (None,),
+    "w_uk": (_M, None, None),
+    "w_uv": (_M, None, None),
+    # mlp
+    "w_gate": (_D, _M),
+    "w_up": (_D, _M),
+    "w_down": (_M, _D),
+    # moe (must match the shard_map in_specs in repro.models.moe)
+    "router": (None, None),
+    "w1": (_M, _D, None),
+    "w3": (_M, _D, None),
+    "w2": (_M, None, _D),
+    "sh_gate": (None, _M),
+    "sh_up": (None, _M),
+    "sh_down": (_M, None),
+    # mamba2
+    "w_z": (_D, _M),
+    "w_x": (_D, _M),
+    "w_B": (_D, None),
+    "w_C": (_D, None),
+    "w_dt": (_D, _M),
+    "conv_x": (None, _M),
+    "conv_B": (None, None),
+    "conv_C": (None, None),
+    "A_log": (_M,),
+    "dt_bias": (_M,),
+    "D_skip": (_M,),
+    "out_norm": (_M,),
+    "w_out": (_M, _D),
+    # rg-lru
+    "w_y": (_D, _M),
+    "conv": (None, _M),
+    "w_r": (None, _M),
+    "w_i": (None, _M),
+    "lam": (_M,),
+    # norms
+    "ln": (None,),
+    "ln1": (None,),
+    "ln2": (None,),
+    "lnx": (None,),
+    "final_norm": (None,),
+    "enc_norm": (None,),
+}
+
+
+def _spec_for(name: str, shape, mesh) -> P:
+    ndim = len(shape)
+    rule = _RULES.get(name)
+    if rule is None:
+        rule = (None,) * ndim
+    # pad leading stacked-layer dims with None
+    lead = ndim - len(rule)
+    full = (None,) * lead + tuple(rule)
+    # drop axes absent from the mesh, and axes whose dim is not divisible
+    # by the axis size (e.g. kv_heads=8 on a 16-way model axis -> replicate)
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None or ax not in mesh.axis_names \
+                or dim % mesh.shape[ax] != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def param_specs(params, mesh):
+    """Pytree of PartitionSpec matching ``params`` (arrays or SDS)."""
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        return _spec_for(name, tuple(leaf.shape), mesh)
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def opt_specs(opt_state, params_spec, zero_axis: str = None, params=None,
+              mesh=None):
+    """AdamW moments share their param's spec; step is replicated.
+
+    zero_axis: additionally shard each moment's first unsharded divisible
+    dim over this axis (ZeRO-style optimizer-state sharding, e.g. across
+    pods) — beyond-paper optimization H1."""
+    from repro.optim.adamw import AdamWState
+    if zero_axis is None:
+        return AdamWState(step=P(), mu=params_spec, nu=params_spec)
+    size = mesh.shape[zero_axis]
+
+    def widen(spec, leaf):
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (ax, dim) in enumerate(zip(entries, leaf.shape)):
+            if ax is None and dim % size == 0:
+                entries[i] = zero_axis
+                break
+        return P(*entries)
+
+    mspec = jax.tree.map(widen, params_spec, params,
+                         is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), mu=mspec, nu=mspec)
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache specs
+# ---------------------------------------------------------------------------
+def token_spec(mesh, batch: int) -> P:
+    return bspec(mesh, batch, None)
+
+
+def embeds_spec(mesh, batch: int) -> P:
+    return bspec(mesh, batch, None, None)
+
+
+def logits_spec(mesh, batch: int, vocab: int = 0) -> P:
+    m = _M if _M in mesh.axis_names else None
+    if m is not None and vocab and vocab % mesh.shape[_M] != 0:
+        m = None              # e.g. seamless vocab 256206 on a 16-way axis
+    return bspec(mesh, batch, None, m)
+
+
+def _kv_dims(cfg: ModelConfig, mesh) -> Tuple[Optional[str], Optional[str]]:
+    """(seq_dim_axis, kv_head_axis) for a KV cache."""
+    msize = mesh.shape.get(_M, 1)
+    if _M not in mesh.axis_names:
+        return None, None
+    if cfg.num_kv_heads and cfg.num_kv_heads % msize == 0:
+        return None, _M
+    return _M, None
+
+
+def cache_specs(cfg: ModelConfig, caches, mesh, batch: int):
+    """Specs for the stacked decode caches returned by init_decode_caches."""
+    from repro.models.attention import KVCache, MLACache
+    from repro.models.mamba2 import SSMCache
+    from repro.models.encdec import DecCache
+    bax = batch_axes(mesh) if batch % max(_n_batch_shards(mesh), 1) == 0 \
+        else None
+    seq_ax, kvh_ax = _kv_dims(cfg, mesh)
+    m = _M if _M in mesh.axis_names else None
+
+    def kv_spec(stacked: bool):
+        lead = (None,) if stacked else ()
+        return KVCache(
+            k=P(*lead, bax, seq_ax, kvh_ax, None),
+            v=P(*lead, bax, seq_ax, kvh_ax, None),
+            pos=P(*lead, None),
+        )
+
+    def one(cache):
+        if isinstance(cache, KVCache):
+            stacked = cache.k.ndim == 5
+            return kv_spec(stacked)
+        if isinstance(cache, MLACache):
+            stacked = cache.c.ndim == 4
+            lead = (None,) if stacked else ()
+            return MLACache(c=P(*lead, bax, m, None),
+                            kr=P(*lead, bax, m, None),
+                            pos=P(*lead, None))
+        if isinstance(cache, SSMCache):
+            stacked = cache.state.ndim == 5
+            lead = (None,) if stacked else ()
+            return SSMCache(state=P(*lead, bax, m, None, None),
+                            conv_x=P(*lead, bax, None, m),
+                            conv_B=P(*lead, bax, None, None),
+                            conv_C=P(*lead, bax, None, None))
+        if isinstance(cache, DecCache):
+            stacked = cache.cross_k.ndim == 5
+            lead = (None,) if stacked else ()
+            return DecCache(self_kv=kv_spec(stacked),
+                            cross_k=P(*lead, bax, None, kvh_ax, None),
+                            cross_v=P(*lead, bax, None, kvh_ax, None))
+        raise TypeError(type(cache))
+
+    if cfg.family == HYBRID:
+        from repro.models.rglru import RecCache
+        out = []
+        for cache in caches:
+            if isinstance(cache, RecCache):
+                out.append(RecCache(h=P(bax, m),
+                                    conv=P(bax, None, m)))
+            else:
+                out.append(one(cache))
+        return out
+    return one(caches)

@@ -1,0 +1,124 @@
+"""Unit tests for Algorithm 1 (FIKIT) and Algorithm 2 (BestPrioFit) —
+pseudocode-level semantics from the paper (Figs 9, 10)."""
+import pytest
+
+from repro.core.fikit import EPSILON, best_prio_fit, fikit_procedure
+from repro.core.kernel_id import KernelID
+from repro.core.profiler import ProfiledData, TaskProfile
+from repro.core.queues import PriorityQueues
+from repro.core.task import KernelRequest, TaskKey
+
+
+def make_profiled(entries):
+    """entries: {task_name: {kernel_name: (dur, gap)}}"""
+    pd = ProfiledData()
+    for tname, kernels in entries.items():
+        key = TaskKey(tname)
+        prof = TaskProfile(key=key, runs=1)
+        for kname, (dur, gap) in kernels.items():
+            kid = KernelID(kname)
+            prof.SK[kid] = dur
+            prof.SG[kid] = gap
+        pd.load(prof)
+    return pd
+
+
+def req(tname, kname, prio):
+    return KernelRequest(task_key=TaskKey(tname), kernel_id=KernelID(kname),
+                         priority=prio)
+
+
+def test_best_prio_fit_prefers_higher_priority():
+    pd = make_profiled({"t1": {"k1": (0.005, 0)}, "t2": {"k2": (0.009, 0)}})
+    qs = PriorityQueues()
+    qs.push(req("t1", "k1", 3))     # higher priority, shorter
+    qs.push(req("t2", "k2", 7))     # lower priority, longer (better fit!)
+    got, dur = best_prio_fit(qs, idle_time=0.010, profiled=pd)
+    # paper: priority dominates — scan stops at the first level with a fit
+    assert got.task_key.process == "t1"
+    assert dur == pytest.approx(0.005)
+    assert len(qs) == 1             # selected request dequeued
+
+
+def test_best_prio_fit_longest_within_level():
+    pd = make_profiled({"a": {"k": (0.002, 0)}, "b": {"k": (0.006, 0)},
+                        "c": {"k": (0.004, 0)}})
+    qs = PriorityQueues()
+    for t in ("a", "b", "c"):
+        qs.push(req(t, "k", 5))
+    got, dur = best_prio_fit(qs, idle_time=0.007, profiled=pd)
+    assert got.task_key.process == "b"          # longest that fits
+    assert dur == pytest.approx(0.006)
+
+
+def test_best_prio_fit_respects_idle_time():
+    pd = make_profiled({"a": {"k": (0.010, 0)}})
+    qs = PriorityQueues()
+    qs.push(req("a", "k", 5))
+    got, dur = best_prio_fit(qs, idle_time=0.005, profiled=pd)
+    assert got is None and dur == -1
+    assert len(qs) == 1                          # nothing dequeued
+
+
+def test_best_prio_fit_skips_unprofiled():
+    pd = ProfiledData()                          # no profiles at all
+    qs = PriorityQueues()
+    qs.push(req("a", "k", 5))
+    got, dur = best_prio_fit(qs, idle_time=1.0, profiled=pd)
+    assert got is None                           # predicted -1 never fits
+
+
+def test_fikit_procedure_fills_until_exhausted():
+    pd = make_profiled({"lo": {"k": (0.003, 0)}, "hi": {"kh": (0.002, 0.011)}})
+    qs = PriorityQueues()
+    for _ in range(5):
+        qs.push(req("lo", "k", 5))
+    launched = []
+    out = fikit_procedure(qs, TaskKey("hi"), KernelID("kh"), idle_time=-1,
+                          profiled=pd, launch=launched.append)
+    # gap 0.011 fits three 0.003 kernels (0.009), a 4th would exceed 0.002
+    assert len(out) == 3 == len(launched)
+    assert len(qs) == 2
+
+
+def test_fikit_procedure_skips_small_gaps():
+    pd = make_profiled({"lo": {"k": (0.00001, 0)}})
+    qs = PriorityQueues()
+    qs.push(req("lo", "k", 5))
+    out = fikit_procedure(qs, TaskKey("hi"), KernelID("kh"),
+                          idle_time=EPSILON / 2, profiled=pd,
+                          launch=lambda r: None)
+    assert out == [] and len(qs) == 1
+
+
+def test_fikit_procedure_feedback_early_stop():
+    pd = make_profiled({"lo": {"k": (0.003, 0)}})
+    qs = PriorityQueues()
+    for _ in range(5):
+        qs.push(req("lo", "k", 5))
+    remaining = iter([0.004, 0.0])   # after the 1st fill the gap is over
+
+    out = fikit_procedure(qs, TaskKey("hi"), KernelID("kh"), idle_time=0.1,
+                          profiled=pd, launch=lambda r: None,
+                          remaining_gap=lambda: next(remaining))
+    assert len(out) == 1             # early-stopped despite predicted 0.1
+
+
+def test_priority_queue_scan_order():
+    qs = PriorityQueues()
+    qs.push(req("a", "k", 9))
+    qs.push(req("b", "k", 0))
+    qs.push(req("c", "k", 4))
+    assert qs.pop_highest().task_key.process == "b"
+    assert qs.pop_highest().task_key.process == "c"
+    assert qs.pop_highest().task_key.process == "a"
+    assert qs.pop_highest() is None
+
+
+def test_priority_bounds():
+    from repro.core.task import Priority
+    with pytest.raises(ValueError):
+        Priority(10)
+    with pytest.raises(ValueError):
+        Priority(-1)
+    assert int(Priority(0)) == 0

@@ -1,0 +1,85 @@
+"""Profiler / SK / SG statistics tests (paper §3.2 formulas) + store
+round-trip."""
+import os
+
+import pytest
+
+from repro.core.kernel_id import KernelID, kernel_id_for
+from repro.core.profile_store import load_profiles, save_profiles
+from repro.core.profiler import ProfiledData, Profiler
+from repro.core.task import TaskKey
+
+
+def test_sk_sg_kronecker_delta_means():
+    """Reproduces the paper's worked example: kernel j appears twice per run
+    across 2 runs; SK_j / SG_j are means over all 4 occurrences."""
+    key = TaskKey("svc")
+    j = KernelID("j")
+    other = KernelID("other")
+    prof = Profiler(key)
+    # run 1: j(2ms) gap 10ms, other(1ms) gap 1ms, j(4ms) gap 2ms, other(1ms)
+    prof.start_run()
+    prof.record(j, 0.002); prof.record_gap(0.010)
+    prof.record(other, 0.001); prof.record_gap(0.001)
+    prof.record(j, 0.004); prof.record_gap(0.002)
+    prof.record(other, 0.001)
+    prof.end_run()
+    # run 2: j(6ms) gap 4ms, j(8ms) gap 8ms, other(1ms)
+    prof.start_run()
+    prof.record(j, 0.006); prof.record_gap(0.004)
+    prof.record(j, 0.008); prof.record_gap(0.008)
+    prof.record(other, 0.001)
+    prof.end_run()
+
+    stats = prof.statistics()
+    assert stats.SK[j] == pytest.approx((0.002 + 0.004 + 0.006 + 0.008) / 4)
+    assert stats.SG[j] == pytest.approx((0.010 + 0.002 + 0.004 + 0.008) / 4)
+    assert stats.SK[other] == pytest.approx(0.001)
+    # 'other' had a recorded gap only in run 1 (last kernel has no gap)
+    assert stats.SG[other] == pytest.approx(0.001)
+    assert stats.runs == 2
+    assert stats.unique_ids == {j, other}
+
+
+def test_last_kernel_has_no_gap():
+    prof = Profiler(TaskKey("s"))
+    k = KernelID("k")
+    prof.start_run()
+    prof.record(k, 1.0)
+    prof.record_gap(9.9)   # would be a gap after the final kernel
+    prof.end_run()         # end_run clears it (paper: N_t - 1 gaps)
+    assert KernelID("k") not in prof.statistics().SG
+
+
+def test_kernel_id_from_avals():
+    import numpy as np
+    kid = kernel_id_for("seg", inputs=[np.zeros((4, 8), np.float32)],
+                        outputs=[np.zeros((4, 2), np.int32)])
+    assert kid.name == "seg"
+    assert kid.block == (4, 8, "float32")
+    assert kid.grid == (4, 2, "int32")
+    # same avals -> same id (dict key usable)
+    kid2 = kernel_id_for("seg", inputs=[np.ones((4, 8), np.float32)],
+                         outputs=[np.ones((4, 2), np.int32)])
+    assert kid == kid2 and hash(kid) == hash(kid2)
+    kid3 = kernel_id_for("seg", inputs=[np.zeros((4, 9), np.float32)])
+    assert kid3 != kid
+
+
+def test_store_roundtrip(tmp_path):
+    key = TaskKey("svc", ("--batch", "4"))
+    prof = Profiler(key)
+    kid = kernel_id_for("seg", inputs=[], outputs=[])
+    prof.start_run(); prof.record(kid, 0.5); prof.end_run()
+    data = ProfiledData()
+    data.load(prof.statistics())
+    path = os.path.join(tmp_path, "profiles.json")
+    save_profiles(path, data)
+    loaded = load_profiles(path)
+    assert loaded.predict_duration(key, kid) == pytest.approx(0.5)
+    assert key in loaded
+
+
+def test_load_missing_file_is_empty(tmp_path):
+    data = load_profiles(os.path.join(tmp_path, "nope.json"))
+    assert TaskKey("x") not in data

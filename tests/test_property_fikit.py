@@ -1,0 +1,177 @@
+"""Hypothesis property tests on the FIKIT system's invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fikit import best_prio_fit, fikit_procedure
+from repro.core.kernel_id import KernelID
+from repro.core.profiler import ProfiledData, TaskProfile
+from repro.core.queues import PriorityQueues
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+durations = st.floats(min_value=1e-4, max_value=0.05, allow_nan=False)
+gaps = st.floats(min_value=0.0, max_value=0.05, allow_nan=False)
+
+
+@st.composite
+def queue_entries(draw):
+    n = draw(st.integers(1, 20))
+    entries = []
+    for i in range(n):
+        prio = draw(st.integers(0, 9))
+        dur = draw(durations)
+        entries.append((f"t{i}", prio, dur))
+    return entries
+
+
+def build(entries):
+    pd = ProfiledData()
+    qs = PriorityQueues()
+    for name, prio, dur in entries:
+        key = TaskKey(name)
+        kid = KernelID(name + "_k")
+        prof = TaskProfile(key=key, runs=1)
+        prof.SK[kid] = dur
+        pd.load(prof)
+        qs.push(KernelRequest(task_key=key, kernel_id=kid, priority=prio))
+    return pd, qs
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 invariants
+# ---------------------------------------------------------------------------
+@given(queue_entries(), st.floats(min_value=1e-4, max_value=0.2))
+@settings(max_examples=200, deadline=None)
+def test_best_prio_fit_invariants(entries, idle):
+    pd, qs = build(entries)
+    n0 = len(qs)
+    req, dur = best_prio_fit(qs, idle, pd)
+    if req is None:
+        # nothing fits: verify no entry fits
+        assert all(not (d < idle) for _, _, d in entries) or all(
+            d >= idle for _, _, d in entries)
+        assert len(qs) == n0
+    else:
+        fits = [(p, d) for _, p, d in entries if d < idle]
+        best_prio = min(p for p, _ in fits)
+        # selected kernel is from the highest priority level with any fit
+        assert req.priority == best_prio
+        # and is the longest fitting one at that level
+        best_dur = max(d for p, d in fits if p == best_prio)
+        assert math.isclose(dur, best_dur, rel_tol=1e-12)
+        assert dur < idle
+        assert len(qs) == n0 - 1
+
+
+@given(queue_entries(), st.floats(min_value=1e-3, max_value=0.5))
+@settings(max_examples=100, deadline=None)
+def test_fikit_procedure_never_exceeds_gap(entries, idle):
+    pd, qs = build(entries)
+    launched = []
+    fikit_procedure(qs, TaskKey("hi"), KernelID("x"), idle, pd,
+                    launch=launched.append)
+    total = sum(pd.predict_duration(r.task_key, r.kernel_id)
+                for r in launched)
+    # with exact predictions, scheduled fill work never exceeds the gap
+    assert total <= idle + 1e-12
+    # greedy exhaustion: nothing left fits the remaining gap
+    rem = idle - total
+    nxt, d = best_prio_fit(qs, rem, pd)
+    assert nxt is None
+
+
+# ---------------------------------------------------------------------------
+# Simulator invariants
+# ---------------------------------------------------------------------------
+@st.composite
+def task_specs(draw):
+    n_tasks = draw(st.integers(1, 4))
+    specs = []
+    for t in range(n_tasks):
+        nk = draw(st.integers(1, 12))
+        prio = draw(st.integers(0, 9))
+        kid = KernelID(f"svc{t}_k")
+        kernels = [TraceKernel(kid, draw(durations), draw(gaps))
+                   for _ in range(nk)]
+        arrival = draw(st.floats(min_value=0, max_value=0.05))
+        inflight = draw(st.sampled_from([1, 1, 1, 8]))
+        specs.append(TaskSpec(TaskKey(f"svc{t}"), prio, kernels,
+                              arrival=arrival, max_inflight=inflight))
+    return specs
+
+
+def _check_conservation(specs, rep):
+    # every kernel executed exactly once
+    for ti, spec in enumerate(specs):
+        execs = [k for k in rep.timeline if k.task == ti]
+        assert len(execs) == len(spec.kernels)
+        assert sorted(k.seq for k in execs) == list(range(len(spec.kernels)))
+    # device serial: intervals never overlap
+    tl = sorted(rep.timeline, key=lambda k: k.start)
+    for a, b in zip(tl, tl[1:]):
+        assert b.start >= a.end - 1e-12
+    # all tasks completed
+    for r in rep.results:
+        assert r.completion >= r.arrival
+
+
+@given(task_specs(), st.sampled_from(list(Mode)))
+@settings(max_examples=80, deadline=None)
+def test_sim_conservation_all_modes(specs, mode):
+    pd = profile_tasks(specs, T=3, measurement_overhead=0.0)
+    rep = SimScheduler(specs, mode, pd).run()
+    _check_conservation(specs, rep)
+
+
+@given(task_specs())
+@settings(max_examples=50, deadline=None)
+def test_sim_deterministic(specs):
+    pd = profile_tasks(specs, T=2, measurement_overhead=0.0)
+    r1 = SimScheduler(specs, Mode.FIKIT, pd, jitter=0.03, seed=7).run()
+    r2 = SimScheduler(specs, Mode.FIKIT, pd, jitter=0.03, seed=7).run()
+    assert [k.__dict__ for k in r1.timeline] == \
+        [k.__dict__ for k in r2.timeline]
+
+
+@given(task_specs())
+@settings(max_examples=50, deadline=None)
+def test_exclusive_jct_equals_solo_for_first(specs):
+    """In EXCLUSIVE mode the earliest-arriving task runs unobstructed: a
+    synchronous client hits exactly its solo JCT; an async client can only
+    beat it (host gaps overlap device execution)."""
+    pd = ProfiledData()
+    rep = SimScheduler(specs, Mode.EXCLUSIVE, pd).run()
+    first = min(range(len(specs)), key=lambda i: (specs[i].arrival, i))
+    if specs[first].max_inflight == 1:
+        assert math.isclose(rep.jct(first), specs[first].solo_jct,
+                            rel_tol=1e-9, abs_tol=1e-12)
+    else:
+        assert rep.jct(first) <= specs[first].solo_jct + 1e-12
+
+
+@given(task_specs())
+@settings(max_examples=50, deadline=None)
+def test_fikit_prioritizes_highest(specs):
+    """With exact profiles and feedback, the unique highest-priority,
+    first-arriving task's JCT under FIKIT stays within overhead-2 bounds:
+    each own-gap can be overrun by at most pipeline_depth filler kernels
+    (non-preemptible, already queued)."""
+    pd = profile_tasks(specs, T=3, measurement_overhead=0.0)
+    rep = SimScheduler(specs, Mode.FIKIT, pd, pipeline_depth=1).run()
+    holder = min(range(len(specs)),
+                 key=lambda i: (specs[i].priority, specs[i].arrival, i))
+    # every other task's kernels are bounded in duration by their SK; the
+    # holder can be delayed per gap by at most ONE filler (depth=1) plus
+    # any task that arrived before it (bounded-latency, not starvation)
+    others_max = max((k.duration for i, s in enumerate(specs) if i != holder
+                      for k in s.kernels), default=0.0)
+    n_gaps = len(specs[holder].kernels)
+    bound = specs[holder].solo_jct + (n_gaps + 1) * others_max \
+        + sum(s.solo_jct for i, s in enumerate(specs)
+              if i != holder and s.arrival <= specs[holder].arrival) + 1e-9
+    assert rep.jct(holder) <= bound

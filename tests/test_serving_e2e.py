@@ -1,0 +1,58 @@
+"""End-to-end serving tests: real reduced models through the full
+measurement -> sharing lifecycle under every mode."""
+import statistics as st
+
+import pytest
+
+from repro.config import get_config
+from repro.core.scheduler import Mode
+from repro.serving import InferenceService, ServingSystem
+
+
+@pytest.fixture(scope="module")
+def services():
+    hi = InferenceService(get_config("qwen3-4b").reduced(), priority=0,
+                          batch=1, seq=24, host_gap=0.002)
+    lo = InferenceService(get_config("mamba2-2.7b").reduced(), priority=5,
+                          batch=2, seq=24)
+    return hi, lo
+
+
+@pytest.mark.parametrize("mode", [Mode.SHARING, Mode.FIKIT])
+def test_lifecycle_measure_then_share(services, mode):
+    hi, lo = services
+    with ServingSystem(mode, measure_runs=3) as sys_:
+        jm_hi = sys_.onboard(hi)
+        jm_lo = sys_.onboard(lo)
+        assert len(jm_hi) == 3 and all(j > 0 for j in jm_hi)
+        assert hi.key in sys_.profiles
+        prof = sys_.profiles.get(hi.key)
+        # segments: embed + 2 layers (same kernel id) + head = 3 unique ids
+        assert len(prof.unique_ids) == 3
+        assert prof.runs == 3
+        res = sys_.invoke_concurrent([
+            ("hi", hi, 3, 0.0, 0.005),
+            ("lo", lo, 3, 0.0, 0.0),
+        ])
+        assert len(res["hi"]) == 3 and len(res["lo"]) == 3
+        assert all(j > 0 for j in res["hi"] + res["lo"])
+
+
+def test_fikit_sharing_produces_fills_or_priority(services):
+    """Under FIKIT with a persistent low-priority stream, the engine either
+    fills gaps or serializes by priority — and the device never idles
+    forever (everything completes)."""
+    hi, lo = services
+    with ServingSystem(Mode.FIKIT, measure_runs=3) as sys_:
+        sys_.onboard(hi)
+        sys_.onboard(lo)
+        res = sys_.invoke_concurrent([
+            ("hi", hi, 4, 0.0, 0.01),
+            ("lo", lo, 4, 0.0, 0.0),
+        ])
+        assert len(res["hi"]) == 4
+        assert len(res["lo"]) == 4
+        # priority: mean high-priority JCT below mean low-priority JCT
+        # is typical but timing-dependent; assert both finite + recorded
+        assert st.mean(res["hi"]) > 0
+        assert sys_.engine.device_busy_time() > 0
