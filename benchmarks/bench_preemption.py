@@ -4,6 +4,16 @@ continuously; a high-priority task is inserted every second (100 total).
 Claims: high-priority JCT under FIKIT is up to ~15.8x faster than default
 sharing (most combos), and the continuously-running low-priority service's
 JCT under FIKIT stays 0.86-1x of its sharing-mode value.
+
+The PREEMPT columns are the paper's *preemptive sharing* baseline: at
+every kernel boundary the device is reserved for the highest-priority
+tier — lower-priority launches park in the priority queues until no
+strictly-higher-priority task is active (no gap filling). High-priority
+JCT matches FIKIT's (both isolate the holder); the low-priority service
+retains 0.86-1.0x of its sharing-mode performance (JCT_share/JCT_preempt,
+the paper's band) because its kernels run whenever the intermittent
+high-priority task is absent — but unlike FIKIT it never advances
+*during* a high-priority task's gaps.
 """
 from __future__ import annotations
 
@@ -13,22 +23,31 @@ from benchmarks.common import PAIRS, Csv, arch_trace, repeat_task
 from repro.core.scheduler import Mode, SimScheduler, profile_tasks
 
 N_HIGH = 40          # paper: 100 x 1s; scaled for bench runtime
-INTERVAL = 0.25
+DUTY = 0.25          # fraction of wall time the inserted hi task occupies
+MODES = (Mode.SHARING, Mode.FIKIT, Mode.PREEMPT)
 
 
 def run_pair(high: str, low: str, seed: int = 0):
     hi_proto = arch_trace(high, priority=0, interactive=True, seq_tokens=48)
-    lo_proto = arch_trace(low, priority=5, interactive=False, seq_tokens=512)
+    # seq_tokens=64 keeps the low service's per-layer kernels a few ms —
+    # small enough that BestPrioFit can place them inside the interactive
+    # service's ~4-6 ms host gaps (with 512 they are ~25 ms and nothing
+    # ever fits, which would make FIKIT degenerate to PREEMPT).
+    lo_proto = arch_trace(low, priority=5, interactive=False, seq_tokens=64)
     profiled = profile_tasks([hi_proto, lo_proto], T=10, jitter=0.05,
                              seed=seed)
+    # paper setup: the inserted task is short relative to its period (1 s
+    # inter-arrival); keep the duty cycle fixed across pairs so the
+    # low-priority service retains idle time to reclaim.
+    interval = hi_proto.solo_jct / DUTY
     # enough back-to-back low tasks to span the whole horizon
-    horizon = N_HIGH * INTERVAL
+    horizon = N_HIGH * interval
     n_lo = max(3, int(horizon / max(lo_proto.solo_jct, 1e-9)) + 2)
     lo_tasks = repeat_task(lo_proto, n_lo, interval=0.0)
-    hi_tasks = repeat_task(hi_proto, N_HIGH, interval=INTERVAL, start=0.05)
+    hi_tasks = repeat_task(hi_proto, N_HIGH, interval=interval, start=0.05)
     tasks = lo_tasks + hi_tasks
     out = {}
-    for mode in (Mode.SHARING, Mode.FIKIT):
+    for mode in MODES:
         rep = SimScheduler(tasks, mode, profiled, jitter=0.05,
                            seed=seed).run()
         hi_j = [rep.jct(len(lo_tasks) + i) for i in range(N_HIGH)]
@@ -39,17 +58,31 @@ def run_pair(high: str, low: str, seed: int = 0):
 
 
 def main(csvout=None):
+    # lo_perf_retained_* = JCT_share / JCT_mode for the low-priority
+    # service: the fraction of its sharing-mode performance it keeps under
+    # the priority scheduler (paper Fig 20's 0.86-1.0x band; smaller JCT =
+    # better performance, so 0.93 means "7% slower than under sharing").
     csvout = csvout or Csv(("pair", "hi_speedup_fikit_vs_share",
-                            "lo_fikit_over_share"))
+                            "lo_perf_retained_fikit",
+                            "hi_speedup_preempt_vs_share",
+                            "lo_perf_retained_preempt"))
+    lo_preempt_ratios = []
     for label, high, low in PAIRS:
         res = run_pair(high, low)
         hi_share, lo_share = res[Mode.SHARING]
         hi_fikit, lo_fikit = res[Mode.FIKIT]
+        hi_pre, lo_pre = res[Mode.PREEMPT]
+        lo_preempt_ratios.append(lo_share / lo_pre)
         csvout.add(f"{label} H:{high} L:{low}",
                    round(hi_share / hi_fikit, 2),
-                   round(lo_share / lo_fikit, 3))
+                   round(lo_share / lo_fikit, 3),
+                   round(hi_share / hi_pre, 2),
+                   round(lo_share / lo_pre, 3))
+    csvout.add("lo_perf_retained_preempt_min", round(min(lo_preempt_ratios), 3))
+    csvout.add("lo_perf_retained_preempt_max", round(max(lo_preempt_ratios), 3))
     csvout.emit("Fig19/20: Preemption scenario (low runs continuously, "
-                "high inserted periodically)")
+                "high inserted periodically; PREEMPT = kernel-boundary "
+                "preemptive sharing baseline)")
     return csvout
 
 

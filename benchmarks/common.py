@@ -107,26 +107,28 @@ def repeat_task(spec: TaskSpec, n: int, interval: float,
 
 
 def run_modes(tasks: List[TaskSpec], profiled, modes=(Mode.SHARING,
-              Mode.EXCLUSIVE, Mode.FIKIT), jitter: float = 0.03,
+              Mode.EXCLUSIVE, Mode.FIKIT, Mode.PREEMPT),
+              jitter: float = 0.03,
               seed: int = 0) -> Dict[Mode, object]:
     return {m: SimScheduler(tasks, m, profiled, jitter=jitter,
                             seed=seed).run() for m in modes}
 
 
 class Csv:
-    """Collects ``name,us_per_call,derived`` rows and prints CSV."""
+    """Collects rows keyed by name and prints CSV; rows shorter than the
+    header are right-padded so multi-column benches stay well-formed."""
 
     def __init__(self, header=("name", "us_per_call", "derived")):
         self.rows = []
         self.header = header
 
-    def add(self, name, us, derived=""):
-        self.rows.append((name, us, derived))
+    def add(self, name, *cols):
+        self.rows.append((name,) + cols)
 
     def emit(self, title: str):
         print(f"# {title}")
         w = csv.writer(sys.stdout)
         w.writerow(self.header)
         for r in self.rows:
-            w.writerow(r)
+            w.writerow(tuple(r) + ("",) * max(0, len(self.header) - len(r)))
         print()

@@ -30,7 +30,7 @@ print("profiled SK[A/layer] = %.3f ms, SG[A/layer] = %.3f ms"
 # ---- sharing phase: run both concurrently under each scheduling mode
 print(f"\nsolo JCTs: A={A.solo_jct*1e3:.1f} ms  B={B.solo_jct*1e3:.1f} ms\n")
 print(f"{'mode':<10} {'JCT_A':>9} {'JCT_B':>9} {'fills':>6} {'util':>6}")
-for mode in (Mode.EXCLUSIVE, Mode.SHARING, Mode.FIKIT):
+for mode in (Mode.EXCLUSIVE, Mode.SHARING, Mode.FIKIT, Mode.PREEMPT):
     rep = SimScheduler([A, B], mode, profiled, jitter=0.05, seed=1).run()
     print(f"{mode.value:<10} {rep.jct(0)*1e3:8.1f}m {rep.jct(1)*1e3:8.1f}m "
           f"{rep.fills:6d} {rep.utilization():6.2f}")
@@ -41,4 +41,6 @@ Reading the table:
 - EXCLUSIVE protects A but starves B.
 - FIKIT keeps A at ~solo JCT *and* advances B inside A's gaps
   (fills > 0, highest device utilization) — the paper's headline result.
+- PREEMPT (kernel-boundary preemptive sharing) also protects A, but B only
+  runs when A is absent: no gap fills, lower utilization than FIKIT.
 """)

@@ -2,9 +2,11 @@
 
 Kernel identification (paper §3.2), two-phase measurement/sharing profiling,
 priority queues Q0-Q9, Algorithm 1 (FIKIT procedure), Algorithm 2
-(BestPrioFit), real-time feedback (Fig 12), and the scheduler with
-EXCLUSIVE / SHARING / FIKIT execution modes over a serial device executor
-(discrete-event simulated or real wall-clock JAX execution).
+(BestPrioFit), real-time feedback (Fig 12), and ONE engine-agnostic
+scheduling state machine (``FikitPolicy``) with EXCLUSIVE / SHARING /
+FIKIT / PREEMPT execution modes, driven by two thin engines over a serial
+device executor: the discrete-event simulator (``SimScheduler``) and the
+real wall-clock JAX executor (``WallClockEngine``).
 """
 from repro.core.kernel_id import KernelID, kernel_id_for  # noqa: F401
 from repro.core.task import (  # noqa: F401
@@ -13,4 +15,5 @@ from repro.core.task import (  # noqa: F401
 from repro.core.profiler import Profiler, TaskProfile  # noqa: F401
 from repro.core.queues import PriorityQueues  # noqa: F401
 from repro.core.fikit import EPSILON, best_prio_fit, fikit_procedure  # noqa: F401
+from repro.core.policy import FikitPolicy  # noqa: F401
 from repro.core.scheduler import Mode, SimScheduler  # noqa: F401

@@ -4,9 +4,16 @@ Roles map 1:1 to the paper's deployment (§3.2):
 - ``HookClient``   (repro.core.client) — intercepts a service's segment
   dispatches, forwards KernelRequests to the scheduler (paper: LD_PRELOAD
   hook + UDP; here: in-process call + thread-safe queues).
-- ``WallClockEngine`` — the FIKIT scheduler process: priority queues,
-  BestPrioFit gap filling with real-time feedback, and the serial device
-  executor thread (the TPU/GPU analog: one program at a time, FIFO).
+- ``WallClockEngine`` — the FIKIT scheduler process: the serial device
+  executor thread (the TPU/GPU analog: one program at a time, FIFO) plus
+  the thread-safe shell around the shared scheduling core.
+
+ALL scheduling decisions — holder election, routing, gap open/close with
+real-time feedback, the bounded BestPrioFit fill loop, release-on-task-done,
+overshoot accounting, PREEMPT parking — live in
+``repro.core.policy.FikitPolicy``, the same state machine that drives the
+discrete-event simulator. This engine only adds what the simulator fakes:
+real threads, a lock, Futures, and ``time.perf_counter``.
 
 The device thread is the ONLY thread that touches the accelerator — it pops
 launched requests in FIFO order and runs their payload callables (jitted JAX
@@ -19,13 +26,12 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
-from repro.core.fikit import EPSILON, best_prio_fit
+from repro.core.fikit import EPSILON
+from repro.core.policy import FikitPolicy, Mode
 from repro.core.profiler import ProfiledData
-from repro.core.queues import PriorityQueues
-from repro.core.scheduler import Mode
 from repro.core.task import KernelRequest, TaskKey
 
 
@@ -37,15 +43,6 @@ class ExecRecord:
     filler: bool = False
 
 
-@dataclass
-class ActiveTask:
-    instance: int
-    key: TaskKey
-    priority: int
-    arrival: float
-    done: threading.Event = field(default_factory=threading.Event)
-
-
 class WallClockEngine:
     def __init__(self, mode: Mode = Mode.FIKIT,
                  profiled: Optional[ProfiledData] = None,
@@ -53,25 +50,18 @@ class WallClockEngine:
                  epsilon: float = EPSILON):
         self.mode = mode
         self.profiled = profiled or ProfiledData()
-        self.pipeline_depth = max(1, pipeline_depth)
-        self.feedback = feedback
-        self.epsilon = epsilon
 
         self._lock = threading.RLock()
-        self._queues = PriorityQueues()
+        self.policy = FikitPolicy(mode, self.profiled,
+                                  pipeline_depth=pipeline_depth,
+                                  feedback=feedback, epsilon=epsilon,
+                                  clock=time.perf_counter,
+                                  launch=self._device_launch)
         self._device_q: "queue.Queue" = queue.Queue()
         self._records: List[ExecRecord] = []
-        self._active: Dict[int, ActiveTask] = {}
         self._futures: Dict[int, Future] = {}      # req.uid -> Future
-        self._excl_cond = threading.Condition(self._lock)
-        self._excl_running: Optional[int] = None
-        self._excl_waiters: List[int] = []
-        # FIKIT gap state (guarded by _lock)
-        self._gap_open = False
-        self._gap_remaining = 0.0
-        self._gap_opened_at = 0.0
-        self._fills_in_flight = 0
-        self.fill_count = 0
+        self._admit_cond = threading.Condition(self._lock)
+        self._admitted: set = set()
         self._stop = False
         self._thread = threading.Thread(target=self._device_loop,
                                         daemon=True, name="fikit-device")
@@ -111,29 +101,29 @@ class WallClockEngine:
                 t1 = time.perf_counter()
                 fut.set_exception(e)
             with self._lock:
+                self._futures.pop(req.uid, None)   # resolved: stop pinning it
                 self._records.append(ExecRecord(req, t0, t1, filler))
-            self._on_kernel_end(req, filler)
+                if filler:
+                    self.policy.fill_complete()
+                self.policy.kernel_end(req.task_instance, req.kernel_id)
 
     # ----------------------------------------------------------- task control
     def task_begin(self, instance: int, key: TaskKey, priority: int) -> None:
         with self._lock:
-            at = ActiveTask(instance, key, priority, time.perf_counter())
-            self._active[instance] = at
-            if self.mode is Mode.EXCLUSIVE:
-                while self._excl_running is not None:
-                    self._excl_cond.wait()
-                self._excl_running = instance
+            if self.policy.task_begin(instance, key, priority):
+                return
+            # EXCLUSIVE: the policy parked us; wait for admission in the
+            # policy's FIFO begin order.
+            while instance not in self._admitted:
+                self._admit_cond.wait()
+            self._admitted.discard(instance)
 
     def task_end(self, instance: int) -> None:
         with self._lock:
-            self._active.pop(instance, None)
-            if self.mode is Mode.EXCLUSIVE and self._excl_running == instance:
-                self._excl_running = None
-                self._excl_cond.notify_all()
-            elif self.mode is Mode.FIKIT:
-                self._gap_open = False
-                self._gap_remaining = 0.0
-                self._release_new_holder()
+            admitted = self.policy.task_end(instance)
+            if admitted:
+                self._admitted.update(admitted)
+                self._admit_cond.notify_all()
 
     # --------------------------------------------------------------- routing
     def submit(self, req: KernelRequest) -> Future:
@@ -143,84 +133,27 @@ class WallClockEngine:
         req.submit_time = time.perf_counter()
         with self._lock:
             self._futures[req.uid] = fut
-            if self.mode is not Mode.FIKIT:
-                self._launch(req, fut)
-                return fut
-            holder = self._holder()
-            if holder is None or holder == req.task_instance:
-                if self._gap_open:                 # feedback: gap over
-                    self._gap_open = False
-                    self._gap_remaining = 0.0
-                self._launch(req, fut)
-            elif (self._active[req.task_instance].priority
-                  == self._active[holder].priority):
-                self._launch(req, fut)             # equal prio: FIFO
-            else:
-                self._queues.push(req)
-                self._try_fill()
+            self.policy.submit(req)
         return fut
 
-    def _launch(self, req: KernelRequest, fut: Optional[Future] = None,
-                filler: bool = False) -> None:
-        fut = fut if fut is not None else self._futures[req.uid]
+    def _device_launch(self, req: KernelRequest, filler: bool) -> None:
+        """Policy launch hook: push onto the serial device queue.
+
+        Always called with ``_lock`` held (every policy entry point is)."""
+        fut = self._futures.get(req.uid)
+        if fut is None:                            # pragma: no cover
+            fut = self._futures[req.uid] = Future()
         self._device_q.put((req, fut, filler))
 
-    # ------------------------------------------------------------- scheduler
-    def _holder(self) -> Optional[int]:
-        best = None
-        for inst, at in self._active.items():
-            if best is None or (at.priority, at.arrival, inst) < \
-                    (self._active[best].priority, self._active[best].arrival,
-                     best):
-                best = inst
-        return best
-
-    def _release_new_holder(self) -> None:
-        holder = self._holder()
-        if holder is None:
-            req = self._queues.pop_highest()
-            while req is not None:
-                self._launch(req)
-                req = self._queues.pop_highest()
-            return
-        hp = self._active[holder].priority
-        for req in list(self._queues):
-            if req.task_instance == holder or \
-                    self._active[req.task_instance].priority == hp:
-                self._queues.remove(req)
-                self._launch(req)
-
-    def _on_kernel_end(self, req: KernelRequest, filler: bool) -> None:
-        with self._lock:
-            if filler:
-                self._fills_in_flight -= 1
-            if self.mode is not Mode.FIKIT:
-                return
-            holder = self._holder()
-            if holder == req.task_instance and not filler:
-                predicted = self.profiled.predict_gap(req.task_key,
-                                                      req.kernel_id)
-                if predicted > self.epsilon:
-                    self._gap_open = True
-                    self._gap_remaining = predicted
-                    self._gap_opened_at = time.perf_counter()
-            self._try_fill()
-
-    def _try_fill(self) -> None:
-        if self.mode is not Mode.FIKIT or not self._gap_open:
-            return
-        while (self._fills_in_flight < self.pipeline_depth
-               and self._gap_remaining > 0.0):
-            req, fill_time = best_prio_fit(self._queues, self._gap_remaining,
-                                           self.profiled)
-            if fill_time == -1:
-                break
-            self._fills_in_flight += 1
-            self.fill_count += 1
-            self._gap_remaining -= fill_time
-            self._launch(req, filler=True)
-
     # ------------------------------------------------------------------ info
+    @property
+    def fill_count(self) -> int:
+        return self.policy.fill_count
+
+    @property
+    def overshoot_time(self) -> float:
+        return self.policy.overshoot_time
+
     def records(self) -> List[ExecRecord]:
         with self._lock:
             return list(self._records)

@@ -27,13 +27,24 @@ EPSILON = 1.0e-4  # 0.1 ms, paper §3.2 line 6-8 commentary
 def best_prio_fit(queues: PriorityQueues, idle_time: float,
                   profiled: ProfiledData,
                   ) -> Tuple[Optional[KernelRequest], float]:
-    """Algorithm 2: Sharing Stage Idling Gap Filling Policy."""
+    """Algorithm 2: Sharing Stage Idling Gap Filling Policy.
+
+    One deviation from the paper's pseudocode: within a single task
+    instance (one CUDA stream) only the OLDEST queued kernel is eligible.
+    A stream's kernels execute in issue order, so selecting kernel i+1 as
+    a filler while kernel i is still parked would reorder the stream —
+    and let a task retire with orphaned requests stuck in the queues."""
     best_kernel_time = -1.0
     best_kernel_req: Optional[KernelRequest] = None
     best_priority = -1
     with queues.lock():
+        seen_streams = set()
         for priority in range(queues.levels):          # highest -> lowest
-            for kernel_req in queues[priority]:        # every request here
+            for kernel_req in queues[priority]:        # FIFO within a level
+                stream = (kernel_req.task_key, kernel_req.task_instance)
+                if stream in seen_streams:
+                    continue                           # not head-of-stream
+                seen_streams.add(stream)
                 task_key = kernel_req.task_key
                 kernel_id = kernel_req.kernel_id
                 predicted = profiled.predict_duration(task_key, kernel_id)

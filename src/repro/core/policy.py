@@ -1,0 +1,313 @@
+"""Engine-agnostic FIKIT policy core — ONE scheduling state machine.
+
+The paper's scheduling contribution (priority queues, holder election,
+SG-gap prediction, BestPrioFit filling with real-time feedback) used to be
+implemented twice: once in the discrete-event ``SimScheduler`` and once in
+the threaded ``WallClockEngine``. ``FikitPolicy`` extracts the shared state
+machine so a scheduling decision can never drift between the two; both
+engines are now thin drivers over this class.
+
+Responsibilities owned by the policy (and ONLY by the policy):
+
+- holder election — the highest-priority active task, ties broken by
+  (arrival, instance id);
+- request routing — holder-direct launch, equal-priority FIFO sharing
+  (paper case C), or park in the priority queues Q0..Q9;
+- gap open/close with real-time feedback — a holder kernel's completion
+  opens the predicted SG[kid] gap (skipping gaps <= epsilon); the holder's
+  next actual submit closes it early (Fig 12), bounding prediction-error
+  propagation;
+- the bounded ``pipeline_depth`` BestPrioFit fill loop — at most
+  ``pipeline_depth`` fillers sit in the device queue at once;
+- release-on-task-done — when the holder retires, queued requests of the
+  new holder (and its equal-priority peers) are released; with no active
+  task the queues drain FIFO;
+- overshoot accounting — filler time past the actual gap end is the
+  paper's "overhead 2";
+- EXCLUSIVE admission — tasks serialized in begin order.
+
+Engine interface (dependency-injected, so the policy never touches a
+thread, an event heap, or a device):
+
+- ``clock()``   -> float      current time (sim: virtual now; wall: perf_counter)
+- ``launch(req, filler)``     put a request on the serial device queue
+
+Modes
+-----
+EXCLUSIVE — tasks serialized in arrival order; admission gated in
+            ``task_begin``/``task_end``.
+SHARING   — every submit launches immediately (default GPU sharing).
+FIKIT     — priority queues + SG-gap filling + feedback (the paper).
+PREEMPT   — kernel-boundary preemptive sharing (the paper's preemptive
+            baseline, Figs 19/20; cf. arXiv 2401.16529): while any
+            strictly-higher-priority task is active, lower-priority
+            submits are parked in the priority queues and released only
+            when no higher-priority task remains active. No gap filling —
+            the device is reserved for the high-priority tier, so
+            low-priority work advances only between high-priority tasks.
+            Kernels stay non-preemptible; preemption happens at kernel
+            launch boundaries (a running kernel always finishes).
+
+Decision trace
+--------------
+Every decision appends one tuple to ``self.trace``:
+
+    ("begin",  instance)            task became active
+    ("defer",  instance)            EXCLUSIVE admission parked the task
+    ("admit",  instance)            EXCLUSIVE admission released the task
+    ("end",    instance)            task retired
+    ("holder", instance | None)     holder transition (after begin/end)
+    ("launch", instance, seq)       direct launch (holder / sharing / FIFO)
+    ("queue",  instance, seq)       parked in the priority queues
+    ("fill",   instance, seq)       BestPrioFit gap fill launch
+    ("release", instance, seq)      released on holder retirement
+    ("drain",  instance, seq)       FIFO drain with no active task
+    ("gap_open",  instance, predicted)
+    ("gap_close", instance)
+
+The trace is what the differential tests compare between engines: identical
+scenario -> identical trace, by construction and by test.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.fikit import EPSILON, best_prio_fit
+from repro.core.kernel_id import KernelID
+from repro.core.profiler import ProfiledData
+from repro.core.queues import PriorityQueues
+from repro.core.task import KernelRequest, TaskKey
+
+
+class Mode(enum.Enum):
+    EXCLUSIVE = "exclusive"
+    SHARING = "sharing"
+    FIKIT = "fikit"
+    PREEMPT = "preempt"
+
+
+#: Modes that route through the priority queues.
+QUEUED_MODES = (Mode.FIKIT, Mode.PREEMPT)
+
+
+@dataclass
+class ActiveTask:
+    """Policy-side record of a running task instance."""
+    instance: int
+    key: TaskKey
+    priority: int
+    arrival: float
+
+
+class FikitPolicy:
+    """The FIKIT scheduling state machine, engine-agnostic.
+
+    Drivers call, in event order:
+
+    - ``task_begin(instance, key, priority)`` when a task starts; the
+      return value says whether the task may issue now (EXCLUSIVE gates
+      admission; every other mode admits immediately).
+    - ``submit(req)`` for every kernel request the client issues; the
+      policy either launches it (via the injected ``launch`` hook) or
+      parks it in the priority queues. Returns True iff launched.
+    - ``fill_complete()`` when a *filler* kernel finishes on the device
+      (frees a pipeline-depth slot, accrues overshoot).
+    - ``kernel_end(instance, kernel_id, ...)`` when any kernel finishes
+      (opens the holder's predicted gap, runs the fill loop).
+    - ``task_end(instance)`` when a task retires; returns the instances
+      newly admitted by EXCLUSIVE serialization (empty otherwise).
+    """
+
+    def __init__(self, mode: Mode,
+                 profiled: Optional[ProfiledData] = None, *,
+                 pipeline_depth: int = 2, feedback: bool = True,
+                 epsilon: float = EPSILON,
+                 clock: Callable[[], float] = lambda: 0.0,
+                 launch: Callable[[KernelRequest, bool], None] = None):
+        if launch is None:
+            raise TypeError("FikitPolicy requires a launch hook")
+        self.mode = mode
+        self.profiled = profiled or ProfiledData()
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.feedback = feedback
+        self.epsilon = epsilon
+        self._clock = clock
+        self._launch_hook = launch
+
+        self.queues = PriorityQueues()
+        self.active: Dict[int, ActiveTask] = {}
+        self.trace: List[Tuple] = []
+        # EXCLUSIVE admission state
+        self._excl_running: Optional[int] = None
+        self._excl_waiting: List[int] = []
+        # gap state
+        self.gap_open = False
+        self.gap_remaining = 0.0
+        self.gap_end_actual: Optional[float] = None
+        self.fills_in_flight = 0
+        self.fill_count = 0
+        self.overshoot_time = 0.0
+        self._last_holder: Optional[int] = None
+
+    # ------------------------------------------------------------- lifecycle
+    def task_begin(self, instance: int, key: TaskKey, priority: int,
+                   arrival: Optional[float] = None) -> bool:
+        """Register an active task. Returns True if it may issue now."""
+        if arrival is None:
+            arrival = self._clock()
+        self.active[instance] = ActiveTask(instance, key, priority, arrival)
+        self.trace.append(("begin", instance))
+        admitted = True
+        if self.mode is Mode.EXCLUSIVE:
+            if self._excl_running is None:
+                self._excl_running = instance
+            else:
+                self._excl_waiting.append(instance)
+                self.trace.append(("defer", instance))
+                admitted = False
+        self._note_holder()
+        return admitted
+
+    def task_end(self, instance: int) -> List[int]:
+        """Retire a task. Returns instances newly admitted (EXCLUSIVE)."""
+        self.active.pop(instance, None)
+        self.trace.append(("end", instance))
+        admitted: List[int] = []
+        if self.mode is Mode.EXCLUSIVE:
+            if self._excl_running == instance:
+                self._excl_running = None
+                if self._excl_waiting:
+                    nxt = self._excl_waiting.pop(0)
+                    self._excl_running = nxt
+                    self.trace.append(("admit", nxt))
+                    admitted.append(nxt)
+        elif self.mode in QUEUED_MODES:
+            self.gap_open = False
+            self.gap_remaining = 0.0
+            self._release_new_holder()
+        self._note_holder()
+        return admitted
+
+    # --------------------------------------------------------------- routing
+    def holder(self) -> Optional[int]:
+        """Highest-priority active task (ties: earliest arrival, then id)."""
+        best: Optional[ActiveTask] = None
+        for at in self.active.values():
+            if best is None or (at.priority, at.arrival, at.instance) < \
+                    (best.priority, best.arrival, best.instance):
+                best = at
+        return best.instance if best is not None else None
+
+    def submit(self, req: KernelRequest) -> bool:
+        """Route one kernel request. Returns True iff it launched."""
+        if self.mode not in QUEUED_MODES:
+            self._launch(req)
+            return True
+        holder = self.holder()
+        if holder is None or holder == req.task_instance:
+            if self.gap_open and holder == req.task_instance:
+                self._close_gap(holder)            # real-time feedback
+            self._launch(req)
+            return True
+        if (self.active[req.task_instance].priority
+                == self.active[holder].priority):
+            self._launch(req)                      # equal prio: FIFO (case C)
+            return True
+        self.queues.push(req)
+        self.trace.append(("queue", req.task_instance, req.seq_index))
+        self.try_fill()                            # Fig 7: scan on enqueue
+        return False
+
+    # ------------------------------------------------------------ completion
+    def fill_complete(self) -> None:
+        """A filler kernel finished: free its slot, account overshoot."""
+        self.fills_in_flight -= 1
+        now = self._clock()
+        if self.gap_end_actual is not None and now > self.gap_end_actual:
+            self.overshoot_time += now - self.gap_end_actual
+
+    def kernel_end(self, instance: int, kernel_id: KernelID, *,
+                   last: bool = False,
+                   actual_gap: Optional[float] = None) -> None:
+        """A kernel of ``instance`` finished on the device.
+
+        Call ``fill_complete()`` first when the finished kernel was a
+        filler. ``actual_gap`` is the true host gap following this kernel
+        when the driver knows it (the simulator does); it anchors overshoot
+        accounting. Wall-clock drivers pass None — the gap's actual end is
+        then pinned when the holder's next submit closes it.
+        """
+        if self.mode is not Mode.FIKIT:
+            return
+        if self.holder() == instance and not last:
+            at = self.active[instance]
+            predicted = self.profiled.predict_gap(at.key, kernel_id)
+            if predicted > self.epsilon:           # skip small gaps
+                self.gap_open = True
+                self.gap_remaining = predicted
+                self.gap_end_actual = (
+                    self._clock() + actual_gap
+                    if self.feedback and actual_gap is not None else None)
+                self.trace.append(("gap_open", instance, predicted))
+        self.try_fill()
+
+    # ------------------------------------------------------------ gap + fill
+    def _close_gap(self, holder: int) -> None:
+        self.gap_open = False
+        self.gap_remaining = 0.0
+        if self.feedback and self.gap_end_actual is None:
+            # wall-clock feedback: the holder's submit IS the gap's end
+            self.gap_end_actual = self._clock()
+        self.trace.append(("gap_close", holder))
+
+    def try_fill(self) -> None:
+        """Fill an open gap (Algorithm 1, incremental with feedback and a
+        bounded device-queue lookahead). PREEMPT never fills."""
+        if self.mode is not Mode.FIKIT or not self.gap_open:
+            return
+        while (self.fills_in_flight < self.pipeline_depth
+               and self.gap_remaining > 0.0):
+            req, fill_time = best_prio_fit(self.queues, self.gap_remaining,
+                                           self.profiled)
+            if fill_time == -1:
+                break
+            self.fills_in_flight += 1
+            self.fill_count += 1
+            self.gap_remaining -= fill_time
+            self._launch(req, filler=True, tag="fill")
+
+    def _release_new_holder(self) -> None:
+        holder = self.holder()
+        if holder is None:
+            req = self.queues.pop_highest()        # drain leftovers FIFO
+            while req is not None:
+                self._launch(req, tag="drain")
+                req = self.queues.pop_highest()
+            return
+        hp = self.active[holder].priority
+        with self.queues.lock():
+            for req in list(self.queues):
+                at = self.active.get(req.task_instance)
+                if req.task_instance == holder or \
+                        (at is not None and at.priority == hp):
+                    self.queues.remove(req)
+                    self._launch(req, tag="release")
+
+    # -------------------------------------------------------------- plumbing
+    def _launch(self, req: KernelRequest, filler: bool = False,
+                tag: str = "launch") -> None:
+        self.trace.append((tag, req.task_instance, req.seq_index))
+        self._launch_hook(req, filler)
+
+    def _note_holder(self) -> None:
+        h = self.holder()
+        if h != self._last_holder:
+            self._last_holder = h
+            self.trace.append(("holder", h))
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def queued(self) -> int:
+        return len(self.queues)

@@ -12,42 +12,34 @@ Models the paper's system (Figs 7, 8, 11, 12):
   high-priority co-tenant's JCT in default sharing mode (Fig 2 "Sharing 1").
 - The *device* executes launched kernels serially in launch (FIFO) order.
   Kernels are non-preemptible.
-- Modes:
-    EXCLUSIVE — tasks serialized in arrival order (paper "A,B Exclusive").
-    SHARING   — every issue launches immediately; kernels from different
-                tasks interleave FIFO (paper "default GPU sharing").
-    FIKIT     — priority queues + gap filling + feedback: the highest-
-                priority active task ("holder") launches directly; lower-
-                priority issues are queued (Q0-Q9); on each holder kernel
-                completion the predicted gap SG[kid] is filled via
-                BestPrioFit; the holder's next actual issue closes the gap
-                early (real-time feedback, Fig 12). At most
-                ``pipeline_depth`` fillers sit in the device queue at once —
-                fillers already queued when the gap closes early are the
-                paper's "overhead 2".
+- Modes (see ``repro.core.policy.Mode``): EXCLUSIVE, SHARING, FIKIT, and
+  PREEMPT (kernel-boundary preemptive sharing).
+
+ALL scheduling decisions — holder election, routing, gap open/close with
+feedback, the bounded fill loop, release-on-task-done, overshoot — live in
+``repro.core.policy.FikitPolicy``. This module is a thin driver: it owns
+the event heap, the client issue model, and the virtual device timeline,
+and hands every decision to the shared policy so the simulator and the
+wall-clock engine can never diverge.
 
 Determinism: the event heap is ordered by (time, seq); ties resolve by
 insertion order, so simulations are exactly reproducible.
 """
 from __future__ import annotations
 
-import enum
 import heapq
 import itertools
 import random as _random
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.fikit import EPSILON, best_prio_fit
+from repro.core.fikit import EPSILON
+from repro.core.policy import FikitPolicy, Mode
 from repro.core.profiler import ProfiledData, Profiler
-from repro.core.queues import PriorityQueues
 from repro.core.task import KernelRequest, TaskSpec
 
-
-class Mode(enum.Enum):
-    EXCLUSIVE = "exclusive"
-    SHARING = "sharing"
-    FIKIT = "fikit"
+__all__ = ["Mode", "KernelExec", "TaskResult", "SimReport", "SimScheduler",
+           "measure_task", "profile_tasks"]
 
 
 @dataclass
@@ -107,9 +99,6 @@ class SimScheduler:
         self.tasks = tasks
         self.mode = mode
         self.profiled = profiled or ProfiledData()
-        self.pipeline_depth = max(1, pipeline_depth)
-        self.feedback = feedback
-        self.epsilon = epsilon
         self.meas_ovh = measurement_overhead
         self.jitter = jitter
         self._rng = _random.Random(seed)
@@ -119,23 +108,18 @@ class SimScheduler:
         self.now = 0.0
         self.device_free = 0.0
         self.timeline: List[KernelExec] = []
-        self.queues = PriorityQueues()
         self.results = [TaskResult(arrival=t.arrival) for t in tasks]
         n = len(tasks)
         self._next_k = [0] * n          # next kernel index to issue
         self._done_k = [0] * n          # kernels completed
         self._issued = [0] * n
         self._pending_issue: List[Optional[int]] = [None] * n
-        self._active: set = set()
-        self._excl_queue: List[int] = []
-        self._excl_running: Optional[int] = None
-        # FIKIT gap state
-        self._gap_open = False
-        self._gap_remaining = 0.0
-        self._gap_end_actual: Optional[float] = None
-        self._fills_in_flight = 0
-        self._fill_count = 0
-        self._overshoot = 0.0
+        self.policy = FikitPolicy(mode, self.profiled,
+                                  pipeline_depth=pipeline_depth,
+                                  feedback=feedback, epsilon=epsilon,
+                                  clock=lambda: self.now,
+                                  launch=self._device_launch)
+        self.queues = self.policy.queues
 
     # ----------------------------------------------------------------- noise
     def _noisy(self, x: float) -> float:
@@ -153,19 +137,15 @@ class SimScheduler:
         while self._heap:
             self.now, _, kind, payload = heapq.heappop(self._heap)
             getattr(self, "_on_" + kind)(*payload)
-        return SimReport(self.results, self.timeline, fills=self._fill_count,
-                         overshoot_time=self._overshoot)
+        return SimReport(self.results, self.timeline,
+                         fills=self.policy.fill_count,
+                         overshoot_time=self.policy.overshoot_time)
 
     # --------------------------------------------------------------- clients
     def _on_arrival(self, ti: int) -> None:
-        self._active.add(ti)
-        if self.mode is Mode.EXCLUSIVE:
-            if self._excl_running is None:
-                self._excl_running = ti
-                self._on_issue(ti, 0)
-            else:
-                self._excl_queue.append(ti)
-        else:
+        task = self.tasks[ti]
+        if self.policy.task_begin(ti, task.key, task.priority,
+                                  arrival=self.results[ti].arrival):
             self._on_issue(ti, 0)
 
     def _on_issue(self, ti: int, ki: int) -> None:
@@ -191,28 +171,11 @@ class SimScheduler:
         if task.max_inflight > 1 and ki + 1 < len(task.kernels):
             self._push(self.now + self._noisy(task.kernels[ki].gap_after),
                        "issue", (ti, ki + 1))
-        self._route(req)
-
-    def _route(self, req: KernelRequest) -> None:
-        ti = req.task_instance
-        if self.mode is not Mode.FIKIT:
-            self._launch(req)
-            return
-        holder = self._holder()
-        task = self.tasks[ti]
-        if holder == ti:
-            if self._gap_open:                     # real-time feedback
-                self._gap_open = False
-                self._gap_remaining = 0.0
-            self._launch(req)
-        elif holder is not None and task.priority == self.tasks[holder].priority:
-            self._launch(req)                      # equal prio: FIFO (case C)
-        else:
-            self.queues.push(req)
-            self._try_fill()                       # Fig 7: scan on enqueue
+        self.policy.submit(req)
 
     # ---------------------------------------------------------------- device
-    def _launch(self, req: KernelRequest, filler: bool = False) -> None:
+    def _device_launch(self, req: KernelRequest, filler: bool) -> None:
+        """Policy launch hook: place the request on the serial device."""
         dur = self._noisy(float(req.payload)) * (1.0 + self.meas_ovh)
         start = max(self.now, self.device_free)
         end = start + dur
@@ -228,15 +191,12 @@ class SimScheduler:
         task = self.tasks[ti]
         self._done_k[ti] = ki + 1
         if filler:
-            self._fills_in_flight -= 1
-            if (self._gap_end_actual is not None
-                    and self.now > self._gap_end_actual):
-                self._overshoot += self.now - self._gap_end_actual
+            self.policy.fill_complete()
         last = ki == len(task.kernels) - 1
         if last:
             self.results[ti].completion = self.now
-            self._active.discard(ti)
-            self._on_task_done(ti)
+            for nxt in self.policy.task_end(ti):     # EXCLUSIVE admission
+                self._on_issue(nxt, 0)
         elif task.max_inflight == 1:
             # synchronous client: host consumes result, then issues next
             self._push(self.now + self._noisy(task.kernels[ki].gap_after),
@@ -245,76 +205,8 @@ class SimScheduler:
             nxt = self._pending_issue[ti]
             self._pending_issue[ti] = None
             self._issue(ti, nxt)                   # flight slot freed
-        if self.mode is Mode.FIKIT:
-            holder = self._holder()
-            if holder == ti and not last:
-                predicted = self.profiled.predict_gap(task.key,
-                                                      task.kernels[ki].kid)
-                if predicted > self.epsilon:       # skip small gaps
-                    self._gap_open = True
-                    self._gap_remaining = predicted
-                    self._gap_end_actual = (
-                        self.now + task.kernels[ki].gap_after
-                        if self.feedback else None)
-            self._try_fill()
-
-    def _on_task_done(self, ti: int) -> None:
-        if self.mode is Mode.EXCLUSIVE:
-            self._excl_running = None
-            if self._excl_queue:
-                nxt = self._excl_queue.pop(0)
-                self._excl_running = nxt
-                self._on_issue(nxt, 0)
-        elif self.mode is Mode.FIKIT:
-            self._gap_open = False
-            self._gap_remaining = 0.0
-            self._release_new_holder()
-
-    # ------------------------------------------------------------ FIKIT bits
-    def _holder(self) -> Optional[int]:
-        """Highest-priority active task (ties: earliest arrival, then id)."""
-        best = None
-        for ti in self._active:
-            if best is None:
-                best = ti
-                continue
-            a, b = self.tasks[ti], self.tasks[best]
-            if (a.priority, self.results[ti].arrival, ti) < \
-                    (b.priority, self.results[best].arrival, best):
-                best = ti
-        return best
-
-    def _release_new_holder(self) -> None:
-        holder = self._holder()
-        if holder is None:
-            req = self.queues.pop_highest()        # drain leftovers FIFO
-            while req is not None:
-                self._launch(req)
-                req = self.queues.pop_highest()
-            return
-        with self.queues.lock():
-            for req in list(self.queues):
-                if req.task_instance == holder or (
-                        self.tasks[req.task_instance].priority
-                        == self.tasks[holder].priority):
-                    self.queues.remove(req)
-                    self._launch(req)
-
-    def _try_fill(self) -> None:
-        """Fill an open gap (Algorithm 1, incremental with feedback and a
-        bounded device-queue lookahead)."""
-        if self.mode is not Mode.FIKIT or not self._gap_open:
-            return
-        while (self._fills_in_flight < self.pipeline_depth
-               and self._gap_remaining > 0.0):
-            req, fill_time = best_prio_fit(self.queues, self._gap_remaining,
-                                           self.profiled)
-            if fill_time == -1:
-                break
-            self._fills_in_flight += 1
-            self._fill_count += 1
-            self._gap_remaining -= fill_time
-            self._launch(req, filler=True)
+        self.policy.kernel_end(ti, task.kernels[ki].kid, last=last,
+                               actual_gap=task.kernels[ki].gap_after)
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,7 @@ import jax        # noqa: E402
 from repro.config import SHAPES, get_config          # noqa: E402
 from repro.launch.hlo_cost import (                   # noqa: E402
     bytes_accessed_corrected, collective_bytes_corrected,
-    dot_flops_corrected)
+    cost_analysis_dict, dot_flops_corrected)
 from repro.configs import ARCH_IDS                   # noqa: E402
 from repro.launch.mesh import make_production_mesh   # noqa: E402
 from repro.launch.steps import make_step             # noqa: E402
@@ -101,7 +101,7 @@ def run_one(arch: str, sname: str, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll, _ = collective_bytes(hlo)
     # trip-count-corrected totals (XLA cost analysis visits loop bodies

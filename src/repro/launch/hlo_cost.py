@@ -26,6 +26,19 @@ _DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
 
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to a flat dict.
+
+    Older jaxlibs return one dict; newer ones return a one-element list.
+    The first entry is the per-device program's analysis — taking it (not
+    summing) keeps the old single-dict semantics if a jaxlib ever returns
+    one entry per device. Callers should never have to care."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
@@ -142,7 +155,47 @@ _DOT_OUT = re.compile(r"%?[\w.\-]+\s*=\s*" + _TYPE + r"\s+dot\(")
 _VARDEF = re.compile(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*" + _TYPE + r"\s")
 _CONTRACT = re.compile(r"(?:lhs_contracting_dims|rhs_contracting_dims)="
                        r"{([\d,]*)}")
-_OPERANDS = re.compile(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+
+
+def _operand_refs(line: str) -> List[str]:
+    """Operand variable names of the op call on this line.
+
+    Handles both operand syntaxes XLA emits: bare refs (``dot(%a, %b)``)
+    and typed refs (``dot(f32[64,64]{1,0} %a, f32[64,64]{1,0} %b)``), the
+    latter possibly with tuple-typed operands containing nested parens —
+    hence the balanced-paren scan rather than a regex."""
+    m = _OPNAME.search(line)
+    if not m:
+        return []
+    start = m.end()                      # just past the opening '('
+    depth = 1
+    end = start
+    while end < len(line) and depth:
+        if line[end] == "(":
+            depth += 1
+        elif line[end] == ")":
+            depth -= 1
+        end += 1
+    args = line[start:end - 1]
+    refs = re.findall(r"%([\w.\-]+)", args)
+    if refs:
+        return refs
+    # no % sigils: split on TOP-LEVEL commas only (shape literals contain
+    # commas inside []/{}/()), then take each argument's last token
+    out, depth, seg = [], 0, []
+    for ch in args + ",":
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            toks = "".join(seg).split()
+            if toks:
+                out.append(toks[-1])
+            seg = []
+            continue
+        seg.append(ch)
+    return out
 
 
 def collective_bytes_corrected(hlo: str) -> Dict[str, float]:
@@ -185,7 +238,6 @@ _SKIP_OPS = re.compile(
     r"(get-tuple-element|tuple|parameter|constant|bitcast|after-all|"
     r"partition-id|replica-id|iota)\b")
 _OPNAME = re.compile(r"=\s*(?:\([^()]*\)|\S+)\s+([\w\-]+)\(")
-_ARGS = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
 
 
 def _control_computations(comps) -> Dict[str, int]:
@@ -235,11 +287,8 @@ def bytes_accessed_corrected(hlo: str) -> float:
                 continue
             out_bytes = _bytes_of(vm.group(2))
             opnd_bytes = 0
-            am = _ARGS.search(line[line.index("=") + 1:]) \
-                if "=" in line else None
-            if am:
-                for ref in re.findall(r"%([\w.\-]+)", am.group(1)):
-                    opnd_bytes += shapes_by_var.get(ref, 0)
+            for ref in _operand_refs(line):
+                opnd_bytes += shapes_by_var.get(ref, 0)
             total += (out_bytes + opnd_bytes) * m
     # add the entry computation itself (multiplier 1)
     comps2 = comps["__entry__"]
@@ -256,10 +305,8 @@ def bytes_accessed_corrected(hlo: str) -> float:
             continue
         out_bytes = _bytes_of(vm.group(2))
         opnd_bytes = 0
-        am = _ARGS.search(line[line.index("=") + 1:]) if "=" in line else None
-        if am:
-            for ref in re.findall(r"%([\w.\-]+)", am.group(1)):
-                opnd_bytes += shapes_by_var.get(ref, 0)
+        for ref in _operand_refs(line):
+            opnd_bytes += shapes_by_var.get(ref, 0)
         total += out_bytes + opnd_bytes
     return total
 
@@ -292,7 +339,7 @@ def dot_flops_corrected(hlo: str) -> float:
             if " dot(" not in line:
                 continue
             om = _DOT_OUT.search(line)
-            ops = _OPERANDS.search(line)
+            ops = _operand_refs(line)
             cm = _CONTRACT.search(line)
             if not (om and ops and cm):
                 continue
@@ -302,7 +349,7 @@ def dot_flops_corrected(hlo: str) -> float:
             out_elems = 1
             for d in out_shapes[0][1]:
                 out_elems *= d
-            lhs = shapes_by_var.get(ops.group(1), [])
+            lhs = shapes_by_var.get(ops[0], [])
             cdims = [int(d) for d in cm.group(1).split(",") if d]
             contract = 1
             for ci in cdims:

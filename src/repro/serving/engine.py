@@ -6,6 +6,13 @@ Lifecycle per the paper (Fig 3):
    loaded into the scheduler (measurement phase).
 2. All later invocations run in the sharing phase: kernel-ID identification
    only, priority queues + gap filling decide placement.
+
+Any scheduling ``Mode`` can host the system: FIKIT (the paper), SHARING
+(default GPU), EXCLUSIVE (serialized), or PREEMPT — kernel-boundary
+preemptive sharing, where a lower-priority service's dispatches park in
+the priority queues whenever any strictly-higher-priority invocation is
+active (no gap filling). All modes share one decision core,
+``repro.core.policy.FikitPolicy``.
 """
 from __future__ import annotations
 

@@ -8,6 +8,8 @@ from repro.core.profiler import ProfiledData, TaskProfile
 from repro.core.queues import PriorityQueues
 from repro.core.task import KernelRequest, TaskKey
 
+pytestmark = pytest.mark.fast
+
 
 def make_profiled(entries):
     """entries: {task_name: {kernel_name: (dur, gap)}}"""

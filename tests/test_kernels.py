@@ -12,6 +12,8 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.key(42)
 
 

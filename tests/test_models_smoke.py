@@ -6,6 +6,8 @@ Also checks decode-vs-forward consistency (the serving path is exact w.r.t.
 the teacher-forced path, up to fp32 noise; top-1 MoE routing is excluded
 from the tight bound because argmax flips are discontinuous).
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -13,6 +15,8 @@ import pytest
 from repro.config import SHAPES, get_config
 from repro.configs import ARCH_IDS
 from repro.models import api
+
+pytestmark = pytest.mark.slow
 
 BATCH, SEQ = 2, 32
 
@@ -65,6 +69,15 @@ def test_train_step_no_nans(arch):
 
 def test_prefill_decode_consistency(arch):
     cfg, params, batch = arch
+    if cfg.family == "moe":
+        # Expert-capacity drops depend on the routed token count, so the
+        # teacher-forced reference (T = B*S tokens) can drop a late token's
+        # expert contribution that single-token decode (T = B) keeps — a
+        # discontinuous dispatch artifact, not a decode bug (observed on
+        # deepseek-v2: the dropped assignment is exactly the compared last
+        # token of batch row 1). Compare with dropless capacity so the
+        # equivalence being tested is well-defined.
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
     logits_full, _ = api.forward(params, batch, cfg)
     if cfg.family in ("encdec", "vlm"):
         head, tokens = batch

@@ -10,6 +10,8 @@ from repro.config import ModelConfig
 from repro.models.layers import Maker
 from repro.models.moe import _capacity, _moe_ffn_block, moe_ffn_build
 
+pytestmark = pytest.mark.fast
+
 
 def make(cfg, key=0):
     return moe_ffn_build(Maker(jax.random.key(key), cfg.dtype), cfg)

@@ -9,6 +9,8 @@ from repro.core.profile_store import load_profiles, save_profiles
 from repro.core.profiler import ProfiledData, Profiler
 from repro.core.task import TaskKey
 
+pytestmark = pytest.mark.fast
+
 
 def test_sk_sg_kronecker_delta_means():
     """Reproduces the paper's worked example: kernel j appears twice per run

@@ -1,7 +1,10 @@
 """Hypothesis property tests on the FIKIT system's invariants."""
 import math
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.fikit import best_prio_fit, fikit_procedure
 from repro.core.kernel_id import KernelID

@@ -8,6 +8,8 @@ from repro.config import get_config
 from repro.core.scheduler import Mode
 from repro.serving import InferenceService, ServingSystem
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def services():

@@ -10,6 +10,8 @@ from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.data.pipeline import SyntheticTextPipeline
 from repro.optim.adamw import adamw_init, adamw_update, global_norm, schedule
 
+pytestmark = pytest.mark.fast
+
 
 def test_pipeline_deterministic_and_shaped():
     p1 = SyntheticTextPipeline(1000, batch=4, seq=32, seed=7)

@@ -6,6 +6,8 @@ from repro.core.kernel_id import KernelID
 from repro.core.scheduler import Mode, SimScheduler, profile_tasks
 from repro.core.task import TaskKey, TaskSpec, TraceKernel
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.fixture(scope="module")
 def scenario():

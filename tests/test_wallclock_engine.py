@@ -11,6 +11,8 @@ from repro.core.profiler import ProfiledData, Profiler
 from repro.core.scheduler import Mode
 from repro.core.task import TaskKey
 
+pytestmark = pytest.mark.fast
+
 
 def sleep_segments(name, n, dur, host_gap=0.0):
     def fn(state):
