@@ -1,21 +1,37 @@
 """Scheduler-path microbenchmarks: the paper's <5% overhead budget requires
 each scheduling decision to cost << one kernel launch (0.1-2 ms).
 
-Measures: KernelID construction, BestPrioFit over loaded queues, a full
-FIKIT fill decision, and profiler statistics reduction.
+Measures: KernelID construction, BestPrioFit decision latency as a function
+of queue depth (the indexed O(log n) path vs the O(n) reference scan — the
+asymptotic win this subsystem exists for), sustained fill-decision
+throughput, a full FIKIT fill decision, and profiler statistics reduction.
+
+Set BENCH_SMOKE=1 (CI) to cap the sweep at 4k waiting requests and shrink
+repetition counts.
+
+``main`` returns the Csv with a ``json_payload`` attribute —
+``benchmarks.run`` persists it as BENCH_scheduler_micro.json so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 from benchmarks.common import Csv
-from repro.core.fikit import best_prio_fit, fikit_procedure
+from repro.core.fikit import best_prio_fit, best_prio_fit_scan, \
+    fikit_procedure
 from repro.core.kernel_id import KernelID, kernel_id_for
 from repro.core.profiler import ProfiledData, Profiler, TaskProfile
 from repro.core.queues import PriorityQueues
 from repro.core.task import KernelRequest, TaskKey
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+# queue-depth scaling sweep: 64 -> 64k waiting requests
+DEPTHS = (64, 512, 4096) if SMOKE else (64, 512, 4096, 32768, 65536)
+SCAN_MAX_DEPTH = 4096          # the O(n) oracle gets too slow beyond this
 
 
 def _timeit(fn, n=2000):
@@ -26,34 +42,85 @@ def _timeit(fn, n=2000):
     return (time.perf_counter() - t0) / n * 1e6   # us
 
 
-def main(csvout=None):
-    csvout = csvout or Csv()
-    x = np.zeros((8, 128, 256), np.float32)
-    csvout.add("kernel_id_for(3d aval)",
-               round(_timeit(lambda: kernel_id_for("seg", [x, x])), 2),
-               "per dispatch (sharing stage)")
-
-    # queues with 64 waiting requests across priorities
+def _loaded_queues(depth: int):
+    """depth waiting requests, each its own stream, spread over Q0..Q9,
+    with profiled durations on a small grid (ties included)."""
     pd = ProfiledData()
     qs = PriorityQueues()
-    for i in range(64):
+    for i in range(depth):
         key = TaskKey(f"t{i}")
         kid = KernelID(f"k{i}")
         prof = TaskProfile(key=key, runs=1)
         prof.SK[kid] = 0.001 * (1 + i % 7)
         pd.load(prof)
-        qs.push(KernelRequest(task_key=key, kernel_id=kid, priority=i % 10))
+        qs.push(KernelRequest(task_key=key, kernel_id=kid, priority=i % 10,
+                              task_instance=i))
+    return pd, qs
 
-    def bpf():
-        r, d = best_prio_fit(qs, 0.0000001, pd)   # never fits: no dequeue
-        assert r is None
-    csvout.add("best_prio_fit(64 waiting, scan all)",
-               round(_timeit(bpf), 2), "per gap-fill decision")
+
+def _sweep(csvout):
+    """Per-decision best_prio_fit latency vs queue depth."""
+    sweep = {"depths": list(DEPTHS), "indexed_us": {}, "scan_us": {},
+             "indexed_decisions_per_sec": {}}
+    for depth in DEPTHS:
+        pd, qs = _loaded_queues(depth)
+        reps = 200 if SMOKE else 2000
+
+        def probe_nofit():
+            r, d = best_prio_fit(qs, 1e-7, pd)    # never fits: no dequeue
+            assert r is None
+        us = _timeit(probe_nofit, n=reps)
+        sweep["indexed_us"][depth] = round(us, 3)
+        csvout.add(f"best_prio_fit(indexed, {depth} waiting)",
+                   round(us, 2), "per gap-fill decision")
+
+        def probe_hit():
+            r, d = best_prio_fit(qs, 0.0025, pd)  # fits 0.001/0.002 heads
+            qs.push(r)                            # restore depth
+        us_hit = _timeit(probe_hit, n=reps)
+        sweep["indexed_decisions_per_sec"][depth] = round(1e6 / us_hit)
+        csvout.add(f"best_prio_fit(indexed, {depth} waiting, fit+dequeue)",
+                   round(us_hit, 2),
+                   f"{round(1e6 / us_hit):,} decisions/s")
+
+        if depth <= SCAN_MAX_DEPTH:
+            scan_reps = max(5, min(reps, 200_000 // depth))
+
+            def probe_scan():
+                r, d = best_prio_fit_scan(qs, 1e-7, pd)
+                assert r is None
+            us_scan = _timeit(probe_scan, n=scan_reps)
+            sweep["scan_us"][depth] = round(us_scan, 3)
+            csvout.add(f"best_prio_fit(reference scan, {depth} waiting)",
+                       round(us_scan, 2), "O(n) oracle")
+    lo, hi = DEPTHS[0], DEPTHS[-1]
+    growth = sweep["indexed_us"][hi] / max(sweep["indexed_us"][lo], 1e-9)
+    depth_ratio = hi / lo
+    sweep["latency_growth_64_to_max"] = round(growth, 2)
+    sweep["depth_ratio"] = depth_ratio
+    sweep["sublinear"] = growth < depth_ratio
+    csvout.add("indexed latency growth (depth x"
+               f"{depth_ratio:g})", round(growth, 2),
+               "sub-linear" if growth < depth_ratio else "LINEAR-OR-WORSE")
+    return sweep
+
+
+def main(csvout=None):
+    csvout = csvout or Csv()
+    x = np.zeros((8, 128, 256), np.float32)
+    kid_us = _timeit(lambda: kernel_id_for("seg", [x, x]))
+    csvout.add("kernel_id_for(3d aval)", round(kid_us, 2),
+               "per dispatch (sharing stage)")
+
+    sweep = _sweep(csvout)
+
+    pd, qs = _loaded_queues(64)
 
     def fill():
-        fikit_procedure(qs, TaskKey("t0"), KernelID("k0"), 0.0000001, pd,
+        fikit_procedure(qs, TaskKey("t0"), KernelID("k0"), 1e-7, pd,
                         launch=lambda r: None)
-    csvout.add("fikit_procedure(no fit)", round(_timeit(fill), 2), "")
+    fill_us = _timeit(fill)
+    csvout.add("fikit_procedure(no fit)", round(fill_us, 2), "")
 
     prof = Profiler(TaskKey("svc"))
     kid = KernelID("k")
@@ -63,11 +130,18 @@ def main(csvout=None):
             prof.record(kid, 0.001)
             prof.record_gap(0.001)
         prof.end_run()
+    stats_us = _timeit(lambda: prof.statistics(), n=50)
     csvout.add("profiler.statistics(100 runs x 50 kernels)",
-               round(_timeit(lambda: prof.statistics(), n=50), 2),
-               "offline, once per service")
+               round(stats_us, 2), "offline, once per service")
     csvout.emit("Scheduler-path microbenchmarks (decision cost must be "
                 "<< 0.1-2ms kernel launch)")
+    csvout.json_payload = {
+        "smoke": SMOKE,
+        "kernel_id_for_us": round(kid_us, 3),
+        "best_prio_fit_sweep": sweep,
+        "fikit_procedure_nofit_us": round(fill_us, 3),
+        "profiler_statistics_us": round(stats_us, 3),
+    }
     return csvout
 
 

@@ -2,11 +2,17 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip-wallclock]
 
-Prints ``name,value,derived`` CSV blocks per benchmark.
+Prints ``name,value,derived`` CSV blocks per benchmark. A benchmark whose
+``main()`` returns a Csv carrying a ``json_payload`` attribute also gets a
+machine-readable ``BENCH_<name>.json`` written next to the repo root, so
+perf trajectories (e.g. scheduler decision latency by queue depth) are
+tracked across PRs instead of living only in scrollback.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -38,7 +44,15 @@ def main(argv=None):
         t = time.time()
         try:
             mod = __import__(module, fromlist=["main"])
-            mod.main()
+            ret = mod.main()
+            payload = getattr(ret, "json_payload", None)
+            if payload is not None:
+                out = os.path.join(os.path.dirname(__file__), os.pardir,
+                                   f"BENCH_{name}.json")
+                out = os.path.normpath(out)
+                with open(out, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                print(f"wrote {out}")
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             print(f"BENCH FAIL {name}: {e}")

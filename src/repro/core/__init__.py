@@ -14,6 +14,10 @@ from repro.core.task import (  # noqa: F401
 )
 from repro.core.profiler import Profiler, TaskProfile  # noqa: F401
 from repro.core.queues import PriorityQueues  # noqa: F401
-from repro.core.fikit import EPSILON, best_prio_fit, fikit_procedure  # noqa: F401
-from repro.core.policy import FikitPolicy  # noqa: F401
+from repro.core.fikit import (  # noqa: F401
+    EPSILON, best_prio_fit, best_prio_fit_scan, fikit_procedure,
+)
+from repro.core.policy import (  # noqa: F401
+    FikitPolicy, ListTrace, NullTrace, RingTrace, make_trace_sink,
+)
 from repro.core.scheduler import Mode, SimScheduler  # noqa: F401

@@ -47,16 +47,19 @@ class WallClockEngine:
     def __init__(self, mode: Mode = Mode.FIKIT,
                  profiled: Optional[ProfiledData] = None,
                  pipeline_depth: int = 2, feedback: bool = True,
-                 epsilon: float = EPSILON):
+                 epsilon: float = EPSILON, trace: str = "list"):
         self.mode = mode
         self.profiled = profiled or ProfiledData()
 
         self._lock = threading.RLock()
+        # threaded driver: keep the queue lock; trace="off"/"ring" bounds
+        # the per-decision trace cost for long-running serving
         self.policy = FikitPolicy(mode, self.profiled,
                                   pipeline_depth=pipeline_depth,
                                   feedback=feedback, epsilon=epsilon,
                                   clock=time.perf_counter,
-                                  launch=self._device_launch)
+                                  launch=self._device_launch,
+                                  threadsafe=True, trace=trace)
         self._device_q: "queue.Queue" = queue.Queue()
         self._records: List[ExecRecord] = []
         self._futures: Dict[int, Future] = {}      # req.uid -> Future

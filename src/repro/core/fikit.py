@@ -1,16 +1,26 @@
-"""Algorithm 1 (FIKIT Procedure) and Algorithm 2 (BestPrioFit) — verbatim
-ports of the paper's pseudocode (Figs 9 and 10).
+"""Algorithm 1 (FIKIT Procedure) and Algorithm 2 (BestPrioFit) — the
+paper's pseudocode (Figs 9 and 10), with BestPrioFit served from the
+indexed priority queues in O(log n) per decision.
 
-Semantics preserved exactly:
+Semantics preserved exactly (and enforced by the differential tests in
+``tests/test_policy_differential.py`` against ``best_prio_fit_scan``):
 - BestPrioFit scans priorities 0..9; at the FIRST priority level containing
   any fitting kernel it selects the kernel with the LONGEST predicted
   duration that still fits the remaining idle time
   (``bestKernelTime < predictedKernelTime < idleTime``), dequeues it and
   returns it. Lower priority levels are not examined once a fit is found.
+  Ties on predicted duration resolve to the earliest-parked request, as in
+  the scan's first-seen-wins FIFO walk.
 - FIKIT looks up the predicted gap from profiled SG when idleTime == -1,
   skips gaps <= EPSILON (paper: 0.1 ms — a kernel launch costs 0.1-2 ms),
   then repeatedly calls BestPrioFit, launching every selected kernel and
   decrementing the remaining idle time, until nothing fits.
+
+One deviation from the paper's pseudocode (both implementations): within a
+single task instance (one CUDA stream) only the OLDEST queued kernel is
+eligible. A stream's kernels execute in issue order, so selecting kernel
+i+1 as a filler while kernel i is still parked would reorder the stream —
+and let a task retire with orphaned requests stuck in the queues.
 """
 from __future__ import annotations
 
@@ -29,14 +39,28 @@ def best_prio_fit(queues: PriorityQueues, idle_time: float,
                   ) -> Tuple[Optional[KernelRequest], float]:
     """Algorithm 2: Sharing Stage Idling Gap Filling Policy.
 
-    One deviation from the paper's pseudocode: within a single task
-    instance (one CUDA stream) only the OLDEST queued kernel is eligible.
-    A stream's kernels execute in issue order, so selecting kernel i+1 as
-    a filler while kernel i is still parked would reorder the stream —
-    and let a task retire with orphaned requests stuck in the queues."""
+    Indexed fast path: first non-empty level -> predecessor search for the
+    longest stream-head under ``idle_time`` in that level's duration index.
+    O(levels * log n) per decision instead of O(total queued); dequeue of
+    the selected request is O(log n) index maintenance.
+    """
+    with queues.lock():
+        queues.ensure_index(profiled)
+        req, dur = queues.best_fit_under(idle_time)
+        if req is not None:
+            queues.remove(req)
+    return req, dur
+
+
+def best_prio_fit_scan(queues: PriorityQueues, idle_time: float,
+                       profiled: ProfiledData,
+                       ) -> Tuple[Optional[KernelRequest], float]:
+    """Reference oracle: the original O(total queued) linear scan.
+
+    Kept verbatim so the differential tests can assert the indexed fast
+    path makes bit-identical decisions; never used on the hot path."""
     best_kernel_time = -1.0
     best_kernel_req: Optional[KernelRequest] = None
-    best_priority = -1
     with queues.lock():
         seen_streams = set()
         for priority in range(queues.levels):          # highest -> lowest
@@ -51,11 +75,10 @@ def best_prio_fit(queues: PriorityQueues, idle_time: float,
                 if best_kernel_time < predicted < idle_time:
                     best_kernel_time = predicted
                     best_kernel_req = kernel_req
-                    best_priority = priority
             if best_kernel_time > 0:
                 break      # longest fit found at this priority level
         if best_kernel_req is not None:
-            queues[best_priority].remove(best_kernel_req)
+            queues.remove(best_kernel_req)
     return best_kernel_req, best_kernel_time
 
 

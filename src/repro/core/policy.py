@@ -10,7 +10,9 @@ engines are now thin drivers over this class.
 Responsibilities owned by the policy (and ONLY by the policy):
 
 - holder election — the highest-priority active task, ties broken by
-  (arrival, instance id);
+  (arrival, instance id); the election result is CACHED and revalidated
+  only on ``task_begin``/``task_end`` (the only events that can change
+  it), so the per-submit/per-kernel-end ``holder()`` probe is O(1);
 - request routing — holder-direct launch, equal-priority FIFO sharing
   (paper case C), or park in the priority queues Q0..Q9;
 - gap open/close with real-time feedback — a holder kernel's completion
@@ -67,14 +69,31 @@ Every decision appends one tuple to ``self.trace``:
 
 The trace is what the differential tests compare between engines: identical
 scenario -> identical trace, by construction and by test.
+
+The trace destination is a pluggable sink (``trace=`` ctor arg):
+
+    "list" (default) — ``ListTrace``, an unbounded list; what tests diff.
+    "ring"           — ``RingTrace``, a bounded ring buffer keeping the
+                       most recent ``DEFAULT_RING`` entries (long-running
+                       serving with bounded memory); an int selects a
+                       custom capacity.
+    "off"            — ``NullTrace``; tracing is skipped entirely (the
+                       append AND the tuple construction), so production
+                       mode pays nothing per decision.
+    any object with ``.append``   — custom sink. ``enabled`` is read ONCE
+                       at policy construction: a sink carrying
+                       ``enabled = False`` before the policy is built
+                       suppresses tuple construction; flipping it later
+                       has no effect.
 """
 from __future__ import annotations
 
 import enum
+from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
-from repro.core.fikit import EPSILON, best_prio_fit
+from repro.core.fikit import EPSILON, best_prio_fit, best_prio_fit_scan
 from repro.core.kernel_id import KernelID
 from repro.core.profiler import ProfiledData
 from repro.core.queues import PriorityQueues
@@ -90,6 +109,50 @@ class Mode(enum.Enum):
 
 #: Modes that route through the priority queues.
 QUEUED_MODES = (Mode.FIKIT, Mode.PREEMPT)
+
+#: Default capacity of a ``trace="ring"`` sink.
+DEFAULT_RING = 4096
+
+
+class ListTrace(list):
+    """Unbounded in-memory decision trace (the default; what tests diff)."""
+    enabled = True
+
+
+class RingTrace(deque):
+    """Bounded ring buffer: keeps the most recent ``maxlen`` decisions."""
+    enabled = True
+
+
+class NullTrace:
+    """Disabled trace: every decision costs nothing (no tuple is built)."""
+    enabled = False
+
+    def append(self, item) -> None:  # pragma: no cover - never called hot
+        pass
+
+    def __len__(self) -> int:
+        return 0
+
+    def __iter__(self):
+        return iter(())
+
+
+TraceSpec = Union[str, int, ListTrace, RingTrace, NullTrace]
+
+
+def make_trace_sink(spec: TraceSpec = "list"):
+    if spec == "list" or spec is None:
+        return ListTrace()
+    if spec == "off":
+        return NullTrace()
+    if spec == "ring":
+        return RingTrace(maxlen=DEFAULT_RING)
+    if isinstance(spec, int):
+        return RingTrace(maxlen=spec)
+    if hasattr(spec, "append"):
+        return spec
+    raise ValueError(f"unknown trace sink spec: {spec!r}")
 
 
 @dataclass
@@ -118,6 +181,13 @@ class FikitPolicy:
       (opens the holder's predicted gap, runs the fill loop).
     - ``task_end(instance)`` when a task retires; returns the instances
       newly admitted by EXCLUSIVE serialization (empty otherwise).
+
+    ``threadsafe=False`` elides the priority-queue RLock for
+    single-threaded drivers (the simulator); the threaded wall-clock
+    engine keeps it. ``reference=True`` switches BOTH fast paths back to
+    their O(n) reference implementations (linear-scan BestPrioFit,
+    re-elected holder on every probe) — the oracle the differential tests
+    compare the indexed/cached path against.
     """
 
     def __init__(self, mode: Mode,
@@ -125,7 +195,10 @@ class FikitPolicy:
                  pipeline_depth: int = 2, feedback: bool = True,
                  epsilon: float = EPSILON,
                  clock: Callable[[], float] = lambda: 0.0,
-                 launch: Callable[[KernelRequest, bool], None] = None):
+                 launch: Callable[[KernelRequest, bool], None] = None,
+                 threadsafe: bool = True,
+                 trace: TraceSpec = "list",
+                 reference: bool = False):
         if launch is None:
             raise TypeError("FikitPolicy requires a launch hook")
         self.mode = mode
@@ -135,10 +208,14 @@ class FikitPolicy:
         self.epsilon = epsilon
         self._clock = clock
         self._launch_hook = launch
+        self.reference = reference
+        self._fit = best_prio_fit_scan if reference else best_prio_fit
 
-        self.queues = PriorityQueues()
+        self.queues = PriorityQueues(profiled=self.profiled,
+                                     threadsafe=threadsafe)
         self.active: Dict[int, ActiveTask] = {}
-        self.trace: List[Tuple] = []
+        self.trace = make_trace_sink(trace)
+        self._trace_on = getattr(self.trace, "enabled", True)
         # EXCLUSIVE admission state
         self._excl_running: Optional[int] = None
         self._excl_waiting: List[int] = []
@@ -149,7 +226,9 @@ class FikitPolicy:
         self.fills_in_flight = 0
         self.fill_count = 0
         self.overshoot_time = 0.0
-        self._last_holder: Optional[int] = None
+        self.spurious_fill_completions = 0
+        self._holder: Optional[int] = None       # cached election result
+        self._last_holder: Optional[int] = None  # last traced transition
 
     # ------------------------------------------------------------- lifecycle
     def task_begin(self, instance: int, key: TaskKey, priority: int,
@@ -158,14 +237,23 @@ class FikitPolicy:
         if arrival is None:
             arrival = self._clock()
         self.active[instance] = ActiveTask(instance, key, priority, arrival)
-        self.trace.append(("begin", instance))
+        # incremental holder cache update: the newcomer takes over iff it
+        # beats the incumbent in (priority, arrival, instance) order
+        cur = self.active.get(self._holder) if self._holder is not None \
+            else None
+        if cur is None or (priority, arrival, instance) < \
+                (cur.priority, cur.arrival, cur.instance):
+            self._holder = instance
+        if self._trace_on:
+            self.trace.append(("begin", instance))
         admitted = True
         if self.mode is Mode.EXCLUSIVE:
             if self._excl_running is None:
                 self._excl_running = instance
             else:
                 self._excl_waiting.append(instance)
-                self.trace.append(("defer", instance))
+                if self._trace_on:
+                    self.trace.append(("defer", instance))
                 admitted = False
         self._note_holder()
         return admitted
@@ -173,7 +261,10 @@ class FikitPolicy:
     def task_end(self, instance: int) -> List[int]:
         """Retire a task. Returns instances newly admitted (EXCLUSIVE)."""
         self.active.pop(instance, None)
-        self.trace.append(("end", instance))
+        if instance == self._holder:             # invalidate cache: re-elect
+            self._holder = self._elect_holder()
+        if self._trace_on:
+            self.trace.append(("end", instance))
         admitted: List[int] = []
         if self.mode is Mode.EXCLUSIVE:
             if self._excl_running == instance:
@@ -181,7 +272,8 @@ class FikitPolicy:
                 if self._excl_waiting:
                     nxt = self._excl_waiting.pop(0)
                     self._excl_running = nxt
-                    self.trace.append(("admit", nxt))
+                    if self._trace_on:
+                        self.trace.append(("admit", nxt))
                     admitted.append(nxt)
         elif self.mode in QUEUED_MODES:
             self.gap_open = False
@@ -191,14 +283,21 @@ class FikitPolicy:
         return admitted
 
     # --------------------------------------------------------------- routing
-    def holder(self) -> Optional[int]:
-        """Highest-priority active task (ties: earliest arrival, then id)."""
+    def _elect_holder(self) -> Optional[int]:
+        """Full election: highest-priority active task (ties: earliest
+        arrival, then id). O(active); runs only on begin/end."""
         best: Optional[ActiveTask] = None
         for at in self.active.values():
             if best is None or (at.priority, at.arrival, at.instance) < \
                     (best.priority, best.arrival, best.instance):
                 best = at
         return best.instance if best is not None else None
+
+    def holder(self) -> Optional[int]:
+        """Current holder — cached; O(1) on the submit/kernel_end path."""
+        if self.reference:
+            return self._elect_holder()
+        return self._holder
 
     def submit(self, req: KernelRequest) -> bool:
         """Route one kernel request. Returns True iff it launched."""
@@ -216,13 +315,25 @@ class FikitPolicy:
             self._launch(req)                      # equal prio: FIFO (case C)
             return True
         self.queues.push(req)
-        self.trace.append(("queue", req.task_instance, req.seq_index))
+        if self._trace_on:
+            self.trace.append(("queue", req.task_instance, req.seq_index))
         self.try_fill()                            # Fig 7: scan on enqueue
         return False
 
     # ------------------------------------------------------------ completion
     def fill_complete(self) -> None:
-        """A filler kernel finished: free its slot, account overshoot."""
+        """A filler kernel finished: free its slot, account overshoot.
+
+        A spurious/double completion callback (an engine bug, or a device
+        thread racing a retry) must not drive ``fills_in_flight`` negative
+        — that would widen the pipeline-depth bound for the rest of the
+        run. Clamp at zero and count the event instead."""
+        if self.fills_in_flight <= 0:
+            # the clamp below keeps this invariant; assert documents it
+            assert self.fills_in_flight == 0, \
+                "fills_in_flight must never go negative"
+            self.spurious_fill_completions += 1
+            return
         self.fills_in_flight -= 1
         now = self._clock()
         if self.gap_end_actual is not None and now > self.gap_end_actual:
@@ -250,7 +361,8 @@ class FikitPolicy:
                 self.gap_end_actual = (
                     self._clock() + actual_gap
                     if self.feedback and actual_gap is not None else None)
-                self.trace.append(("gap_open", instance, predicted))
+                if self._trace_on:
+                    self.trace.append(("gap_open", instance, predicted))
         self.try_fill()
 
     # ------------------------------------------------------------ gap + fill
@@ -260,7 +372,8 @@ class FikitPolicy:
         if self.feedback and self.gap_end_actual is None:
             # wall-clock feedback: the holder's submit IS the gap's end
             self.gap_end_actual = self._clock()
-        self.trace.append(("gap_close", holder))
+        if self._trace_on:
+            self.trace.append(("gap_close", holder))
 
     def try_fill(self) -> None:
         """Fill an open gap (Algorithm 1, incremental with feedback and a
@@ -269,8 +382,8 @@ class FikitPolicy:
             return
         while (self.fills_in_flight < self.pipeline_depth
                and self.gap_remaining > 0.0):
-            req, fill_time = best_prio_fit(self.queues, self.gap_remaining,
-                                           self.profiled)
+            req, fill_time = self._fit(self.queues, self.gap_remaining,
+                                       self.profiled)
             if fill_time == -1:
                 break
             self.fills_in_flight += 1
@@ -298,14 +411,16 @@ class FikitPolicy:
     # -------------------------------------------------------------- plumbing
     def _launch(self, req: KernelRequest, filler: bool = False,
                 tag: str = "launch") -> None:
-        self.trace.append((tag, req.task_instance, req.seq_index))
+        if self._trace_on:
+            self.trace.append((tag, req.task_instance, req.seq_index))
         self._launch_hook(req, filler)
 
     def _note_holder(self) -> None:
         h = self.holder()
         if h != self._last_holder:
             self._last_holder = h
-            self.trace.append(("holder", h))
+            if self._trace_on:
+                self.trace.append(("holder", h))
 
     # ---------------------------------------------------------------- stats
     @property

@@ -41,7 +41,7 @@ class Profiler:
 
         prof.start_run()
         prof.record(kid, duration)          # kernel executed
-        prof.record_gap(kid, gap)           # idle observed after kid
+        prof.record_gap(gap)                # idle observed after last kid
         prof.end_run()
         ...
         profile = prof.statistics()
@@ -103,13 +103,36 @@ class Profiler:
 
 class ProfiledData:
     """The scheduler's global loaded profile (Algorithm 1 ``ProfiledData``):
-    TaskKey -> TaskProfile."""
+    TaskKey -> TaskProfile.
+
+    Predictions are served from flat ``(TaskKey, KernelID) -> float`` dicts
+    rebuilt on ``load()``, so the per-decision hot path
+    (``predict_duration``/``predict_gap``) is ONE dict probe instead of a
+    TaskKey lookup followed by a KernelID lookup. ``version`` increments on
+    every ``load()`` — the priority-queue duration index keys its cache
+    validity on it. Mutating a ``TaskProfile``'s SK/SG dicts after loading
+    is not seen until the profile is loaded again.
+    """
 
     def __init__(self):
         self._by_key: Dict[TaskKey, TaskProfile] = {}
+        self._sk: Dict[Tuple[TaskKey, KernelID], float] = {}
+        self._sg: Dict[Tuple[TaskKey, KernelID], float] = {}
+        self.version = 0
 
     def load(self, profile: TaskProfile) -> None:
+        prev = self._by_key.get(profile.key)
+        if prev is not None:
+            for kid in prev.SK:
+                self._sk.pop((profile.key, kid), None)
+            for kid in prev.SG:
+                self._sg.pop((profile.key, kid), None)
         self._by_key[profile.key] = profile
+        for kid, v in profile.SK.items():
+            self._sk[(profile.key, kid)] = v
+        for kid, v in profile.SG.items():
+            self._sg[(profile.key, kid)] = v
+        self.version += 1
 
     def get(self, key: TaskKey) -> Optional[TaskProfile]:
         return self._by_key.get(key)
@@ -118,9 +141,7 @@ class ProfiledData:
         return key in self._by_key
 
     def predict_duration(self, key: TaskKey, kid: KernelID) -> float:
-        p = self._by_key.get(key)
-        return p.predict_duration(kid) if p else -1.0
+        return self._sk.get((key, kid), -1.0)
 
     def predict_gap(self, key: TaskKey, kid: KernelID) -> float:
-        p = self._by_key.get(key)
-        return p.predict_gap(kid) if p else 0.0
+        return self._sg.get((key, kid), 0.0)

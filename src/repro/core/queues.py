@@ -1,61 +1,238 @@
 """Priority queues Q0..Q9 (paper Fig 7): the scheduler scans queues from
-highest (Q0) to lowest (Q9); within a queue, requests keep FIFO order."""
+highest (Q0) to lowest (Q9); within a queue, requests keep FIFO order.
+
+Indexed representation
+----------------------
+The paper's <5% overhead budget means each scheduling decision must cost
+far less than a 0.1-2 ms kernel launch, at production queue depths. The
+naive structure (one deque per level, linear scans everywhere) makes
+``best_prio_fit`` O(total queued) per fill decision. Each level therefore
+maintains three coupled views:
+
+- ``fifo``     — OrderedDict uid -> request: park order; O(1) push, O(1)
+  remove-by-request, O(1) oldest (``pop_highest``/``peek_highest``).
+- ``streams``  — (task_key, instance) -> deque of that stream's parked
+  requests in seq order. Only the *head* of a stream is eligible for gap
+  filling (a CUDA stream's kernels must reach the device in issue order),
+  so the fill decision only ever looks at one request per stream.
+- ``index``    — bisect-sorted list of ``(predicted_duration, -push_seq,
+  uid)`` over the level's stream heads. "Longest head that still fits the
+  idle gap" is a predecessor search: O(log n) comparisons. Ties on
+  duration resolve to the earliest-parked head (``-push_seq``), matching
+  the reference scan's first-seen-wins behavior exactly.
+
+Predicted durations come from a bound ``ProfiledData``; the binding is
+lazy (first indexed decision) and keyed on ``ProfiledData.version`` so a
+profile (re)load invalidates cached durations and triggers one O(n log n)
+rebuild instead of serving stale predictions.
+
+A request's priority must be fixed while parked (it is: priority is a
+property of the owning task), so a stream never spans levels and
+per-level stream heads are exactly the global stream heads.
+
+``threadsafe=False`` elides the RLock (a no-op context manager) for
+single-threaded drivers like the discrete-event simulator; the threaded
+wall-clock engine keeps the real lock.
+"""
 from __future__ import annotations
 
+import itertools
 import threading
-from collections import deque
-from typing import Iterator, List, Optional
+from bisect import bisect_left, insort
+from collections import OrderedDict, deque
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core.task import NUM_PRIORITIES, KernelRequest
 
+#: sentinel: ``ProfiledData.predict_duration`` returns -1.0 for unprofiled
+#: kernels; the reference scan's ``best > -1.0`` guard excludes exactly
+#: those, and the indexed predecessor search must agree.
+_UNPROFILED = -1.0
+
+
+class _NullLock:
+    """No-op reentrant context manager for single-threaded fast paths."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_LOCK = _NullLock()
+
+
+class _Level:
+    """One priority level's coupled FIFO / stream / duration-index views."""
+
+    __slots__ = ("fifo", "seq", "streams", "index", "indexed")
+
+    def __init__(self):
+        self.fifo: "OrderedDict[int, KernelRequest]" = OrderedDict()
+        self.seq: Dict[int, int] = {}              # uid -> push sequence
+        self.streams: Dict[tuple, deque] = {}      # stream -> parked reqs
+        self.index: List[Tuple[float, int, int]] = []
+        self.indexed: Dict[int, Tuple[float, int, int]] = {}
+
+
+def _stream_of(req: KernelRequest) -> tuple:
+    return (req.task_key, req.task_instance)
+
 
 class PriorityQueues:
-    def __init__(self, levels: int = NUM_PRIORITIES):
+    def __init__(self, levels: int = NUM_PRIORITIES, *,
+                 profiled=None, threadsafe: bool = True):
         self.levels = levels
-        self._qs: List[deque] = [deque() for _ in range(levels)]
-        self._lock = threading.RLock()
+        self._levels: List[_Level] = [_Level() for _ in range(levels)]
+        self._size = 0
+        self._lock = threading.RLock() if threadsafe else _NULL_LOCK
+        self._push_seq = itertools.count()
+        self._profiled = profiled
+        self._version = profiled.version if profiled is not None else -1
 
+    # -------------------------------------------------------------- mutation
     def push(self, req: KernelRequest) -> None:
         with self._lock:
-            self._qs[req.priority].append(req)
-
-    def __getitem__(self, priority: int) -> deque:
-        return self._qs[priority]
+            lvl = self._levels[req.priority]
+            seq = next(self._push_seq)
+            lvl.fifo[req.uid] = req
+            lvl.seq[req.uid] = seq
+            stream = _stream_of(req)
+            dq = lvl.streams.get(stream)
+            if dq is None:
+                dq = lvl.streams[stream] = deque()
+            dq.append(req)
+            if len(dq) == 1 and self._profiled is not None:
+                self._index_head(lvl, req, seq)
+            self._size += 1
 
     def remove(self, req: KernelRequest) -> None:
         with self._lock:
-            self._qs[req.priority].remove(req)
+            self._remove(req)
 
     def pop_highest(self) -> Optional[KernelRequest]:
-        """FIFO pop from the highest-priority non-empty queue."""
+        """FIFO pop from the highest-priority non-empty queue. O(1)."""
         with self._lock:
-            for q in self._qs:
-                if q:
-                    return q.popleft()
+            for lvl in self._levels:
+                if lvl.fifo:
+                    req = next(iter(lvl.fifo.values()))
+                    self._remove(req)
+                    return req
         return None
+
+    def _remove(self, req: KernelRequest) -> None:
+        lvl = self._levels[req.priority]
+        if req.uid not in lvl.fifo:
+            raise ValueError(f"{req!r} not queued")
+        del lvl.fifo[req.uid]
+        del lvl.seq[req.uid]
+        stream = _stream_of(req)
+        dq = lvl.streams[stream]
+        if dq[0] is req:
+            dq.popleft()
+            self._unindex(lvl, req)
+            if dq:                      # successor becomes the stream head
+                head = dq[0]
+                if self._profiled is not None:
+                    self._index_head(lvl, head, lvl.seq[head.uid])
+            else:
+                del lvl.streams[stream]
+        else:                           # mid-stream removal: rare, O(stream)
+            dq.remove(req)
+        self._size -= 1
+
+    # -------------------------------------------------------- duration index
+    def _index_head(self, lvl: _Level, req: KernelRequest, seq: int) -> None:
+        dur = self._profiled.predict_duration(req.task_key, req.kernel_id)
+        entry = (dur, -seq, req.uid)
+        insort(lvl.index, entry)
+        lvl.indexed[req.uid] = entry
+
+    def _unindex(self, lvl: _Level, req: KernelRequest) -> None:
+        entry = lvl.indexed.pop(req.uid, None)
+        if entry is not None:
+            i = bisect_left(lvl.index, entry)
+            # entry uids are unique, so the slot is exact
+            del lvl.index[i]
+
+    def ensure_index(self, profiled) -> None:
+        """Bind/refresh the duration index against ``profiled``.
+
+        O(1) when already bound to this profile version; a full O(n log n)
+        rebuild when the profile object or its version changed (profiles
+        reload rarely; decisions happen constantly)."""
+        if profiled is self._profiled and self._version == profiled.version:
+            return
+        with self._lock:
+            self._profiled = profiled
+            self._version = profiled.version
+            for lvl in self._levels:
+                entries = []
+                for dq in lvl.streams.values():
+                    head = dq[0]
+                    dur = profiled.predict_duration(head.task_key,
+                                                    head.kernel_id)
+                    entries.append((dur, -lvl.seq[head.uid], head.uid))
+                entries.sort()
+                lvl.index = entries
+                lvl.indexed = {e[2]: e for e in entries}
+
+    def best_fit_under(self, idle_time: float
+                       ) -> Tuple[Optional[KernelRequest], float]:
+        """Longest stream-head with predicted duration strictly inside
+        (best_so_far, idle_time), from the highest-priority level holding a
+        positive fit. Starting the running best at -1.0 excludes unprofiled
+        heads (the -1.0 sentinel), and descending past a level whose best
+        fit is non-positive replicates the reference scan's
+        ``if best_kernel_time > 0: break`` stop rule bit-for-bit.
+
+        Predecessor search per level; at most ``levels`` bisects total.
+        Does NOT dequeue. Call ``ensure_index`` first."""
+        best_req: Optional[KernelRequest] = None
+        best_dur = _UNPROFILED
+        for lvl in self._levels:
+            idx = lvl.index
+            if not idx:
+                continue
+            i = bisect_left(idx, (idle_time,))
+            if i == 0:
+                continue                    # every head >= idle_time
+            dur, _negseq, uid = idx[i - 1]
+            if dur <= best_dur:
+                continue                    # not strictly longer
+            best_req, best_dur = lvl.fifo[uid], dur
+            if best_dur > 0:
+                break                       # fit found at this level
+        return best_req, best_dur
+
+    # ------------------------------------------------------------ inspection
+    def __getitem__(self, priority: int) -> Tuple[KernelRequest, ...]:
+        """Level contents in FIFO order (read-only snapshot)."""
+        return tuple(self._levels[priority].fifo.values())
 
     def peek_highest(self) -> Optional[KernelRequest]:
         with self._lock:
-            for q in self._qs:
-                if q:
-                    return q[0]
+            for lvl in self._levels:
+                if lvl.fifo:
+                    return next(iter(lvl.fifo.values()))
         return None
 
     def highest_nonempty(self) -> Optional[int]:
         with self._lock:
-            for p, q in enumerate(self._qs):
-                if q:
+            for p, lvl in enumerate(self._levels):
+                if lvl.fifo:
                     return p
         return None
 
     def __len__(self) -> int:
-        with self._lock:
-            return sum(len(q) for q in self._qs)
+        return self._size
 
     def __iter__(self) -> Iterator[KernelRequest]:
         with self._lock:
-            for q in self._qs:
-                yield from list(q)
+            snapshot = [req for lvl in self._levels
+                        for req in lvl.fifo.values()]
+        return iter(snapshot)
 
     def lock(self):
         return self._lock

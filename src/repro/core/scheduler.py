@@ -91,11 +91,14 @@ class SimScheduler:
                  pipeline_depth: int = 2, feedback: bool = True,
                  epsilon: float = EPSILON,
                  measurement_overhead: float = 0.0,
-                 jitter: float = 0.0, seed: int = 0):
+                 jitter: float = 0.0, seed: int = 0,
+                 trace: str = "list", reference: bool = False):
         """measurement_overhead: multiplier on kernel durations (the paper's
         20-80% measuring-stage slowdown), used to simulate the measurement
         phase. jitter: multiplicative gaussian noise on true durations/gaps
-        (run-to-run variance the SK/SG averages + feedback must absorb)."""
+        (run-to-run variance the SK/SG averages + feedback must absorb).
+        trace/reference forward to FikitPolicy (trace sink selection; the
+        O(n) reference oracle for differential testing)."""
         self.tasks = tasks
         self.mode = mode
         self.profiled = profiled or ProfiledData()
@@ -114,11 +117,14 @@ class SimScheduler:
         self._done_k = [0] * n          # kernels completed
         self._issued = [0] * n
         self._pending_issue: List[Optional[int]] = [None] * n
+        # single-threaded discrete-event driver: elide the queue lock
         self.policy = FikitPolicy(mode, self.profiled,
                                   pipeline_depth=pipeline_depth,
                                   feedback=feedback, epsilon=epsilon,
                                   clock=lambda: self.now,
-                                  launch=self._device_launch)
+                                  launch=self._device_launch,
+                                  threadsafe=False, trace=trace,
+                                  reference=reference)
         self.queues = self.policy.queues
 
     # ----------------------------------------------------------------- noise

@@ -9,6 +9,15 @@ scenarios through both, and asserts the two policies produced identical
 decision traces — launch order, fill decisions, queue parks, gap
 open/close, and holder transitions.
 
+A second differential axis guards the O(log n) fast path: the indexed
+``best_prio_fit`` + cached holder election (``reference=False``, the
+default) must produce traces identical to the O(n) reference oracle
+(``reference=True``: linear-scan BestPrioFit, holder re-elected per probe)
+on randomized scenarios — 100 seeds x {FIKIT, PREEMPT} = 200 cases, with
+durations drawn from a small discrete set so predicted-duration TIES are
+common (the tie-break is where an indexed structure most easily diverges
+from a scan).
+
 Also hosts the policy invariant tests:
 - fillers never come from a priority level above (numerically below) the
   holder's;
@@ -20,6 +29,7 @@ Also hosts the policy invariant tests:
 """
 import heapq
 import itertools
+import random
 
 import pytest
 
@@ -41,7 +51,8 @@ class VirtualHarness:
     own event structure, so it cannot share a driver bug with
     SimScheduler. No jitter, exact durations."""
 
-    def __init__(self, tasks, mode, profiled, pipeline_depth=2):
+    def __init__(self, tasks, mode, profiled, pipeline_depth=2,
+                 reference=False):
         self.tasks = tasks
         self.now = 0.0
         self.device_free = 0.0
@@ -54,7 +65,8 @@ class VirtualHarness:
         self.policy = FikitPolicy(mode, profiled,
                                   pipeline_depth=pipeline_depth,
                                   clock=lambda: self.now,
-                                  launch=self._to_device)
+                                  launch=self._to_device,
+                                  reference=reference)
 
     def _at(self, t, fn):
         heapq.heappush(self._heap, (t, next(self._tick), fn))
@@ -173,6 +185,49 @@ SCENARIOS = {
 
 def _profiles(tasks):
     return profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Randomized scenarios for the indexed-vs-oracle differential
+# ---------------------------------------------------------------------------
+# durations from a small discrete grid -> frequent predicted-duration ties
+# across tasks, stressing the index's FIFO tie-break against the scan's
+_DUR_GRID = [0.0005, 0.001, 0.0015, 0.002, 0.003, 0.004, 0.006]
+_GAP_GRID = [0.0, 0.0003, 0.001, 0.0025, 0.005, 0.008]
+
+
+def random_tasks(rng):
+    n = rng.randint(2, 5)
+    specs = []
+    for t in range(n):
+        nk = rng.randint(2, 12)
+        kid = KernelID(f"svc{t}/k")
+        kernels = [TraceKernel(kid, rng.choice(_DUR_GRID),
+                               rng.choice(_GAP_GRID)) for _ in range(nk)]
+        specs.append(TaskSpec(
+            TaskKey(f"svc{t}"), rng.randint(0, 9), kernels,
+            arrival=rng.choice([0.0, 0.0005, 0.002, 0.006, 0.012]),
+            max_inflight=rng.choice([1, 1, 1, 4, 8])))
+    return specs
+
+
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("seed", range(100))
+def test_indexed_fast_path_matches_reference_oracle(seed, mode):
+    """Indexed best_prio_fit + cached holder vs the O(n) reference scan +
+    per-probe election: identical traces and device launch order."""
+    rng = random.Random(seed * 7919 + (0 if mode is Mode.FIKIT else 1))
+    tasks = random_tasks(rng)
+    pd = _profiles(tasks)
+    fast = VirtualHarness(tasks, mode, pd, reference=False).run()
+    ref = VirtualHarness(tasks, mode, pd, reference=True).run()
+    assert fast.policy.trace == ref.policy.trace
+    assert fast.launch_order == ref.launch_order
+    assert fast.policy.fill_count == ref.policy.fill_count
+    # the fast path also agrees with SimScheduler end-to-end
+    sim = SimScheduler(tasks, mode, pd, jitter=0.0)
+    sim.run()
+    assert sim.policy.trace == fast.policy.trace
 
 
 # ---------------------------------------------------------------------------

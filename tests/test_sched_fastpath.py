@@ -1,0 +1,257 @@
+"""Unit tests for the O(log n) scheduling fast path introduced for the
+paper's <5% overhead budget: indexed PriorityQueues, interned KernelIDs,
+flattened ProfiledData lookups, pluggable trace sinks, and the
+fills_in_flight clamp."""
+import pickle
+import random
+
+import pytest
+
+from repro.core.fikit import best_prio_fit, best_prio_fit_scan
+from repro.core.kernel_id import KernelID, kernel_id_for
+from repro.core.policy import (FikitPolicy, ListTrace, Mode, NullTrace,
+                               RingTrace, make_trace_sink)
+from repro.core.profiler import ProfiledData, TaskProfile
+from repro.core.queues import PriorityQueues
+from repro.core.task import KernelRequest, TaskKey
+
+pytestmark = pytest.mark.fast
+
+
+def _pd(entries):
+    """entries: [(task_name, kernel_name, duration)]"""
+    pd = ProfiledData()
+    by_task = {}
+    for tname, kname, dur in entries:
+        by_task.setdefault(tname, {})[kname] = dur
+    for tname, kernels in by_task.items():
+        prof = TaskProfile(key=TaskKey(tname), runs=1)
+        for kname, dur in kernels.items():
+            prof.SK[KernelID(kname)] = dur
+        pd.load(prof)
+    return pd
+
+
+def _req(tname, kname, prio, instance=0, seq=0):
+    return KernelRequest(task_key=TaskKey(tname), kernel_id=KernelID(kname),
+                        priority=prio, task_instance=instance, seq_index=seq)
+
+
+# ---------------------------------------------------------------------------
+# KernelID interning
+# ---------------------------------------------------------------------------
+def test_kernel_id_interned_identity():
+    a = KernelID("k", (4, 4), (128, "float32"))
+    b = KernelID("k", (4, 4), (128, "float32"))
+    assert a is b
+    assert hash(a) == hash(("k", (4, 4), (128, "float32")))
+    assert a == b and not (a != b)
+    assert KernelID("k") is not a
+
+
+def test_kernel_id_immutable_and_ordered():
+    a = KernelID("a")
+    with pytest.raises(AttributeError):
+        a.name = "b"
+    assert KernelID("a") < KernelID("b")
+    assert sorted([KernelID("b"), KernelID("a")])[0] is a
+
+
+def test_kernel_id_pickle_reinterns():
+    a = kernel_id_for("seg", mesh_fp="m0")
+    b = pickle.loads(pickle.dumps(a))
+    assert b is a
+
+
+def test_kernel_id_str_encode_unchanged():
+    k = KernelID("f", (2, 3), (4,))
+    assert str(k) == "f<<<2x3,4>>>"
+    assert k.encode() == "f|(2, 3)|(4,)"
+
+
+# ---------------------------------------------------------------------------
+# ProfiledData flat lookups + versioning
+# ---------------------------------------------------------------------------
+def test_profiled_data_flat_lookup_and_version():
+    pd = ProfiledData()
+    assert pd.version == 0
+    prof = TaskProfile(key=TaskKey("t"), runs=1)
+    prof.SK[KernelID("k")] = 0.002
+    prof.SG[KernelID("k")] = 0.004
+    pd.load(prof)
+    assert pd.version == 1
+    assert pd.predict_duration(TaskKey("t"), KernelID("k")) == 0.002
+    assert pd.predict_gap(TaskKey("t"), KernelID("k")) == 0.004
+    assert pd.predict_duration(TaskKey("t"), KernelID("other")) == -1.0
+    assert pd.predict_gap(TaskKey("nope"), KernelID("k")) == 0.0
+    # reload replaces stale flat entries
+    prof2 = TaskProfile(key=TaskKey("t"), runs=2)
+    prof2.SK[KernelID("k2")] = 0.009
+    pd.load(prof2)
+    assert pd.version == 2
+    assert pd.predict_duration(TaskKey("t"), KernelID("k")) == -1.0
+    assert pd.predict_duration(TaskKey("t"), KernelID("k2")) == 0.009
+
+
+def test_queue_index_invalidated_by_profile_reload():
+    pd = _pd([("a", "ka", 0.002)])
+    qs = PriorityQueues()
+    qs.push(_req("a", "ka", 5))
+    got, dur = best_prio_fit(qs, 0.01, pd)
+    assert got is not None and dur == 0.002
+    qs.push(got)
+    # reload with a new duration: the index must serve the NEW prediction
+    prof = TaskProfile(key=TaskKey("a"), runs=1)
+    prof.SK[KernelID("ka")] = 0.008
+    pd.load(prof)
+    got2, dur2 = best_prio_fit(qs, 0.01, pd)
+    assert dur2 == 0.008
+
+
+# ---------------------------------------------------------------------------
+# Indexed PriorityQueues bookkeeping
+# ---------------------------------------------------------------------------
+def test_queue_len_remove_pop_iter():
+    qs = PriorityQueues(threadsafe=False)
+    reqs = [_req(f"t{i}", f"k{i}", prio=i % 10, instance=i) for i in range(30)]
+    for r in reqs:
+        qs.push(r)
+    assert len(qs) == 30
+    # iteration: priority-major, FIFO within level
+    seen = list(qs)
+    assert [r.priority for r in seen] == sorted(r.priority for r in reqs)
+    # remove from the middle
+    qs.remove(reqs[17])
+    assert len(qs) == 29
+    with pytest.raises(ValueError):
+        qs.remove(reqs[17])
+    # pop_highest drains in (priority, FIFO) order
+    order = []
+    while True:
+        r = qs.pop_highest()
+        if r is None:
+            break
+        order.append(r)
+    assert len(order) == 29
+    assert [r.priority for r in order] == sorted(r.priority for r in order)
+    assert len(qs) == 0 and qs.peek_highest() is None
+    assert qs.highest_nonempty() is None
+
+
+def test_queue_head_of_stream_succession():
+    """Removing a stream's head promotes its successor into the index."""
+    pd = _pd([("s", "k0", 0.002), ("s", "k1", 0.005)])
+    qs = PriorityQueues(threadsafe=False)
+    qs.push(_req("s", "k0", 5, instance=1, seq=0))
+    qs.push(_req("s", "k1", 5, instance=1, seq=1))
+    # only the head (k0, dur 0.002) is eligible although k1 fits better
+    got, dur = best_prio_fit(qs, 0.01, pd)
+    assert got.seq_index == 0 and dur == 0.002
+    # now the successor is head
+    got2, dur2 = best_prio_fit(qs, 0.01, pd)
+    assert got2.seq_index == 1 and dur2 == 0.005
+    assert len(qs) == 0
+
+
+def test_indexed_matches_scan_exhaustive_drain():
+    """Drain randomized queues decision-by-decision; the indexed and scan
+    implementations must select the same request every single time."""
+    rng = random.Random(0)
+    for trial in range(40):
+        entries = []
+        for i in range(rng.randint(1, 40)):
+            # discrete durations -> ties are common
+            entries.append((f"t{i}", f"t{i}_k", rng.randint(0, 9),
+                            rng.choice([0.001, 0.002, 0.004, 0.008])))
+        pd = _pd([(t, k, d) for t, k, _, d in entries])
+        qa, qb = PriorityQueues(), PriorityQueues()
+        for i, (t, k, p, _) in enumerate(entries):
+            qa.push(_req(t, k, p, instance=i))
+            qb.push(_req(t, k, p, instance=i))
+        while True:
+            idle = rng.choice([0.0005, 0.0015, 0.003, 0.005, 0.1])
+            ra, da = best_prio_fit(qa, idle, pd)
+            rb, db = best_prio_fit_scan(qb, idle, pd)
+            assert (ra is None) == (rb is None)
+            assert da == db
+            if ra is None:
+                if idle == 0.1:        # nothing fits even a huge gap: empty
+                    break
+                continue
+            assert (ra.task_key, ra.task_instance, ra.seq_index) == \
+                (rb.task_key, rb.task_instance, rb.seq_index)
+        assert len(qa) == len(qb) == 0
+
+
+# ---------------------------------------------------------------------------
+# fills_in_flight clamp (regression: spurious/double fill_complete)
+# ---------------------------------------------------------------------------
+def test_fill_complete_spurious_clamps_at_zero():
+    launched = []
+    pol = FikitPolicy(Mode.FIKIT, _pd([("lo", "k", 0.002)]),
+                      clock=lambda: 0.0,
+                      launch=lambda req, filler: launched.append(req))
+    pol.task_begin(0, TaskKey("hi"), 0, arrival=0.0)
+    pol.task_begin(1, TaskKey("lo"), 5, arrival=0.0)
+    pol.submit(_req("lo", "k", 5, instance=1))     # parks (holder is 0)
+    pol.gap_open = True
+    pol.gap_remaining = 0.01
+    pol.try_fill()                                 # launches the filler
+    assert pol.fills_in_flight == 1
+    pol.fill_complete()
+    assert pol.fills_in_flight == 0
+    # double/spurious completion: clamped, counted, never negative
+    pol.fill_complete()
+    pol.fill_complete()
+    assert pol.fills_in_flight == 0
+    assert pol.spurious_fill_completions == 2
+    # and the pipeline-depth budget is unaffected by the spurious events
+    assert pol.pipeline_depth - pol.fills_in_flight == pol.pipeline_depth
+
+
+# ---------------------------------------------------------------------------
+# Trace sinks
+# ---------------------------------------------------------------------------
+def _drive(trace_spec):
+    pol = FikitPolicy(Mode.FIKIT, ProfiledData(), clock=lambda: 0.0,
+                      launch=lambda req, filler: None, trace=trace_spec)
+    for i in range(5):
+        pol.task_begin(i, TaskKey(f"t{i}"), i % 3, arrival=float(i))
+        pol.submit(_req(f"t{i}", "k", i % 3, instance=i))
+    for i in range(5):
+        pol.task_end(i)
+    return pol
+
+
+def test_trace_sink_list_default():
+    pol = _drive("list")
+    assert isinstance(pol.trace, ListTrace)
+    assert ("begin", 0) in pol.trace
+
+
+def test_trace_sink_ring_bounded():
+    pol = _drive(8)
+    assert isinstance(pol.trace, RingTrace)
+    assert pol.trace.maxlen == 8
+    assert len(pol.trace) == 8                     # only the newest kept
+    full = _drive("list")
+    assert list(pol.trace) == list(full.trace)[-8:]
+
+
+def test_trace_sink_off_records_nothing_but_schedules_identically():
+    off = _drive("off")
+    assert isinstance(off.trace, NullTrace)
+    assert len(off.trace) == 0 and list(off.trace) == []
+    ref = _drive("list")
+    # scheduling state is identical with tracing disabled
+    assert off.fill_count == ref.fill_count
+    assert off.queued == ref.queued
+    assert off.holder() == ref.holder()
+
+
+def test_trace_sink_custom_and_bad_spec():
+    sink = []
+    pol = _drive(sink)
+    assert pol.trace is sink and ("begin", 0) in sink
+    with pytest.raises(ValueError):
+        make_trace_sink(3.5)
