@@ -1,0 +1,117 @@
+"""Multi-device placement benchmark: one priority workload mix spread over
+K devices through the ``PlacementLayer``.
+
+Sweeps K in {1, 2, 4, 8} over a fixed cluster mix (interactive
+high-priority services + device-bound batch services, staggered arrivals)
+under FIKIT scheduling with least-loaded placement + work stealing, and
+reports per K:
+
+- aggregate throughput (tasks/s) and its scaling vs K=1 — the placement
+  layer's reason to exist; the K=2 point is the acceptance gate (>= 1.7x);
+- mean high-priority and low-priority JCT — hi JCT must be NO WORSE than
+  single-device FIKIT (per-device isolation is not compromised by the
+  sharing layer);
+- per-device utilization and steal count.
+
+Set BENCH_SMOKE=1 (CI) for a tiny workload and K in {1, 2} only.
+
+``main`` returns the Csv with a ``json_payload`` attribute —
+``benchmarks.run`` persists it as BENCH_placement.json so placement
+scaling is tracked across PRs.
+"""
+from __future__ import annotations
+
+import os
+import statistics as stats
+
+from benchmarks.common import Csv
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+DEVICE_COUNTS = (1, 2) if SMOKE else (1, 2, 4, 8)
+
+
+def cluster_mix(n_hi: int, n_lo: int):
+    """Interactive hi-priority services (sync clients, real host gaps) +
+    device-bound lo-priority batch services (async, negligible gaps),
+    arrivals staggered so the cluster sees a continuous mixed load."""
+    tasks = []
+    for i in range(n_hi):
+        kid = KernelID(f"hi{i}/layer")
+        kernels = [TraceKernel(kid, 0.002, 0.003)] * 14
+        tasks.append(TaskSpec(TaskKey(f"hi{i}"), 0, kernels,
+                              arrival=0.0008 * i))
+    for i in range(n_lo):
+        kid = KernelID(f"lo{i}/layer")
+        # 2.5 ms kernels fit strictly inside the hi services' 3 ms gaps, so
+        # co-located batch work is gap-fillable (the FIKIT win) while still
+        # being device-bound enough to need extra devices for throughput
+        kernels = [TraceKernel(kid, 0.0025, 0.0002)] * 22
+        tasks.append(TaskSpec(TaskKey(f"lo{i}"), 5 + i % 5, kernels,
+                              arrival=0.0005 + 0.0011 * i,
+                              max_inflight=8))
+    return tasks
+
+
+def main(csvout=None):
+    csvout = csvout or Csv(header=("name", "value", "derived"))
+    n_hi, n_lo = (3, 6) if SMOKE else (8, 16)
+    tasks = cluster_mix(n_hi, n_lo)
+    hi_idx = [i for i, t in enumerate(tasks) if t.priority == 0]
+    lo_idx = [i for i, t in enumerate(tasks) if t.priority > 0]
+    profiled = profile_tasks(tasks, T=3, jitter=0.0,
+                             measurement_overhead=0.0)
+
+    sweep = {}
+    for K in DEVICE_COUNTS:
+        rep = SimScheduler(tasks, Mode.FIKIT, profiled, jitter=0.0,
+                           devices=K, discipline="least_loaded",
+                           steal=True).run()
+        ms = rep.makespan
+        sweep[K] = {
+            "makespan_ms": round(1e3 * ms, 3),
+            "throughput_tasks_per_s": round(len(tasks) / ms, 1),
+            "hi_jct_ms": round(1e3 * stats.mean(rep.jct(i)
+                                                for i in hi_idx), 3),
+            "lo_jct_ms": round(1e3 * stats.mean(rep.jct(i)
+                                                for i in lo_idx), 3),
+            "per_device_utilization": [round(u, 3) for u in
+                                       rep.per_device_utilization()],
+            "fills": rep.fills,
+            "steals": rep.steals,
+        }
+        csvout.add(f"K={K} makespan", sweep[K]["makespan_ms"],
+                   f"{sweep[K]['throughput_tasks_per_s']} tasks/s, "
+                   f"hi JCT {sweep[K]['hi_jct_ms']} ms, "
+                   f"steals {rep.steals}")
+
+    base = sweep[DEVICE_COUNTS[0]]
+    scaling = {K: round(base["makespan_ms"] / sweep[K]["makespan_ms"], 3)
+               for K in DEVICE_COUNTS}
+    hi_ratio = {K: round(sweep[K]["hi_jct_ms"] / base["hi_jct_ms"], 3)
+                for K in DEVICE_COUNTS}
+    for K in DEVICE_COUNTS[1:]:
+        ok = scaling[K] >= 1.7 if K == 2 else scaling[K] > scaling[K // 2]
+        csvout.add(f"K={K} throughput scaling", scaling[K],
+                   ("OK" if ok else "BELOW TARGET") +
+                   f", hi JCT ratio {hi_ratio[K]} (<= 1.0 wanted)")
+    csvout.emit("Multi-device placement: throughput scaling + hi-priority "
+                "JCT protection (least_loaded + steal)")
+    csvout.json_payload = {
+        "smoke": SMOKE,
+        "n_hi": n_hi,
+        "n_lo": n_lo,
+        "device_counts": list(DEVICE_COUNTS),
+        "sweep": sweep,
+        "throughput_scaling_vs_k1": scaling,
+        "hi_jct_ratio_vs_k1": hi_ratio,
+        "k2_scaling_ok": scaling.get(2, 0.0) >= 1.7,
+        "k2_hi_jct_ok": hi_ratio.get(2, 9.9) <= 1.0 + 1e-9,
+    }
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,12 @@ share the device through the wall-clock FIKIT engine — real jitted JAX
 segments, real threads, real measured JCTs.
 
 Lifecycle per the paper: onboard (measurement phase, exclusive, per-kernel
-timing) -> concurrent sharing phase under FIKIT vs default sharing.
+timing) -> concurrent sharing phase under FIKIT vs default sharing. The
+final run spreads the same workload over TWO device executors through the
+placement layer (device election + idle-device work stealing). On a
+single-accelerator host the two executor threads share the hardware, so
+this demonstrates the scheduling path; see SimScheduler(devices=K) /
+benchmarks/bench_placement.py for scaling measurements.
 
     PYTHONPATH=src python examples/serve_priority.py
 """
@@ -14,3 +19,8 @@ for mode in ("sharing", "fikit"):
     out = serve_pair("qwen3-4b", "mamba2-2.7b", mode=mode, requests=6,
                      measure_runs=4)
     print()
+
+print("--- mode=fikit devices=2 (placement layer) ---")
+out = serve_pair("qwen3-4b", "mamba2-2.7b", mode="fikit", requests=6,
+                 measure_runs=4, devices=2)
+print()

@@ -4,9 +4,12 @@ Kernel identification (paper §3.2), two-phase measurement/sharing profiling,
 priority queues Q0-Q9, Algorithm 1 (FIKIT procedure), Algorithm 2
 (BestPrioFit), real-time feedback (Fig 12), and ONE engine-agnostic
 scheduling state machine (``FikitPolicy``) with EXCLUSIVE / SHARING /
-FIKIT / PREEMPT execution modes, driven by two thin engines over a serial
-device executor: the discrete-event simulator (``SimScheduler``) and the
-real wall-clock JAX executor (``WallClockEngine``).
+FIKIT / PREEMPT execution modes, driven by two thin engines over serial
+device executors: the discrete-event simulator (``SimScheduler``) and the
+real wall-clock JAX executor (``WallClockEngine``). ``PlacementLayer``
+spreads one prioritized workload mix over K per-device policies (device
+election disciplines + idle-device work stealing); K=1 is a pass-through
+pinned trace-identical to a bare policy.
 """
 from repro.core.kernel_id import KernelID, kernel_id_for  # noqa: F401
 from repro.core.task import (  # noqa: F401
@@ -20,4 +23,5 @@ from repro.core.fikit import (  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     FikitPolicy, ListTrace, NullTrace, RingTrace, make_trace_sink,
 )
+from repro.core.placement import DISCIPLINES, PlacementLayer  # noqa: F401
 from repro.core.scheduler import Mode, SimScheduler  # noqa: F401

@@ -12,13 +12,26 @@ ALL scheduling decisions — holder election, routing, gap open/close with
 real-time feedback, the bounded BestPrioFit fill loop, release-on-task-done,
 overshoot accounting, PREEMPT parking — live in
 ``repro.core.policy.FikitPolicy``, the same state machine that drives the
-discrete-event simulator. This engine only adds what the simulator fakes:
-real threads, a lock, Futures, and ``time.perf_counter``.
+discrete-event simulator; device election and cross-device work stealing
+live in ``repro.core.placement.PlacementLayer`` (K=1 is a pass-through).
+This engine only adds what the simulator fakes: real threads, a lock,
+Futures, and ``time.perf_counter``.
 
-The device thread is the ONLY thread that touches the accelerator — it pops
-launched requests in FIFO order and runs their payload callables (jitted JAX
-segments, block_until_ready inside). Everything the simulator models is
-real here: device busy intervals, queue waits, fill overshoot.
+Each device thread pops launched requests in FIFO order and runs their
+payload callables (jitted JAX segments, block_until_ready inside).
+``devices=K`` starts K device threads over K serial queues, one per
+placement device. Everything the simulator models is real here: device
+busy intervals, queue waits, fill overshoot.
+
+CAVEAT for K > 1: a "device" is a serial executor THREAD. Payloads are
+not pinned to distinct JAX devices, so on a single-accelerator host the K
+serial queues share one piece of hardware and wall-clock multi-device
+numbers measure scheduling behavior (routing, parking, stealing), not
+hardware scaling — use the discrete-event simulator
+(``SimScheduler(devices=K)``, ``benchmarks/bench_placement.py``) for
+scaling claims. On a multi-device host, pin each payload to
+``jax.devices()[d]`` (e.g. ``jax.device_put``/``jit(device=...)``) to
+make thread d's queue correspond to real hardware d.
 """
 from __future__ import annotations
 
@@ -30,7 +43,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.fikit import EPSILON
-from repro.core.policy import FikitPolicy, Mode
+from repro.core.placement import DisciplineSpec, PlacementLayer
+from repro.core.policy import Mode
 from repro.core.profiler import ProfiledData
 from repro.core.task import KernelRequest, TaskKey
 
@@ -41,47 +55,63 @@ class ExecRecord:
     start: float
     end: float
     filler: bool = False
+    device: int = 0
 
 
 class WallClockEngine:
     def __init__(self, mode: Mode = Mode.FIKIT,
                  profiled: Optional[ProfiledData] = None,
                  pipeline_depth: int = 2, feedback: bool = True,
-                 epsilon: float = EPSILON, trace: str = "list"):
+                 epsilon: float = EPSILON, trace: str = "list",
+                 devices: int = 1,
+                 discipline: DisciplineSpec = "least_loaded",
+                 steal: bool = True):
         self.mode = mode
         self.profiled = profiled or ProfiledData()
+        self.devices = devices
 
         self._lock = threading.RLock()
         # threaded driver: keep the queue lock; trace="off"/"ring" bounds
-        # the per-decision trace cost for long-running serving
-        self.policy = FikitPolicy(mode, self.profiled,
-                                  pipeline_depth=pipeline_depth,
-                                  feedback=feedback, epsilon=epsilon,
-                                  clock=time.perf_counter,
-                                  launch=self._device_launch,
-                                  threadsafe=True, trace=trace)
-        self._device_q: "queue.Queue" = queue.Queue()
+        # the per-decision trace cost for long-running serving. The engine
+        # lock serializes every placement/policy entry point, exactly as it
+        # did for the bare single-device policy.
+        self.placement = PlacementLayer(devices, mode, self.profiled,
+                                        discipline=discipline, steal=steal,
+                                        pipeline_depth=pipeline_depth,
+                                        feedback=feedback, epsilon=epsilon,
+                                        clock=time.perf_counter,
+                                        launch=self._device_launch,
+                                        threadsafe=True, trace=trace)
+        # single-device alias kept for callers that inspect decision state
+        self.policy = self.placement.policies[0]
+        self._device_qs: List["queue.Queue"] = [queue.Queue()
+                                               for _ in range(devices)]
         self._records: List[ExecRecord] = []
         self._futures: Dict[int, Future] = {}      # req.uid -> Future
         self._admit_cond = threading.Condition(self._lock)
         self._admitted: set = set()
         self._stop = False
-        self._thread = threading.Thread(target=self._device_loop,
-                                        daemon=True, name="fikit-device")
+        self._threads = [
+            threading.Thread(target=self._device_loop, args=(d,),
+                             daemon=True, name=f"fikit-device-{d}")
+            for d in range(devices)]
         self._started = False
 
     # ---------------------------------------------------------------- device
     def start(self) -> "WallClockEngine":
         if not self._started:
             self._started = True
-            self._thread.start()
+            for t in self._threads:
+                t.start()
         return self
 
     def stop(self) -> None:
         self._stop = True
-        self._device_q.put(None)
+        for q in self._device_qs:
+            q.put(None)
         if self._started:
-            self._thread.join(timeout=5)
+            for t in self._threads:
+                t.join(timeout=5)
 
     def __enter__(self):
         return self.start()
@@ -89,9 +119,10 @@ class WallClockEngine:
     def __exit__(self, *exc):
         self.stop()
 
-    def _device_loop(self) -> None:
+    def _device_loop(self, device: int) -> None:
+        dq = self._device_qs[device]
         while True:
-            item = self._device_q.get()
+            item = dq.get()
             if item is None or self._stop:
                 break
             req, fut, filler = item
@@ -105,15 +136,15 @@ class WallClockEngine:
                 fut.set_exception(e)
             with self._lock:
                 self._futures.pop(req.uid, None)   # resolved: stop pinning it
-                self._records.append(ExecRecord(req, t0, t1, filler))
+                self._records.append(ExecRecord(req, t0, t1, filler, device))
                 if filler:
-                    self.policy.fill_complete()
-                self.policy.kernel_end(req.task_instance, req.kernel_id)
+                    self.placement.fill_complete(device)
+                self.placement.kernel_end(req.task_instance, req.kernel_id)
 
     # ----------------------------------------------------------- task control
     def task_begin(self, instance: int, key: TaskKey, priority: int) -> None:
         with self._lock:
-            if self.policy.task_begin(instance, key, priority):
+            if self.placement.task_begin(instance, key, priority):
                 return
             # EXCLUSIVE: the policy parked us; wait for admission in the
             # policy's FIFO begin order.
@@ -123,7 +154,7 @@ class WallClockEngine:
 
     def task_end(self, instance: int) -> None:
         with self._lock:
-            admitted = self.policy.task_end(instance)
+            admitted = self.placement.task_end(instance)
             if admitted:
                 self._admitted.update(admitted)
                 self._admit_cond.notify_all()
@@ -136,30 +167,37 @@ class WallClockEngine:
         req.submit_time = time.perf_counter()
         with self._lock:
             self._futures[req.uid] = fut
-            self.policy.submit(req)
+            self.placement.submit(req)
         return fut
 
-    def _device_launch(self, req: KernelRequest, filler: bool) -> None:
-        """Policy launch hook: push onto the serial device queue.
+    def _device_launch(self, device: int, req: KernelRequest,
+                       filler: bool) -> None:
+        """Placement launch hook: push onto ``device``'s serial queue.
 
-        Always called with ``_lock`` held (every policy entry point is)."""
+        Always called with ``_lock`` held (every placement entry point
+        is)."""
         fut = self._futures.get(req.uid)
         if fut is None:                            # pragma: no cover
             fut = self._futures[req.uid] = Future()
-        self._device_q.put((req, fut, filler))
+        self._device_qs[device].put((req, fut, filler))
 
     # ------------------------------------------------------------------ info
     @property
     def fill_count(self) -> int:
-        return self.policy.fill_count
+        return self.placement.fill_count
 
     @property
     def overshoot_time(self) -> float:
-        return self.policy.overshoot_time
+        return self.placement.overshoot_time
+
+    @property
+    def steal_count(self) -> int:
+        return self.placement.steal_count
 
     def records(self) -> List[ExecRecord]:
         with self._lock:
             return list(self._records)
 
-    def device_busy_time(self) -> float:
-        return sum(r.end - r.start for r in self.records())
+    def device_busy_time(self, device: Optional[int] = None) -> float:
+        return sum(r.end - r.start for r in self.records()
+                   if device is None or r.device == device)

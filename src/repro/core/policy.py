@@ -66,6 +66,14 @@ Every decision appends one tuple to ``self.trace``:
     ("drain",  instance, seq)       FIFO drain with no active task
     ("gap_open",  instance, predicted)
     ("gap_close", instance)
+    ("detach", instance)            task migrated OUT (placement steal)
+    ("attach", instance)            task migrated IN  (placement steal)
+
+The ``detach``/``attach`` pair is the multi-device placement layer's
+migration seam (``repro.core.placement.PlacementLayer``): a fully-parked
+task leaves one device's policy and joins another's. Neither event can
+occur on a single-device system, so a K=1 placement trace is identical to
+a bare policy trace — the property the placement differential tests pin.
 
 The trace is what the differential tests compare between engines: identical
 scenario -> identical trace, by construction and by test.
@@ -236,14 +244,9 @@ class FikitPolicy:
         """Register an active task. Returns True if it may issue now."""
         if arrival is None:
             arrival = self._clock()
-        self.active[instance] = ActiveTask(instance, key, priority, arrival)
-        # incremental holder cache update: the newcomer takes over iff it
-        # beats the incumbent in (priority, arrival, instance) order
-        cur = self.active.get(self._holder) if self._holder is not None \
-            else None
-        if cur is None or (priority, arrival, instance) < \
-                (cur.priority, cur.arrival, cur.instance):
-            self._holder = instance
+        at = ActiveTask(instance, key, priority, arrival)
+        self.active[instance] = at
+        self._consider_holder(at)
         if self._trace_on:
             self.trace.append(("begin", instance))
         admitted = True
@@ -282,7 +285,60 @@ class FikitPolicy:
         self._note_holder()
         return admitted
 
+    # ------------------------------------------------------------- migration
+    def detach_task(self, instance: int,
+                    reqs: Optional[List[KernelRequest]] = None,
+                    ) -> Tuple[ActiveTask, List[KernelRequest]]:
+        """Remove ``instance`` and its parked requests WITHOUT retirement
+        semantics: no release of the next holder's queue, no gap reset —
+        nothing ended, the task is merely leaving for another device.
+
+        ``reqs`` is the task's parked requests when the caller already
+        tracks them (the placement layer does, keeping the steal at
+        O(stream log n) indexed removes); omitted, they are collected by a
+        scan over the queues. Requests come back in stream (seq) order.
+
+        The placement layer only migrates fully-parked tasks (zero kernels
+        in flight), so the detached task can never be this policy's holder:
+        a holder's submits launch directly and its backlog is released the
+        moment it is elected, hence a task with parked requests is always
+        strictly below the holder."""
+        at = self.active.pop(instance)
+        if reqs is None:
+            reqs = [r for r in self.queues if r.task_instance == instance]
+        reqs = sorted(reqs, key=lambda r: r.seq_index)
+        with self.queues.lock():
+            for r in reqs:
+                self.queues.remove(r)
+        if instance == self._holder:           # defensive: re-elect
+            self._holder = self._elect_holder()
+        if self._trace_on:
+            self.trace.append(("detach", instance))
+        self._note_holder()
+        return at, reqs
+
+    def attach_task(self, at: ActiveTask) -> None:
+        """Adopt a task migrated from another device's policy, preserving
+        its original arrival so holder election stays (priority, arrival,
+        instance)-consistent. The caller re-submits the detached requests
+        through ``submit`` afterwards so they route under THIS policy's
+        holder state."""
+        self.active[at.instance] = at
+        self._consider_holder(at)
+        if self._trace_on:
+            self.trace.append(("attach", at.instance))
+        self._note_holder()
+
     # --------------------------------------------------------------- routing
+    def _consider_holder(self, at: ActiveTask) -> None:
+        """Incremental holder cache update: the newcomer takes over iff it
+        beats the incumbent in (priority, arrival, instance) order."""
+        cur = self.active.get(self._holder) if self._holder is not None \
+            else None
+        if cur is None or (at.priority, at.arrival, at.instance) < \
+                (cur.priority, cur.arrival, cur.instance):
+            self._holder = at.instance
+
     def _elect_holder(self) -> Optional[int]:
         """Full election: highest-priority active task (ties: earliest
         arrival, then id). O(active); runs only on begin/end."""

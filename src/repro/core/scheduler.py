@@ -10,17 +10,21 @@ Models the paper's system (Figs 7, 8, 11, 12):
   up to m kernels in flight — the CUDA-stream behavior that lets a
   device-bound low-priority task flood the FIFO device queue and inflate a
   high-priority co-tenant's JCT in default sharing mode (Fig 2 "Sharing 1").
-- The *device* executes launched kernels serially in launch (FIFO) order.
-  Kernels are non-preemptible.
+- Each *device* executes launched kernels serially in launch (FIFO) order.
+  Kernels are non-preemptible. ``devices=K`` models a K-device node: one
+  independent serial timeline per device.
 - Modes (see ``repro.core.policy.Mode``): EXCLUSIVE, SHARING, FIKIT, and
   PREEMPT (kernel-boundary preemptive sharing).
 
 ALL scheduling decisions — holder election, routing, gap open/close with
 feedback, the bounded fill loop, release-on-task-done, overshoot — live in
-``repro.core.policy.FikitPolicy``. This module is a thin driver: it owns
-the event heap, the client issue model, and the virtual device timeline,
-and hands every decision to the shared policy so the simulator and the
-wall-clock engine can never diverge.
+``repro.core.policy.FikitPolicy``; device election and cross-device work
+stealing live in ``repro.core.placement.PlacementLayer``, which owns one
+policy per device (K=1 is a pinned-identical pass-through). This module is
+a thin driver: it owns the event heap, the client issue model, and the
+virtual device timelines, and hands every decision to the shared
+placement/policy stack so the simulator and the wall-clock engine can
+never diverge.
 
 Determinism: the event heap is ordered by (time, seq); ties resolve by
 insertion order, so simulations are exactly reproducible.
@@ -34,7 +38,8 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 from repro.core.fikit import EPSILON
-from repro.core.policy import FikitPolicy, Mode
+from repro.core.placement import DisciplineSpec, PlacementLayer
+from repro.core.policy import Mode
 from repro.core.profiler import ProfiledData, Profiler
 from repro.core.task import KernelRequest, TaskSpec
 
@@ -44,12 +49,13 @@ __all__ = ["Mode", "KernelExec", "TaskResult", "SimReport", "SimScheduler",
 
 @dataclass
 class KernelExec:
-    """One executed kernel interval on the device timeline."""
+    """One executed kernel interval on a device timeline."""
     task: int
     seq: int
     start: float
     end: float
     filler: bool = False
+    device: int = 0
 
 
 @dataclass
@@ -69,6 +75,8 @@ class SimReport:
     timeline: List[KernelExec]
     fills: int = 0
     overshoot_time: float = 0.0   # filler time past actual gap end ("ovh 2")
+    devices: int = 1
+    steals: int = 0
 
     def jct(self, i: int) -> float:
         return self.results[i].jct
@@ -77,12 +85,20 @@ class SimReport:
     def makespan(self) -> float:
         return max((r.completion for r in self.results), default=0.0)
 
-    def device_busy(self) -> float:
-        return sum(k.end - k.start for k in self.timeline)
+    def device_busy(self, device: Optional[int] = None) -> float:
+        return sum(k.end - k.start for k in self.timeline
+                   if device is None or k.device == device)
 
     def utilization(self) -> float:
+        """Aggregate utilization: busy time over makespan x devices."""
         ms = self.makespan
-        return self.device_busy() / ms if ms > 0 else 0.0
+        return self.device_busy() / (ms * self.devices) if ms > 0 else 0.0
+
+    def per_device_utilization(self) -> List[float]:
+        ms = self.makespan
+        if ms <= 0:
+            return [0.0] * self.devices
+        return [self.device_busy(d) / ms for d in range(self.devices)]
 
 
 class SimScheduler:
@@ -92,13 +108,19 @@ class SimScheduler:
                  epsilon: float = EPSILON,
                  measurement_overhead: float = 0.0,
                  jitter: float = 0.0, seed: int = 0,
-                 trace: str = "list", reference: bool = False):
+                 trace: str = "list", reference: bool = False,
+                 devices: int = 1,
+                 discipline: DisciplineSpec = "least_loaded",
+                 steal: bool = True):
         """measurement_overhead: multiplier on kernel durations (the paper's
         20-80% measuring-stage slowdown), used to simulate the measurement
         phase. jitter: multiplicative gaussian noise on true durations/gaps
         (run-to-run variance the SK/SG averages + feedback must absorb).
-        trace/reference forward to FikitPolicy (trace sink selection; the
-        O(n) reference oracle for differential testing)."""
+        trace/reference forward to the per-device FikitPolicy (trace sink
+        selection; the O(n) reference oracle for differential testing).
+        devices/discipline/steal configure the PlacementLayer: K serial
+        device timelines, device election per task, and idle-device work
+        stealing (no-ops at devices=1)."""
         self.tasks = tasks
         self.mode = mode
         self.profiled = profiled or ProfiledData()
@@ -109,7 +131,8 @@ class SimScheduler:
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._seq = itertools.count()
         self.now = 0.0
-        self.device_free = 0.0
+        self.devices = devices
+        self.device_free = [0.0] * devices
         self.timeline: List[KernelExec] = []
         self.results = [TaskResult(arrival=t.arrival) for t in tasks]
         n = len(tasks)
@@ -118,13 +141,17 @@ class SimScheduler:
         self._issued = [0] * n
         self._pending_issue: List[Optional[int]] = [None] * n
         # single-threaded discrete-event driver: elide the queue lock
-        self.policy = FikitPolicy(mode, self.profiled,
-                                  pipeline_depth=pipeline_depth,
-                                  feedback=feedback, epsilon=epsilon,
-                                  clock=lambda: self.now,
-                                  launch=self._device_launch,
-                                  threadsafe=False, trace=trace,
-                                  reference=reference)
+        self.placement = PlacementLayer(devices, mode, self.profiled,
+                                        discipline=discipline, steal=steal,
+                                        pipeline_depth=pipeline_depth,
+                                        feedback=feedback, epsilon=epsilon,
+                                        clock=lambda: self.now,
+                                        launch=self._device_launch,
+                                        threadsafe=False, trace=trace,
+                                        reference=reference)
+        # single-device alias: the decision core the differential suite
+        # diffs against a bare FikitPolicy (placement K=1 is pass-through)
+        self.policy = self.placement.policies[0]
         self.queues = self.policy.queues
 
     # ----------------------------------------------------------------- noise
@@ -144,14 +171,16 @@ class SimScheduler:
             self.now, _, kind, payload = heapq.heappop(self._heap)
             getattr(self, "_on_" + kind)(*payload)
         return SimReport(self.results, self.timeline,
-                         fills=self.policy.fill_count,
-                         overshoot_time=self.policy.overshoot_time)
+                         fills=self.placement.fill_count,
+                         overshoot_time=self.placement.overshoot_time,
+                         devices=self.devices,
+                         steals=self.placement.steal_count)
 
     # --------------------------------------------------------------- clients
     def _on_arrival(self, ti: int) -> None:
         task = self.tasks[ti]
-        if self.policy.task_begin(ti, task.key, task.priority,
-                                  arrival=self.results[ti].arrival):
+        if self.placement.task_begin(ti, task.key, task.priority,
+                                     arrival=self.results[ti].arrival):
             self._on_issue(ti, 0)
 
     def _on_issue(self, ti: int, ki: int) -> None:
@@ -177,31 +206,34 @@ class SimScheduler:
         if task.max_inflight > 1 and ki + 1 < len(task.kernels):
             self._push(self.now + self._noisy(task.kernels[ki].gap_after),
                        "issue", (ti, ki + 1))
-        self.policy.submit(req)
+        self.placement.submit(req)
 
     # ---------------------------------------------------------------- device
-    def _device_launch(self, req: KernelRequest, filler: bool) -> None:
-        """Policy launch hook: place the request on the serial device."""
+    def _device_launch(self, device: int, req: KernelRequest,
+                       filler: bool) -> None:
+        """Placement launch hook: put the request on ``device``'s serial
+        timeline."""
         dur = self._noisy(float(req.payload)) * (1.0 + self.meas_ovh)
-        start = max(self.now, self.device_free)
+        start = max(self.now, self.device_free[device])
         end = start + dur
-        self.device_free = end
+        self.device_free[device] = end
         ti = req.task_instance
         if self.results[ti].start < 0:
             self.results[ti].start = start
         self.timeline.append(KernelExec(ti, req.seq_index, start, end,
-                                        filler=filler))
-        self._push(end, "kernel_end", (ti, req.seq_index, filler))
+                                        filler=filler, device=device))
+        self._push(end, "kernel_end", (ti, req.seq_index, filler, device))
 
-    def _on_kernel_end(self, ti: int, ki: int, filler: bool) -> None:
+    def _on_kernel_end(self, ti: int, ki: int, filler: bool,
+                       device: int) -> None:
         task = self.tasks[ti]
         self._done_k[ti] = ki + 1
         if filler:
-            self.policy.fill_complete()
+            self.placement.fill_complete(device)
         last = ki == len(task.kernels) - 1
         if last:
             self.results[ti].completion = self.now
-            for nxt in self.policy.task_end(ti):     # EXCLUSIVE admission
+            for nxt in self.placement.task_end(ti):  # EXCLUSIVE admission
                 self._on_issue(nxt, 0)
         elif task.max_inflight == 1:
             # synchronous client: host consumes result, then issues next
@@ -211,8 +243,8 @@ class SimScheduler:
             nxt = self._pending_issue[ti]
             self._pending_issue[ti] = None
             self._issue(ti, nxt)                   # flight slot freed
-        self.policy.kernel_end(ti, task.kernels[ki].kid, last=last,
-                               actual_gap=task.kernels[ki].gap_after)
+        self.placement.kernel_end(ti, task.kernels[ki].kid, last=last,
+                                  actual_gap=task.kernels[ki].gap_after)
 
 
 # ---------------------------------------------------------------------------

@@ -16,12 +16,14 @@ from repro.serving import InferenceService, ServingSystem
 
 def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
                measure_runs: int = 4, batch: int = 2, seq: int = 48,
-               host_gap: float = 0.002, verbose: bool = True):
+               host_gap: float = 0.002, devices: int = 1,
+               verbose: bool = True):
     hi = InferenceService(get_config(high).reduced(), priority=0,
                           batch=batch, seq=seq, host_gap=host_gap)
     lo = InferenceService(get_config(low).reduced(), priority=5,
                           batch=batch * 2, seq=seq)
-    with ServingSystem(Mode(mode), measure_runs=measure_runs) as sys_:
+    with ServingSystem(Mode(mode), measure_runs=measure_runs,
+                       devices=devices) as sys_:
         meas_hi = sys_.onboard(hi)
         meas_lo = sys_.onboard(lo)
         res = sys_.invoke_concurrent([
@@ -29,8 +31,10 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
             ("low", lo, requests, 0.0, 0.0),
         ])
         fills = sys_.engine.fill_count
+        steals = sys_.engine.steal_count
     out = {
         "mode": mode,
+        "devices": devices,
         "measure_high_ms": 1e3 * st.mean(meas_hi),
         "measure_low_ms": 1e3 * st.mean(meas_lo),
         "high_jct_ms": 1e3 * st.mean(res["high"]),
@@ -38,6 +42,7 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
         "high_jct_cv": (st.pstdev(res["high"]) / st.mean(res["high"])),
         "low_jct_cv": (st.pstdev(res["low"]) / st.mean(res["low"])),
         "fills": fills,
+        "steals": steals,
     }
     if verbose:
         for k, v in out.items():
@@ -52,8 +57,11 @@ def main():
     ap.add_argument("--mode", default="fikit",
                     choices=[m.value for m in Mode])
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="number of device executors (placement layer)")
     args = ap.parse_args()
-    serve_pair(args.high, args.low, args.mode, args.requests)
+    serve_pair(args.high, args.low, args.mode, args.requests,
+               devices=args.devices)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Priority serving engine: hosts multiple model services on ONE device
-under the FIKIT scheduler (the paper's cloud-serving deployment).
+"""Priority serving engine: hosts multiple model services on a node of
+``devices=K`` serial device executors (default one) under the FIKIT
+scheduler (the paper's cloud-serving deployment).
 
 Lifecycle per the paper (Fig 3):
 1. A new service is profiled: T exclusive measured runs -> SK/SG stats
@@ -12,7 +13,11 @@ Any scheduling ``Mode`` can host the system: FIKIT (the paper), SHARING
 preemptive sharing, where a lower-priority service's dispatches park in
 the priority queues whenever any strictly-higher-priority invocation is
 active (no gap filling). All modes share one decision core,
-``repro.core.policy.FikitPolicy``.
+``repro.core.policy.FikitPolicy``; ``devices=K`` spreads invocations over
+K device executors through ``repro.core.placement.PlacementLayer`` (device
+election per invocation + idle-device work stealing), with one profile
+store shared by all devices — a service is profiled once, scheduled
+anywhere.
 """
 from __future__ import annotations
 
@@ -54,14 +59,19 @@ class InferenceService:
 class ServingSystem:
     """Owns the engine + profile store; runs measurement then sharing."""
 
-    def __init__(self, mode: Mode = Mode.FIKIT, measure_runs: int = 5):
+    def __init__(self, mode: Mode = Mode.FIKIT, measure_runs: int = 5,
+                 devices: int = 1, discipline: str = "least_loaded"):
         self.profiles = ProfiledData()
         self.mode = mode
         self.measure_runs = measure_runs
+        self.devices = devices
+        self.discipline = discipline
         self.engine: Optional[WallClockEngine] = None
 
     def __enter__(self):
-        self.engine = WallClockEngine(self.mode, self.profiles).start()
+        self.engine = WallClockEngine(self.mode, self.profiles,
+                                      devices=self.devices,
+                                      discipline=self.discipline).start()
         return self
 
     def __exit__(self, *exc):

@@ -1,0 +1,432 @@
+"""Differential + invariant tests for the multi-device placement layer.
+
+Two pinned guarantees:
+
+1. K=1 equivalence — a ``PlacementLayer`` with one device is decision-
+   trace-identical to a bare ``FikitPolicy`` on every scenario the policy
+   differential suite uses, in both FIKIT and PREEMPT modes. The placement
+   layer may add NOTHING at K=1: same trace tuples, same launch order,
+   same fill count. (Because both engines now drive the policy through the
+   placement layer, the 200 randomized cases in
+   ``test_policy_differential.py`` pin this too; here the bare policy and
+   the K=1 layer are compared head-to-head.)
+
+2. K>1 global invariants — 100+ randomized multi-device cases (random
+   tasks x priorities x device counts x disciplines) must satisfy, at
+   every point of the run:
+
+   - no request lost or duplicated: every kernel of every task executes
+     exactly ONCE, across all devices;
+   - per-task stream order is preserved across steals: a task's kernels
+     start in seq order and never overlap, no matter how many times the
+     task migrates;
+   - at most one holder per device, and a task is active on exactly one
+     device at a time (an instance never appears in two policies' active
+     sets);
+   - fill-below-holder per device: a filler launched on a device comes
+     from a strictly lower priority level than that device's holder;
+   - per-device serial execution: one device never runs two kernels at
+     once.
+"""
+import heapq
+import itertools
+import random
+
+import pytest
+
+from repro.core.placement import DISCIPLINES, PlacementLayer
+from repro.core.policy import Mode
+from repro.core.scheduler import SimScheduler
+from repro.core.task import KernelRequest
+
+from tests.test_policy_differential import (
+    SCENARIOS, VirtualHarness, _profiles, k, random_tasks)
+from repro.core.task import TaskKey, TaskSpec
+
+pytestmark = pytest.mark.fast
+
+
+# ---------------------------------------------------------------------------
+# Independent virtual-clock driver over a PlacementLayer (K serial devices)
+# ---------------------------------------------------------------------------
+class PlacementHarness:
+    """Event-driven client + K-device model over a ``PlacementLayer``.
+
+    Mirrors ``VirtualHarness`` (same independent client model) but drives
+    the placement layer, with one serial virtual timeline per device.
+    After EVERY event it checks the cross-device structural invariants, so
+    a violation is caught at the decision that caused it, not at the end.
+    """
+
+    def __init__(self, tasks, mode, profiled, devices=1,
+                 discipline="least_loaded", steal=True, pipeline_depth=2):
+        self.tasks = tasks
+        self.devices = devices
+        self.now = 0.0
+        self.device_free = [0.0] * devices
+        self._heap = []
+        self._tick = itertools.count()
+        self.launch_order = []               # (task, seq, filler, device)
+        self.exec_log = []                   # (task, seq, start, end, device)
+        self._issued = [0] * len(tasks)
+        self._done = [0] * len(tasks)
+        self._parked_issue = [None] * len(tasks)
+        self.placement = PlacementLayer(devices, mode, profiled,
+                                        discipline=discipline, steal=steal,
+                                        pipeline_depth=pipeline_depth,
+                                        clock=lambda: self.now,
+                                        launch=self._to_device,
+                                        threadsafe=False)
+
+    def _at(self, t, fn):
+        heapq.heappush(self._heap, (t, next(self._tick), fn))
+
+    def run(self):
+        for ti, spec in enumerate(self.tasks):
+            self._at(spec.arrival, lambda ti=ti: self._arrive(ti))
+        while self._heap:
+            self.now, _, fn = heapq.heappop(self._heap)
+            fn()
+            self._check_structural_invariants()
+        return self
+
+    # ---- structural invariants, checked after every event
+    def _check_structural_invariants(self):
+        seen = {}
+        for d, pol in enumerate(self.placement.policies):
+            # the holder is one of the device's active tasks (or None)
+            h = pol.holder()
+            assert h is None or h in pol.active, \
+                f"device {d}: holder {h} not active there"
+            for inst in pol.active:
+                assert inst not in seen, \
+                    f"instance {inst} active on devices {seen[inst]} and {d}"
+                seen[inst] = d
+        # placement's routing map agrees with the policies' active sets
+        for inst, d in seen.items():
+            assert self.placement.device_of(inst) == d
+
+    # ---- client model (identical to VirtualHarness's)
+    def _arrive(self, ti):
+        spec = self.tasks[ti]
+        if self.placement.task_begin(ti, spec.key, spec.priority,
+                                     arrival=spec.arrival):
+            self._try_issue(ti, 0)
+
+    def _try_issue(self, ti, ki):
+        spec = self.tasks[ti]
+        if ki >= len(spec.kernels):
+            return
+        if self._issued[ti] - self._done[ti] >= spec.max_inflight:
+            self._parked_issue[ti] = ki
+            return
+        self._issue(ti, ki)
+
+    def _issue(self, ti, ki):
+        spec = self.tasks[ti]
+        self._issued[ti] += 1
+        kern = spec.kernels[ki]
+        if spec.max_inflight > 1 and ki + 1 < len(spec.kernels):
+            self._at(self.now + kern.gap_after,
+                     lambda: self._try_issue(ti, ki + 1))
+        self.placement.submit(KernelRequest(
+            task_key=spec.key, kernel_id=kern.kid, priority=spec.priority,
+            task_instance=ti, seq_index=ki, submit_time=self.now,
+            payload=kern.duration))
+
+    # ---- K serial device model
+    def _to_device(self, device, req, filler):
+        start = max(self.now, self.device_free[device])
+        end = start + float(req.payload)
+        self.device_free[device] = end
+        self.launch_order.append((req.task_instance, req.seq_index, filler,
+                                  device))
+        self.exec_log.append((req.task_instance, req.seq_index, start, end,
+                              device))
+        self._at(end, lambda: self._kernel_done(req, filler, device))
+
+    def _kernel_done(self, req, filler, device):
+        ti, ki = req.task_instance, req.seq_index
+        spec = self.tasks[ti]
+        self._done[ti] += 1
+        if filler:
+            self.placement.fill_complete(device)
+        last = ki == len(spec.kernels) - 1
+        if last:
+            for nxt in self.placement.task_end(ti):
+                self._try_issue(nxt, 0)
+        elif spec.max_inflight == 1:
+            self._at(self.now + spec.kernels[ki].gap_after,
+                     lambda: self._try_issue(ti, ki + 1))
+        elif self._parked_issue[ti] is not None:
+            nxt, self._parked_issue[ti] = self._parked_issue[ti], None
+            self._issue(ti, nxt)
+        self.placement.kernel_end(ti, spec.kernels[ki].kid, last=last,
+                                  actual_gap=spec.kernels[ki].gap_after)
+
+
+# ---------------------------------------------------------------------------
+# (a) K=1: placement layer is trace-identical to a bare FikitPolicy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("discipline", sorted(DISCIPLINES))
+def test_k1_placement_identical_to_bare_policy(name, mode, discipline):
+    tasks = SCENARIOS[name]()
+    pd = _profiles(tasks)
+    bare = VirtualHarness(tasks, mode, pd).run()
+    placed = PlacementHarness(tasks, mode, pd, devices=1,
+                              discipline=discipline).run()
+    pol = placed.placement.policies[0]
+    assert list(pol.trace) == list(bare.policy.trace)
+    assert [(t, s, f) for t, s, f, _ in placed.launch_order] == \
+        bare.launch_order
+    assert pol.fill_count == bare.policy.fill_count
+    assert placed.placement.steal_count == 0
+    # and no placement-only trace kinds ever appear at K=1
+    assert not any(e[0] in ("attach", "detach") for e in pol.trace)
+
+
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_k1_simscheduler_matches_placement_harness(name, mode):
+    """SimScheduler (placement-backed) and the independent placement
+    harness agree end-to-end at K=1."""
+    tasks = SCENARIOS[name]()
+    pd = _profiles(tasks)
+    sim = SimScheduler(tasks, mode, pd, jitter=0.0, devices=1)
+    sim.run()
+    placed = PlacementHarness(tasks, mode, pd, devices=1).run()
+    assert list(sim.policy.trace) == \
+        list(placed.placement.policies[0].trace)
+
+
+# ---------------------------------------------------------------------------
+# (b) randomized multi-device invariants
+# ---------------------------------------------------------------------------
+def _assert_global_invariants(tasks, h: PlacementHarness):
+    # no request lost or duplicated; every kernel runs exactly once
+    per_task = {}
+    for ti, seq, start, end, device in h.exec_log:
+        per_task.setdefault(ti, []).append((start, end, seq, device))
+    for ti, spec in enumerate(tasks):
+        execs = sorted(per_task.get(ti, []))
+        assert [e[2] for e in execs] == list(range(len(spec.kernels))), \
+            f"task {ti}: lost/duplicated/reordered kernels"
+        # stream order across steals: starts ordered by seq AND disjoint
+        for (s0, e0, *_), (s1, e1, *_) in zip(execs, execs[1:]):
+            assert s1 >= e0 - 1e-12, f"task {ti}: overlapping kernels"
+    # per-device serial execution
+    for d in range(h.devices):
+        spans = sorted((x[2], x[3]) for x in h.exec_log if x[4] == d)
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert s1 >= e0 - 1e-12, f"device {d} overlapped"
+    # fill-below-holder per device (trace-level, like the K=1 suite)
+    for d, pol in enumerate(h.placement.policies):
+        holder = None
+        for e in pol.trace:
+            if e[0] == "holder":
+                holder = e[1]
+            elif e[0] == "fill":
+                assert holder is not None
+                assert tasks[e[1]].priority > tasks[holder].priority, \
+                    f"device {d}: filler from at-or-above holder level"
+    # drained: nothing parked, nothing in flight, all policies empty
+    assert h.placement.queued == 0
+    for pol in h.placement.policies:
+        assert pol.fills_in_flight == 0
+        assert not pol.active
+
+
+_DISCIPLINE_NAMES = sorted(DISCIPLINES)
+
+
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("seed", range(60))
+def test_multi_device_invariants_randomized(seed, mode):
+    """120 randomized cases: random task mixes over 2-4 devices, rotating
+    placement disciplines, steal enabled."""
+    rng = random.Random(seed * 60013 + (0 if mode is Mode.FIKIT else 1))
+    tasks = random_tasks(rng)
+    pd = _profiles(tasks)
+    devices = rng.choice([2, 2, 3, 4])
+    discipline = _DISCIPLINE_NAMES[seed % len(_DISCIPLINE_NAMES)]
+    h = PlacementHarness(tasks, mode, pd, devices=devices,
+                         discipline=discipline).run()
+    _assert_global_invariants(tasks, h)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_multi_device_invariants_no_steal(seed):
+    """Steal disabled: the same invariants must hold (stealing is an
+    optimization, never a correctness requirement)."""
+    rng = random.Random(seed * 104729 + 7)
+    tasks = random_tasks(rng)
+    pd = _profiles(tasks)
+    h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2,
+                         steal=False).run()
+    assert h.placement.steal_count == 0
+    _assert_global_invariants(tasks, h)
+
+
+# ---------------------------------------------------------------------------
+# directed steal behavior
+# ---------------------------------------------------------------------------
+def _steal_scenario():
+    """hi holds device 0 with big gaps; lo co-located behind it parks; a
+    tiny task occupies device 1 and retires early -> device 1 goes idle
+    while device 0 is backlogged -> lo must be stolen."""
+    return [
+        TaskSpec(TaskKey("hi"), 0, [k("hi/a", 0.002, 0.0001)] * 20),
+        TaskSpec(TaskKey("lo"), 5, [k("lo/a", 0.003, 0.0005)] * 8,
+                 arrival=0.001),
+        TaskSpec(TaskKey("tiny"), 9, [k("tiny/a", 0.001, 0.0001)] * 2,
+                 arrival=0.0005),
+    ]
+
+
+def _pin(layer, instance, key, priority, arrival):
+    """Custom discipline: hi+lo on device 0, tiny on device 1."""
+    return 1 if key.process == "tiny" else 0
+
+
+def test_steal_rescues_parked_task():
+    tasks = _steal_scenario()
+    pd = _profiles(tasks)
+    h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2,
+                         discipline=_pin).run()
+    assert h.placement.steal_count >= 1
+    # the migration left a detach/attach pair across the device traces
+    assert any(e == ("detach", 1) for e in h.placement.policies[0].trace)
+    assert any(e == ("attach", 1) for e in h.placement.policies[1].trace)
+    # lo finished strictly earlier than it would have without stealing
+    ns = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2,
+                          discipline=_pin, steal=False).run()
+    done = {ti: max(e[3] for e in h.exec_log if e[0] == ti)
+            for ti in range(len(tasks))}
+    done_ns = {ti: max(e[3] for e in ns.exec_log if e[0] == ti)
+               for ti in range(len(tasks))}
+    assert done[1] < done_ns[1], "steal did not improve the parked task"
+    _assert_global_invariants(tasks, h)
+    _assert_global_invariants(tasks, ns)
+
+
+def test_steal_fires_when_task_becomes_fully_parked():
+    """Regression: a task whose last in-flight kernel completes while the
+    rest of its stream is parked becomes stealable at that *kernel_end*,
+    not only at some task_end. Here lo is holder first and launches a few
+    kernels, hi takes over (lo's tail parks), and tiny retires on device 1
+    while lo still has kernels in flight — so the task_end steal check
+    must skip lo. Once lo's in-flight work drains, device 1 has long been
+    idle and lo must migrate instead of waiting out hi's entire stream."""
+    tasks = [
+        TaskSpec(TaskKey("lo"), 5, [k("lo/a", 0.004, 0.0001)] * 6,
+                 max_inflight=8),
+        TaskSpec(TaskKey("hi"), 0, [k("hi/a", 0.002, 0.0001)] * 20,
+                 arrival=0.0003),
+        TaskSpec(TaskKey("tiny"), 9, [k("tiny/a", 0.001, 0.0001)] * 2,
+                 arrival=0.0),
+    ]
+    pd = _profiles(tasks)
+
+    def pin(layer, instance, key, priority, arrival):
+        return 1 if key.process == "tiny" else 0
+
+    h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2,
+                         discipline=pin).run()
+    assert h.placement.steal_count >= 1, \
+        "lo never stolen after its in-flight kernels drained"
+    lo_done = max(e[3] for e in h.exec_log if e[0] == 0)
+    hi_done = max(e[3] for e in h.exec_log if e[0] == 1)
+    assert lo_done < hi_done, "stolen task should beat the foreign holder"
+    _assert_global_invariants(tasks, h)
+
+
+def test_steal_never_moves_inflight_work():
+    """A stolen task's kernels never overlap across devices: the kernel
+    intervals of every task are disjoint even in steal-heavy runs."""
+    rng = random.Random(20260730)
+    for _ in range(10):
+        tasks = random_tasks(rng)
+        pd = _profiles(tasks)
+        h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2,
+                             discipline="round_robin").run()
+        _assert_global_invariants(tasks, h)
+
+
+# ---------------------------------------------------------------------------
+# disciplines
+# ---------------------------------------------------------------------------
+def test_round_robin_spreads_tasks():
+    tasks = [TaskSpec(TaskKey(f"t{i}"), 5, [k(f"t{i}/a", 0.001)])
+             for i in range(4)]
+    pd = _profiles(tasks)
+    h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=4,
+                         discipline="round_robin", steal=False).run()
+    assert sorted({e[4] for e in h.exec_log}) == [0, 1, 2, 3]
+
+
+def test_priority_affinity_banding():
+    tasks = [
+        TaskSpec(TaskKey("p0"), 0, [k("p0/a", 0.001)]),
+        TaskSpec(TaskKey("p4"), 4, [k("p4/a", 0.001)]),
+        TaskSpec(TaskKey("p5"), 5, [k("p5/a", 0.001)]),
+        TaskSpec(TaskKey("p9"), 9, [k("p9/a", 0.001)]),
+    ]
+    pd = _profiles(tasks)
+    h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2,
+                         discipline="priority_affinity", steal=False).run()
+    dev = {e[0]: e[4] for e in h.exec_log}
+    assert dev[0] == 0 and dev[1] == 0      # priorities 0-4 -> device 0
+    assert dev[2] == 1 and dev[3] == 1      # priorities 5-9 -> device 1
+
+
+def test_least_loaded_prefers_empty_device():
+    tasks = [
+        TaskSpec(TaskKey("big"), 5, [k("big/a", 0.01, 0.0001)] * 4),
+        TaskSpec(TaskKey("late"), 5, [k("late/a", 0.001)], arrival=0.001),
+    ]
+    pd = _profiles(tasks)
+    h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2,
+                         steal=False).run()
+    dev = {e[0]: e[4] for e in h.exec_log}
+    assert dev[0] != dev[1], "late task should land on the empty device"
+
+
+def test_spurious_kernel_end_after_purge_is_clamped():
+    """A duplicate/late kernel_end for an already-purged instance must be
+    tolerated and counted, not KeyError (it would kill a wall-clock device
+    thread) — the placement analog of FikitPolicy.fill_complete's clamp."""
+    tasks = [TaskSpec(TaskKey("t"), 5, [k("t/a", 0.001, 0.0001)] * 2)]
+    pd = _profiles(tasks)
+    h = PlacementHarness(tasks, Mode.FIKIT, pd, devices=2).run()
+    pl = h.placement
+    assert pl.device_of(0) is None                 # purged after retirement
+    pl.kernel_end(0, tasks[0].kernels[-1].kid, last=True)   # duplicate
+    assert pl.spurious_kernel_completions == 1
+    pl.kernel_end(99, tasks[0].kernels[0].kid)     # never-seen instance
+    assert pl.spurious_kernel_completions == 2
+    assert pl.task_end(0) == []                    # duplicate retirement
+    assert pl.spurious_task_ends == 1
+
+
+def test_unknown_discipline_rejected():
+    with pytest.raises(ValueError):
+        PlacementLayer(2, Mode.FIKIT, discipline="nope",
+                       launch=lambda d, r, f: None)
+    with pytest.raises(ValueError):
+        PlacementLayer(0, Mode.FIKIT, launch=lambda d, r, f: None)
+
+
+def test_k1_sim_multi_device_report_fields():
+    """SimReport carries device metadata; K=1 aggregate utilization is
+    unchanged from the pre-placement definition."""
+    tasks = _steal_scenario()
+    pd = _profiles(tasks)
+    rep1 = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0).run()
+    assert rep1.devices == 1 and rep1.steals == 0
+    assert rep1.per_device_utilization() == [rep1.utilization()]
+    rep2 = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0, devices=2).run()
+    assert rep2.devices == 2
+    assert len(rep2.per_device_utilization()) == 2
+    assert rep2.makespan <= rep1.makespan + 1e-12

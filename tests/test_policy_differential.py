@@ -361,6 +361,31 @@ def test_invariant_fifo_within_level(mode):
     assert released_set == [r for r in released if r in parked]
 
 
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+def test_ring_sink_records_same_suffix_as_list(mode):
+    """The ring trace sink must record exactly what the list sink records
+    (modulo capacity): a full-capacity ring equals the list trace, and an
+    undersized ring holds precisely the list trace's suffix. This puts the
+    ring path under the same oracle as the default sink."""
+    tasks = scenario_churn()
+    pd = _profiles(tasks)
+    ref = SimScheduler(tasks, mode, pd, jitter=0.0, trace="list")
+    ref.run()
+    full = list(ref.policy.trace)
+    assert full, "scenario produced no decisions"
+
+    # default "ring" capacity (4096) far exceeds the scenario: identical
+    ring = SimScheduler(tasks, mode, pd, jitter=0.0, trace="ring")
+    ring.run()
+    assert list(ring.policy.trace) == full
+
+    # a deliberately tiny ring keeps exactly the most recent decisions
+    cap = max(4, len(full) // 3)
+    tiny = SimScheduler(tasks, mode, pd, jitter=0.0, trace=cap)
+    tiny.run()
+    assert list(tiny.policy.trace) == full[-cap:]
+
+
 def test_holder_election_order():
     """Holder = (priority, arrival, instance) lexicographic minimum."""
     pd = _profiles(scenario_three_tiers())

@@ -1,4 +1,5 @@
 """Hypothesis property tests on the FIKIT system's invariants."""
+import heapq
 import math
 
 import pytest
@@ -8,6 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.fikit import best_prio_fit, fikit_procedure
 from repro.core.kernel_id import KernelID
+from repro.core.placement import DISCIPLINES
 from repro.core.profiler import ProfiledData, TaskProfile
 from repro.core.queues import PriorityQueues
 from repro.core.scheduler import Mode, SimScheduler, profile_tasks
@@ -155,6 +157,95 @@ def test_exclusive_jct_equals_solo_for_first(specs):
                             rel_tol=1e-9, abs_tol=1e-12)
     else:
         assert rep.jct(first) <= specs[first].solo_jct + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Multi-device placement invariants
+# ---------------------------------------------------------------------------
+@st.composite
+def placement_cases(draw):
+    """Arbitrary task/priority mixes x device counts x disciplines."""
+    specs = draw(task_specs())
+    devices = draw(st.integers(1, 4))
+    discipline = draw(st.sampled_from(sorted(DISCIPLINES)))
+    steal = draw(st.booleans())
+    mode = draw(st.sampled_from([Mode.FIKIT, Mode.PREEMPT, Mode.SHARING]))
+    return specs, devices, discipline, steal, mode
+
+
+@given(placement_cases())
+@settings(max_examples=80, deadline=None)
+def test_placement_request_accounting(case):
+    """At EVERY event of a multi-device run, per task:
+
+        queued + in_flight + completed == submitted
+
+    and the run terminates with nothing stranded on any device (no parked
+    request left behind by a steal, no fill slot leaked)."""
+    specs, devices, discipline, steal, mode = case
+    pd = profile_tasks(specs, T=2, measurement_overhead=0.0)
+    sim = SimScheduler(specs, mode, pd, devices=devices,
+                       discipline=discipline, steal=steal)
+    for i, t in enumerate(sim.tasks):
+        sim._push(t.arrival, "arrival", (i,))
+    while sim._heap:
+        sim.now, _, kind, payload = heapq.heappop(sim._heap)
+        getattr(sim, "_on_" + kind)(*payload)
+        for ti in range(len(specs)):
+            issued = sim._issued[ti]
+            done = sim._done_k[ti]
+            queued = sim.placement.queued_of(ti)
+            inflight = sim.placement.inflight_of(ti)
+            assert queued + inflight + done == issued, (
+                f"task {ti}: queued={queued} inflight={inflight} "
+                f"done={done} != submitted={issued}")
+    # terminated: every kernel ran, nothing parked, no fill slot leaked
+    for ti, spec in enumerate(specs):
+        assert sim._done_k[ti] == len(spec.kernels), \
+            f"task {ti} stranded with {sim._done_k[ti]} done"
+    assert sim.placement.queued == 0
+    for pol in sim.placement.policies:
+        assert pol.fills_in_flight == 0
+        assert not pol.active
+
+
+@given(placement_cases())
+@settings(max_examples=50, deadline=None)
+def test_placement_conservation_and_serial_devices(case):
+    """Every kernel executes exactly once on exactly one device; each
+    device timeline is serial; per-task intervals never overlap even
+    across steals; all tasks complete."""
+    specs, devices, discipline, steal, mode = case
+    pd = profile_tasks(specs, T=2, measurement_overhead=0.0)
+    rep = SimScheduler(specs, mode, pd, devices=devices,
+                       discipline=discipline, steal=steal).run()
+    for ti, spec in enumerate(specs):
+        execs = sorted((k.start, k.end, k.seq) for k in rep.timeline
+                       if k.task == ti)
+        assert [e[2] for e in execs] == list(range(len(spec.kernels)))
+        for (s0, e0, _), (s1, e1, _) in zip(execs, execs[1:]):
+            assert s1 >= e0 - 1e-12, f"task {ti} overlapped across devices"
+    for d in range(devices):
+        spans = sorted((k.start, k.end) for k in rep.timeline
+                       if k.device == d)
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert s1 >= e0 - 1e-12, f"device {d} not serial"
+    for r in rep.results:
+        assert r.completion >= r.arrival
+
+
+@given(task_specs(), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_placement_deterministic(specs, devices):
+    """Same seed + same placement config -> identical timelines."""
+    pd = profile_tasks(specs, T=2, measurement_overhead=0.0)
+    r1 = SimScheduler(specs, Mode.FIKIT, pd, devices=devices,
+                      jitter=0.02, seed=11).run()
+    r2 = SimScheduler(specs, Mode.FIKIT, pd, devices=devices,
+                      jitter=0.02, seed=11).run()
+    assert [k.__dict__ for k in r1.timeline] == \
+        [k.__dict__ for k in r2.timeline]
+    assert r1.steals == r2.steals
 
 
 @given(task_specs())

@@ -111,3 +111,63 @@ def test_fikit_mode_prioritizes_and_fills():
     assert res["hi"] < solo_hi * 2.2
     assert fills > 0                     # low kernels ran inside hi's gaps
     assert res["lo"] > 0
+
+
+def test_multi_device_threads_spread_and_steal():
+    """devices=2: two real device threads. A pinned discipline co-locates
+    hi+lo on device 0 (lo parks behind the hi holder) and sends tiny to
+    device 1; when tiny retires, device 1 goes idle and must steal the
+    fully-parked lo — across threads, with stream order preserved."""
+    from repro.core.kernel_id import KernelID
+    from repro.core.task import KernelRequest
+
+    def pin(layer, instance, key, priority, arrival):
+        return 1 if key.process == "tiny" else 0
+
+    def sleeper(dur):
+        def call():
+            time.sleep(dur)
+        return call
+
+    def reqs_for(key, prio, inst, n, dur):
+        return [KernelRequest(task_key=key, kernel_id=KernelID(f"{key.process}/k"),
+                              priority=prio, task_instance=inst, seq_index=i,
+                              payload=sleeper(dur)) for i in range(n)]
+
+    key_hi, key_lo, key_tiny = TaskKey("hi"), TaskKey("lo"), TaskKey("tiny")
+    with WallClockEngine(Mode.FIKIT, devices=2, discipline=pin) as eng:
+        # tiny FIRST: it must occupy device 1, otherwise lo's first parked
+        # submit already finds device 1 idle and steals immediately
+        eng.task_begin(3, key_tiny, 9)
+        tiny_futs = [eng.submit(r)
+                     for r in reqs_for(key_tiny, 9, 3, 1, 0.02)]
+        eng.task_begin(1, key_hi, 0)
+        hi_futs = [eng.submit(r) for r in reqs_for(key_hi, 0, 1, 4, 0.02)]
+        eng.task_begin(2, key_lo, 5)         # parks behind the hi holder
+        lo_futs = [eng.submit(r) for r in reqs_for(key_lo, 5, 2, 2, 0.003)]
+        assert eng.steal_count == 0          # both devices busy: no steal
+        for f in tiny_futs:
+            f.result(timeout=5)
+        eng.task_end(3)                      # device 1 idle -> steal lo
+        assert eng.steal_count == 1          # synchronous under the lock
+        for f in lo_futs:                    # stolen work actually runs
+            f.result(timeout=5)
+        eng.task_end(2)
+        for f in hi_futs:
+            f.result(timeout=5)
+        eng.task_end(1)
+        recs = eng.records()
+    by_task = {}
+    for r in recs:
+        by_task.setdefault(r.req.task_instance, []).append(r)
+    # lo migrated: both kernels ran on device 1, in seq order
+    assert [r.device for r in by_task[2]] == [1, 1]
+    lo_sorted = sorted(by_task[2], key=lambda r: r.start)
+    assert [r.req.seq_index for r in lo_sorted] == [0, 1]
+    # hi stayed on device 0 and was never blocked behind lo
+    assert all(r.device == 0 for r in by_task[1])
+    # per-device serial execution
+    for d in (0, 1):
+        spans = sorted((r.start, r.end) for r in recs if r.device == d)
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert s1 >= e0 - 1e-9
