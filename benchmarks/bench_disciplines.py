@@ -1,0 +1,133 @@
+"""Intra-device queue disciplines (fifo / sjf / edf) on a Fig 16/17-shaped
+serving mix: one interactive high-priority service sharing the device with
+deadline-tagged low-priority batch services.
+
+The mix mirrors the paper's cloud-serving combination (interactive hi
+service with real host gaps; device-bound lo services whose kernels fit
+those gaps) with the two ingredients the disciplines act on:
+
+- lo services of two kernel sizes (short 1 ms / long 3.5 ms, both
+  gap-fittable) — SJF clears the short streams first, which is where the
+  mean lo-JCT win comes from;
+- several instances per lo service, so instances TIE in predicted
+  duration, with completion deadlines anti-correlated with park order
+  (the urgent instance parks later) — FIFO tie-breaks serve the relaxed
+  instance first and blow the tight deadline; EDF's deadline tie-break
+  rescues it.
+
+Reported per discipline: mean hi-JCT (QoS must hold — gap filling still
+selects only lo work), mean lo-JCT, and the deadline-miss rate over the
+tagged lo tasks. Acceptance gates (tracked in BENCH_disciplines.json):
+
+    sjf_lo_jct_ok:  SJF mean lo-JCT <= FIFO mean lo-JCT
+    edf_miss_ok:    EDF deadline misses <= FIFO deadline misses
+
+Set BENCH_SMOKE=1 (CI) for a reduced instance count.
+
+``main`` returns the Csv with a ``json_payload`` attribute —
+``benchmarks.run`` persists it as BENCH_disciplines.json so the
+discipline trade-off is tracked across PRs.
+"""
+from __future__ import annotations
+
+import os
+import statistics as st
+
+from benchmarks.common import Csv
+from repro.core.kernel_id import KernelID
+from repro.core.queues import QUEUE_DISCIPLINES
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+#: deadline slack (s) relative to arrival: tight on the LATER-parked
+#: instance of each lo pair, loose on the earlier one, so FIFO park-order
+#: tie-breaks work against the deadlines and EDF has something to fix
+TIGHT_SHORT, LOOSE_SHORT = 0.12, 0.55
+TIGHT_LONG, LOOSE_LONG = 0.18, 0.60
+
+
+def discipline_mix(n_hi: int, n_short: int, n_long: int):
+    """Interactive hi service (2 ms kernels, 5 ms host gaps, paced
+    instances) + gap-fittable lo batch instances in two kernel sizes, each
+    deadline-tagged."""
+    tasks = []
+    for i in range(n_hi):
+        tasks.append(TaskSpec(
+            TaskKey("hi"), 0,
+            [TraceKernel(KernelID("hi/layer"), 0.002, 0.005)] * 12,
+            arrival=0.09 * i))
+    for i in range(n_short):
+        arrival = 0.001 + 0.0002 * i
+        slack = TIGHT_SHORT if i % 2 == 0 else LOOSE_SHORT
+        tasks.append(TaskSpec(
+            TaskKey("lo_short"), 5,
+            [TraceKernel(KernelID("lo_short/layer"), 0.001, 0.0002)] * 18,
+            arrival=arrival, deadline=arrival + slack))
+    for i in range(n_long):
+        arrival = 0.002 + 0.0002 * i
+        slack = TIGHT_LONG if i % 2 == 1 else LOOSE_LONG
+        tasks.append(TaskSpec(
+            TaskKey("lo_long"), 5,
+            [TraceKernel(KernelID("lo_long/layer"), 0.0035, 0.0002)] * 10,
+            arrival=arrival, deadline=arrival + slack))
+    return tasks
+
+
+def main(csvout=None):
+    csvout = csvout or Csv(("name", "value", "derived"))
+    n_hi, n_short, n_long = (3, 2, 2) if SMOKE else (6, 4, 4)
+    tasks = discipline_mix(n_hi, n_short, n_long)
+    hi_idx = [i for i, t in enumerate(tasks) if t.priority == 0]
+    lo_idx = [i for i, t in enumerate(tasks) if t.priority > 0]
+    profiled = profile_tasks(tasks, T=3, jitter=0.0,
+                             measurement_overhead=0.0)
+
+    sweep = {}
+    for disc in QUEUE_DISCIPLINES:
+        rep = SimScheduler(tasks, Mode.FIKIT, profiled, jitter=0.03,
+                           seed=0, queue_discipline=disc).run()
+        sweep[disc] = {
+            "hi_jct_ms": round(1e3 * st.mean(rep.jct(i) for i in hi_idx),
+                               3),
+            "lo_jct_ms": round(1e3 * st.mean(rep.jct(i) for i in lo_idx),
+                               3),
+            "deadline_misses": rep.deadline_misses,
+            "deadlines_tagged": rep.deadlines_tagged,
+            "deadline_miss_rate": round(rep.deadline_miss_rate, 3),
+            "fills": rep.fills,
+        }
+        s = sweep[disc]
+        csvout.add(f"{disc}", s["lo_jct_ms"],
+                   f"hi JCT {s['hi_jct_ms']} ms, misses "
+                   f"{s['deadline_misses']}/{s['deadlines_tagged']}, "
+                   f"fills {s['fills']}")
+
+    sjf_ok = sweep["sjf"]["lo_jct_ms"] <= sweep["fifo"]["lo_jct_ms"] + 1e-9
+    edf_ok = (sweep["edf"]["deadline_misses"]
+              <= sweep["fifo"]["deadline_misses"])
+    csvout.add("sjf lo-JCT vs fifo",
+               round(sweep["sjf"]["lo_jct_ms"]
+                     / sweep["fifo"]["lo_jct_ms"], 3),
+               "OK (<= 1.0 wanted)" if sjf_ok else "ABOVE FIFO")
+    csvout.add("edf misses vs fifo",
+               f"{sweep['edf']['deadline_misses']}"
+               f"/{sweep['fifo']['deadline_misses']}",
+               "OK" if edf_ok else "MORE MISSES THAN FIFO")
+    csvout.emit("Queue disciplines on the Fig16/17 serving mix "
+                "(lo JCT: sjf; deadline misses: edf; hi QoS: all)")
+    csvout.json_payload = {
+        "smoke": SMOKE,
+        "n_hi": n_hi,
+        "n_short": n_short,
+        "n_long": n_long,
+        "sweep": sweep,
+        "sjf_lo_jct_ok": sjf_ok,
+        "edf_miss_ok": edf_ok,
+    }
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

@@ -42,19 +42,23 @@ def _timeit(fn, n=2000):
     return (time.perf_counter() - t0) / n * 1e6   # us
 
 
-def _loaded_queues(depth: int):
+def _loaded_queues(depth: int, discipline: str = "fifo"):
     """depth waiting requests, each its own stream, spread over Q0..Q9,
-    with profiled durations on a small grid (ties included)."""
+    with profiled durations on a small grid (ties included). Non-FIFO
+    disciplines get deadline tags on half the requests (the EDF index has
+    both dated and undated entries to keep sorted)."""
     pd = ProfiledData()
-    qs = PriorityQueues()
+    qs = PriorityQueues(discipline_by_level=discipline)
     for i in range(depth):
         key = TaskKey(f"t{i}")
         kid = KernelID(f"k{i}")
         prof = TaskProfile(key=key, runs=1)
         prof.SK[kid] = 0.001 * (1 + i % 7)
         pd.load(prof)
+        deadline = None if discipline == "fifo" or i % 2 else \
+            0.01 * (1 + i % 11)
         qs.push(KernelRequest(task_key=key, kernel_id=kid, priority=i % 10,
-                              task_instance=i))
+                              task_instance=i, deadline=deadline))
     return pd, qs
 
 
@@ -105,6 +109,33 @@ def _sweep(csvout):
     return sweep
 
 
+def _discipline_sweep(csvout):
+    """Per-decision fill latency (fit + dequeue + requeue) under each queue
+    discipline at a fixed deep queue — the sjf/edf paths are extra bisects
+    over the same indexes and must stay within 2x of the fifo fast path."""
+    depth = 4096
+    reps = 200 if SMOKE else 2000
+    out = {"depth": depth, "per_decision_us": {}}
+    for disc in ("fifo", "sjf", "edf"):
+        pd, qs = _loaded_queues(depth, discipline=disc)
+
+        def probe_hit():
+            r, d = best_prio_fit(qs, 0.0025, pd)  # fits 0.001/0.002 heads
+            qs.push(r)                            # restore depth
+        us = _timeit(probe_hit, n=reps)
+        out["per_decision_us"][disc] = round(us, 3)
+        csvout.add(f"best_prio_fit({disc}, {depth} waiting, fit+dequeue)",
+                   round(us, 2), "queue-discipline overhead")
+    fifo_us = out["per_decision_us"]["fifo"]
+    ratio = max(out["per_decision_us"][d] / fifo_us
+                for d in ("sjf", "edf"))
+    out["max_overhead_vs_fifo"] = round(ratio, 2)
+    out["within_2x_of_fifo"] = ratio <= 2.0
+    csvout.add("discipline overhead vs fifo", round(ratio, 2),
+               "OK (<= 2x)" if ratio <= 2.0 else "ABOVE 2x FIFO")
+    return out
+
+
 def main(csvout=None):
     csvout = csvout or Csv()
     x = np.zeros((8, 128, 256), np.float32)
@@ -113,6 +144,7 @@ def main(csvout=None):
                "per dispatch (sharing stage)")
 
     sweep = _sweep(csvout)
+    disciplines = _discipline_sweep(csvout)
 
     pd, qs = _loaded_queues(64)
 
@@ -139,6 +171,7 @@ def main(csvout=None):
         "smoke": SMOKE,
         "kernel_id_for_us": round(kid_us, 3),
         "best_prio_fit_sweep": sweep,
+        "queue_discipline_sweep": disciplines,
         "fikit_procedure_nofit_us": round(fill_us, 3),
         "profiler_statistics_us": round(stats_us, 3),
     }

@@ -24,3 +24,17 @@ print("--- mode=fikit devices=2 (placement layer) ---")
 out = serve_pair("qwen3-4b", "mamba2-2.7b", mode="fikit", requests=6,
                  measure_runs=4, devices=2)
 print()
+
+# Intra-device queue disciplines (repro.core.queues.QUEUE_DISCIPLINES):
+# "sjf" orders each priority level shortest-predicted-first; "edf" orders
+# by the per-request deadline tag — here every low-priority invocation
+# carries a 250 ms budget, and deadline_misses counts blown budgets.
+print("--- mode=fikit discipline=sjf ---")
+out = serve_pair("qwen3-4b", "mamba2-2.7b", mode="fikit", requests=6,
+                 measure_runs=4, discipline="sjf")
+print()
+
+print("--- mode=fikit discipline=edf deadline=0.25 ---")
+out = serve_pair("qwen3-4b", "mamba2-2.7b", mode="fikit", requests=6,
+                 measure_runs=4, discipline="edf", deadline=0.25)
+print()

@@ -1,0 +1,104 @@
+"""Docs integrity check: every internal link and repo path referenced by
+the maintained docs must exist.
+
+    python -m scripts.check_doc_refs
+
+Checked documents: README.md, docs/ARCHITECTURE.md (plus any extra paths
+passed as argv). Two kinds of references are verified against the
+repository tree:
+
+- markdown link targets ``[text](target)`` — external schemes
+  (http/https/mailto) and pure in-page anchors are skipped; relative
+  targets resolve against the containing document's directory, anchors
+  stripped;
+- path-shaped inline code spans ```like/this.py``` — a span counts as a
+  path when it contains a ``/``, is made of plain path characters (no
+  spaces, globs, placeholders, or call syntax), and ends in a known text/
+  code extension or lives under a known top-level directory. Module
+  dotted names (``repro.core.policy``), CLI snippets, and ``<name>``
+  templates are deliberately not matched.
+
+Exit status 1 with a per-reference listing when anything dangles, so CI
+fails the docs job instead of shipping broken links.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = ("README.md", "docs/ARCHITECTURE.md")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE = re.compile(r"`([^`\n]+)`")
+# plain path characters only: letters/digits . _ - / (no spaces, globs,
+# angle brackets, parens, colons)
+_PATHISH = re.compile(r"^[A-Za-z0-9_.\-/]+$")
+_EXTS = (".py", ".md", ".json", ".toml", ".yml", ".yaml", ".txt", ".cfg")
+_TOP_DIRS = ("src", "tests", "benchmarks", "examples", "docs", "scripts",
+             ".github")
+
+
+def _iter_link_targets(text: str):
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield m.group(0), target.split("#", 1)[0]
+
+
+def _iter_code_paths(text: str):
+    for m in _CODE.finditer(text):
+        span = m.group(1)
+        # strip a trailing ::Symbol qualifier (module path still checked)
+        path = span.split("::", 1)[0]
+        if "/" not in path or not _PATHISH.match(path):
+            continue
+        if not (path.endswith(_EXTS)
+                or path.split("/", 1)[0] in _TOP_DIRS):
+            continue
+        yield f"`{span}`", path
+
+
+def check_document(doc: Path):
+    """-> list of (reference, resolved_path) that do not exist."""
+    text = doc.read_text(encoding="utf-8")
+    missing = []
+    for ref, target in _iter_link_targets(text):
+        if not target:
+            continue
+        resolved = (doc.parent / target).resolve()
+        if not resolved.exists():
+            missing.append((ref, target))
+    for ref, path in _iter_code_paths(text):
+        if not (REPO / path).exists():
+            missing.append((ref, path))
+    return missing
+
+
+def main(argv=None) -> int:
+    docs = [REPO / d for d in DOCS]
+    docs += [Path(p) for p in (argv or sys.argv[1:])]
+    failures = 0
+    for doc in docs:
+        if not doc.exists():
+            print(f"MISSING DOCUMENT: {doc}")
+            failures += 1
+            continue
+        missing = check_document(doc)
+        rel = doc.relative_to(REPO) if doc.is_relative_to(REPO) else doc
+        if missing:
+            failures += len(missing)
+            for ref, target in missing:
+                print(f"{rel}: dangling reference {ref} -> {target}")
+        else:
+            print(f"{rel}: OK")
+    if failures:
+        print(f"\n{failures} dangling reference(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

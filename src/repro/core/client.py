@@ -58,11 +58,19 @@ class HookClient:
         self.identify = identify   # off = "base" env (no kernel-ID hook)
 
     # ------------------------------------------------------------- sharing
-    def run(self, state) -> Tuple[object, float]:
+    def run(self, state, deadline: Optional[float] = None
+            ) -> Tuple[object, float]:
         """Execute one task (all segments) under the scheduler. Returns
-        (final_state, wall JCT)."""
+        (final_state, wall JCT).
+
+        ``deadline`` is a completion budget in seconds RELATIVE to this
+        call; it is converted to the engine's absolute clock
+        (``perf_counter``) and tagged onto every kernel request, where
+        ``edf``-disciplined queue levels order by it. The caller judges a
+        miss by comparing the returned JCT against the budget."""
         inst = next(_instances)
         t_begin = time.perf_counter()
+        abs_deadline = None if deadline is None else t_begin + deadline
         self.engine.task_begin(inst, self.key, self.priority)
         try:
             for i, seg in enumerate(self.segments):
@@ -71,7 +79,8 @@ class HookClient:
                 req = KernelRequest(task_key=self.key, kernel_id=kid,
                                     priority=self.priority,
                                     task_instance=inst, seq_index=i,
-                                    payload=_bind(seg.fn, state))
+                                    payload=_bind(seg.fn, state),
+                                    deadline=abs_deadline)
                 fut = self.engine.submit(req)
                 state, _, _ = fut.result()
                 if seg.host_work is not None:

@@ -65,7 +65,13 @@ class WallClockEngine:
                  epsilon: float = EPSILON, trace: str = "list",
                  devices: int = 1,
                  discipline: DisciplineSpec = "least_loaded",
+                 queue_discipline="fifo",
                  steal: bool = True):
+        """queue_discipline selects the per-level intra-device queue
+        ordering ("fifo" default / "sjf" / "edf"); request deadlines for
+        edf levels are absolute ``time.perf_counter`` seconds (the
+        engine's clock), which ``HookClient.run(deadline=...)`` derives
+        from a caller-relative budget."""
         self.mode = mode
         self.profiled = profiled or ProfiledData()
         self.devices = devices
@@ -77,6 +83,7 @@ class WallClockEngine:
         # did for the bare single-device policy.
         self.placement = PlacementLayer(devices, mode, self.profiled,
                                         discipline=discipline, steal=steal,
+                                        queue_discipline=queue_discipline,
                                         pipeline_depth=pipeline_depth,
                                         feedback=feedback, epsilon=epsilon,
                                         clock=time.perf_counter,

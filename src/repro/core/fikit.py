@@ -21,8 +21,19 @@ single task instance (one CUDA stream) only the OLDEST queued kernel is
 eligible. A stream's kernels execute in issue order, so selecting kernel
 i+1 as a filler while kernel i is still parked would reorder the stream —
 and let a task retire with orphaned requests stuck in the queues.
+
+Queue disciplines: when a ``PriorityQueues`` level is configured ``sjf``
+or ``edf`` (see ``repro.core.queues``), the fill selection at that level
+changes — SJF picks the SHORTEST profiled fitting head, EDF keeps the
+longest-fit criterion but breaks predicted-duration ties to the earliest
+deadline. Both ``best_prio_fit`` (indexed) and ``best_prio_fit_scan``
+(O(n) oracle) implement every discipline; the default all-``fifo``
+configuration is the paper's Algorithm 2, bit-identical to the
+pre-discipline implementation.
 """
 from __future__ import annotations
+
+import math
 
 from typing import Callable, List, Optional, Tuple
 
@@ -39,10 +50,17 @@ def best_prio_fit(queues: PriorityQueues, idle_time: float,
                   ) -> Tuple[Optional[KernelRequest], float]:
     """Algorithm 2: Sharing Stage Idling Gap Filling Policy.
 
-    Indexed fast path: first non-empty level -> predecessor search for the
-    longest stream-head under ``idle_time`` in that level's duration index.
-    O(levels * log n) per decision instead of O(total queued); dequeue of
-    the selected request is O(log n) index maintenance.
+    Indexed fast path: first non-empty level -> a handful of bisects in
+    that level's head index (predecessor search for FIFO/EDF levels,
+    successor search for SJF levels). O(levels * log n) per decision
+    instead of O(total queued); dequeue of the selected request is
+    O(log n) index maintenance.
+
+    Oracle contract: ``best_prio_fit_scan`` is the O(n) reference with
+    IDENTICAL selection semantics for every queue discipline — same
+    request, same returned duration, for any queue state. The randomized
+    differential suite in ``tests/test_policy_differential.py`` pins the
+    two trace-identical; extend that suite whenever either side changes.
     """
     with queues.lock():
         queues.ensure_index(profiled)
@@ -55,28 +73,68 @@ def best_prio_fit(queues: PriorityQueues, idle_time: float,
 def best_prio_fit_scan(queues: PriorityQueues, idle_time: float,
                        profiled: ProfiledData,
                        ) -> Tuple[Optional[KernelRequest], float]:
-    """Reference oracle: the original O(total queued) linear scan.
+    """Reference oracle: the O(total queued) linear scan.
 
-    Kept verbatim so the differential tests can assert the indexed fast
-    path makes bit-identical decisions; never used on the hot path."""
+    The FIFO branch is the original implementation kept verbatim
+    (first-seen-wins FIFO walk, ``best > 0`` level-stop rule); the SJF and
+    EDF branches define those disciplines' selection semantics the same
+    way — by a plain scan over the level's FIFO snapshot, no index. The
+    differential tests assert the indexed fast path makes bit-identical
+    decisions against this function; never used on the hot path."""
     best_kernel_time = -1.0
     best_kernel_req: Optional[KernelRequest] = None
     with queues.lock():
         seen_streams = set()
         for priority in range(queues.levels):          # highest -> lowest
-            for kernel_req in queues[priority]:        # FIFO within a level
+            discipline = queues.discipline_of(priority)
+            if discipline == "fifo":
+                for kernel_req in queues[priority]:    # FIFO within a level
+                    stream = (kernel_req.task_key, kernel_req.task_instance)
+                    if stream in seen_streams:
+                        continue                       # not head-of-stream
+                    seen_streams.add(stream)
+                    task_key = kernel_req.task_key
+                    kernel_id = kernel_req.kernel_id
+                    predicted = profiled.predict_duration(task_key,
+                                                          kernel_id)
+                    if best_kernel_time < predicted < idle_time:
+                        best_kernel_time = predicted
+                        best_kernel_req = kernel_req
+                if best_kernel_time > 0:
+                    break      # longest fit found at this priority level
+                continue
+            # SJF/EDF: the first level holding any profiled fitting head
+            # claims the decision; its candidate replaces a carried best
+            # only if strictly longer (the same strictly-better rule the
+            # FIFO branch applies across levels).
+            cand_req = None
+            cand_time = -1.0
+            cand_dl = math.inf
+            for kernel_req in queues[priority]:        # FIFO walk: seq asc
                 stream = (kernel_req.task_key, kernel_req.task_instance)
                 if stream in seen_streams:
                     continue                           # not head-of-stream
                 seen_streams.add(stream)
-                task_key = kernel_req.task_key
-                kernel_id = kernel_req.kernel_id
-                predicted = profiled.predict_duration(task_key, kernel_id)
-                if best_kernel_time < predicted < idle_time:
-                    best_kernel_time = predicted
-                    best_kernel_req = kernel_req
-            if best_kernel_time > 0:
-                break      # longest fit found at this priority level
+                predicted = profiled.predict_duration(kernel_req.task_key,
+                                                      kernel_req.kernel_id)
+                if not (-1.0 < predicted < idle_time):
+                    continue                           # unprofiled / no fit
+                if discipline == "sjf":
+                    # shortest fitting; first-seen-wins keeps FIFO ties
+                    if cand_req is None or predicted < cand_time:
+                        cand_req, cand_time = kernel_req, predicted
+                else:  # edf: longest fitting, deadline tie-break
+                    dl = (kernel_req.deadline
+                          if kernel_req.deadline is not None else math.inf)
+                    if cand_req is None or predicted > cand_time or \
+                            (predicted == cand_time and dl < cand_dl):
+                        cand_req, cand_time, cand_dl = \
+                            kernel_req, predicted, dl
+            if cand_req is not None:
+                if cand_time > best_kernel_time:
+                    best_kernel_req = cand_req
+                    best_kernel_time = cand_time
+                break                       # this level claims the decision
         if best_kernel_req is not None:
             queues.remove(best_kernel_req)
     return best_kernel_req, best_kernel_time

@@ -55,6 +55,7 @@ from typing import Callable, Dict, List, Optional, Set, Union
 from repro.core.fikit import EPSILON
 from repro.core.policy import ActiveTask, FikitPolicy, Mode, TraceSpec
 from repro.core.profiler import ProfiledData
+from repro.core.queues import QueueDisciplineSpec
 from repro.core.task import NUM_PRIORITIES, KernelRequest, TaskKey
 
 
@@ -76,6 +77,23 @@ def _round_robin(layer: "PlacementLayer", instance: int, key: TaskKey,
     return d
 
 
+#: The placement-discipline registry: device-election strategies for
+#: ``PlacementLayer(discipline=...)``. Each entry is a callable
+#: ``fn(layer, instance, key, priority, arrival) -> device index`` in
+#: ``range(layer.devices)``.
+#:
+#: Contract for every discipline (built-in or custom): it MUST return 0
+#: when ``layer.devices == 1``. K=1 placement is a pinned pass-through —
+#: the entire single-device differential suite runs through the layer, so
+#: a discipline that routes anywhere else at K=1 breaks the
+#: trace-identity guarantee (and ``task_begin`` rejects out-of-range
+#: devices outright). To add a discipline: register it here, then extend
+#: ``tests/test_placement_differential.py`` — the randomized invariant
+#: sweep rotates through ``sorted(DISCIPLINES)`` automatically, but add a
+#: directed test for the discipline's routing property and keep the K=1
+#: head-to-head green. Distinct from the per-level QUEUE disciplines
+#: (``repro.core.queues.QUEUE_DISCIPLINES``), which order parked requests
+#: WITHIN one device's priority levels.
 DISCIPLINES: Dict[str, Callable] = {
     "least_loaded": _least_loaded,
     "priority_affinity": _priority_affinity,
@@ -109,6 +127,7 @@ class PlacementLayer:
     def __init__(self, devices: int, mode: Mode,
                  profiled: Optional[ProfiledData] = None, *,
                  discipline: DisciplineSpec = "least_loaded",
+                 queue_discipline: QueueDisciplineSpec = "fifo",
                  steal: bool = True,
                  pipeline_depth: int = 2, feedback: bool = True,
                  epsilon: float = EPSILON,
@@ -145,12 +164,16 @@ class PlacementLayer:
 
         # each policy gets its own trace sink: a str/int spec constructs a
         # fresh sink per policy; passing a sink OBJECT shares it across all
-        # devices (useful for a merged custom log, surprising otherwise)
+        # devices (useful for a merged custom log, surprising otherwise).
+        # queue_discipline likewise instantiates per device: every policy
+        # owns its own indexed PriorityQueues under the same spec.
+        self.queue_discipline = queue_discipline
         self.policies: List[FikitPolicy] = [
             FikitPolicy(mode, self.profiled, pipeline_depth=pipeline_depth,
                         feedback=feedback, epsilon=epsilon, clock=clock,
                         launch=device_launcher(d), threadsafe=threadsafe,
-                        trace=trace, reference=reference)
+                        trace=trace, discipline=queue_discipline,
+                        reference=reference)
             for d in range(devices)]
 
         self._device_of: Dict[int, int] = {}

@@ -104,7 +104,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 from repro.core.fikit import EPSILON, best_prio_fit, best_prio_fit_scan
 from repro.core.kernel_id import KernelID
 from repro.core.profiler import ProfiledData
-from repro.core.queues import PriorityQueues
+from repro.core.queues import PriorityQueues, QueueDisciplineSpec
 from repro.core.task import KernelRequest, TaskKey
 
 
@@ -190,12 +190,20 @@ class FikitPolicy:
     - ``task_end(instance)`` when a task retires; returns the instances
       newly admitted by EXCLUSIVE serialization (empty otherwise).
 
+    ``discipline`` selects the per-level queue discipline
+    (``repro.core.queues.QUEUE_DISCIPLINES``: ``"fifo"`` — the paper's
+    pinned default, ``"sjf"``, ``"edf"`` — or a per-level mapping/
+    sequence). It governs how parked requests are ordered WITHIN a
+    priority level (drain pops and gap-fill selection); cross-level
+    priority order, holder election, and release semantics are untouched.
+
     ``threadsafe=False`` elides the priority-queue RLock for
     single-threaded drivers (the simulator); the threaded wall-clock
-    engine keeps it. ``reference=True`` switches BOTH fast paths back to
+    engine keeps it. ``reference=True`` switches the fast paths back to
     their O(n) reference implementations (linear-scan BestPrioFit,
-    re-elected holder on every probe) — the oracle the differential tests
-    compare the indexed/cached path against.
+    scan-selected discipline pops, re-elected holder on every probe) —
+    the oracle the differential tests compare the indexed/cached path
+    against.
     """
 
     def __init__(self, mode: Mode,
@@ -206,6 +214,7 @@ class FikitPolicy:
                  launch: Callable[[KernelRequest, bool], None] = None,
                  threadsafe: bool = True,
                  trace: TraceSpec = "list",
+                 discipline: QueueDisciplineSpec = "fifo",
                  reference: bool = False):
         if launch is None:
             raise TypeError("FikitPolicy requires a launch hook")
@@ -217,10 +226,13 @@ class FikitPolicy:
         self._clock = clock
         self._launch_hook = launch
         self.reference = reference
+        self.discipline = discipline
         self._fit = best_prio_fit_scan if reference else best_prio_fit
 
         self.queues = PriorityQueues(profiled=self.profiled,
-                                     threadsafe=threadsafe)
+                                     threadsafe=threadsafe,
+                                     discipline_by_level=discipline,
+                                     reference=reference)
         self.active: Dict[int, ActiveTask] = {}
         self.trace = make_trace_sink(trace)
         self._trace_on = getattr(self.trace, "enabled", True)
@@ -450,7 +462,8 @@ class FikitPolicy:
     def _release_new_holder(self) -> None:
         holder = self.holder()
         if holder is None:
-            req = self.queues.pop_highest()        # drain leftovers FIFO
+            # drain leftovers: priority-major, per-level discipline order
+            req = self.queues.pop_highest()
             while req is not None:
                 self._launch(req, tag="drain")
                 req = self.queues.pop_highest()

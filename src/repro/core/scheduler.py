@@ -77,9 +77,20 @@ class SimReport:
     overshoot_time: float = 0.0   # filler time past actual gap end ("ovh 2")
     devices: int = 1
     steals: int = 0
+    #: deadline-tagged tasks that completed after their deadline / that
+    #: carried one at all (EDF instrumentation; 0/0 without deadlines)
+    deadline_misses: int = 0
+    deadlines_tagged: int = 0
 
     def jct(self, i: int) -> float:
         return self.results[i].jct
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        """Fraction of deadline-tagged tasks that missed (0.0 if none)."""
+        if self.deadlines_tagged == 0:
+            return 0.0
+        return self.deadline_misses / self.deadlines_tagged
 
     @property
     def makespan(self) -> float:
@@ -111,6 +122,7 @@ class SimScheduler:
                  trace: str = "list", reference: bool = False,
                  devices: int = 1,
                  discipline: DisciplineSpec = "least_loaded",
+                 queue_discipline="fifo",
                  steal: bool = True):
         """measurement_overhead: multiplier on kernel durations (the paper's
         20-80% measuring-stage slowdown), used to simulate the measurement
@@ -120,7 +132,11 @@ class SimScheduler:
         selection; the O(n) reference oracle for differential testing).
         devices/discipline/steal configure the PlacementLayer: K serial
         device timelines, device election per task, and idle-device work
-        stealing (no-ops at devices=1)."""
+        stealing (no-ops at devices=1). queue_discipline selects the
+        per-level intra-device queue ordering ("fifo" default / "sjf" /
+        "edf" — see repro.core.queues.QUEUE_DISCIPLINES); TaskSpec.deadline
+        tags flow onto every kernel request for edf levels and the
+        SimReport.deadline_misses counter."""
         self.tasks = tasks
         self.mode = mode
         self.profiled = profiled or ProfiledData()
@@ -143,6 +159,7 @@ class SimScheduler:
         # single-threaded discrete-event driver: elide the queue lock
         self.placement = PlacementLayer(devices, mode, self.profiled,
                                         discipline=discipline, steal=steal,
+                                        queue_discipline=queue_discipline,
                                         pipeline_depth=pipeline_depth,
                                         feedback=feedback, epsilon=epsilon,
                                         clock=lambda: self.now,
@@ -170,11 +187,16 @@ class SimScheduler:
         while self._heap:
             self.now, _, kind, payload = heapq.heappop(self._heap)
             getattr(self, "_on_" + kind)(*payload)
+        tagged = [(t, r) for t, r in zip(self.tasks, self.results)
+                  if t.deadline is not None]
         return SimReport(self.results, self.timeline,
                          fills=self.placement.fill_count,
                          overshoot_time=self.placement.overshoot_time,
                          devices=self.devices,
-                         steals=self.placement.steal_count)
+                         steals=self.placement.steal_count,
+                         deadline_misses=sum(1 for t, r in tagged
+                                             if r.completion > t.deadline),
+                         deadlines_tagged=len(tagged))
 
     # --------------------------------------------------------------- clients
     def _on_arrival(self, ti: int) -> None:
@@ -201,7 +223,8 @@ class SimScheduler:
                             kernel_id=task.kernels[ki].kid,
                             priority=task.priority, task_instance=ti,
                             seq_index=ki, submit_time=self.now,
-                            payload=task.kernels[ki].duration)
+                            payload=task.kernels[ki].duration,
+                            deadline=task.deadline)
         # async clients schedule the next host-side issue now
         if task.max_inflight > 1 and ki + 1 < len(task.kernels):
             self._push(self.now + self._noisy(task.kernels[ki].gap_after),

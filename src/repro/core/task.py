@@ -51,7 +51,14 @@ _req_counter = itertools.count()
 @dataclass
 class KernelRequest:
     """A kernel launch request traveling hook-client -> scheduler (paper's
-    UDP message)."""
+    UDP message).
+
+    ``deadline`` is an optional absolute completion deadline (same clock as
+    the driving engine: virtual seconds in the simulator, ``perf_counter``
+    seconds in the wall-clock engine) carried from the owning task. It is
+    only consulted by ``edf``-disciplined priority-queue levels; requests
+    without a deadline sort after every dated request and keep FIFO order
+    among themselves."""
     task_key: TaskKey
     kernel_id: KernelID
     priority: int
@@ -59,6 +66,7 @@ class KernelRequest:
     seq_index: int = 0            # kernel index within the task
     submit_time: float = 0.0
     payload: Any = None           # sim: true duration | wallclock: callable
+    deadline: Optional[float] = None
     uid: int = field(default_factory=lambda: next(_req_counter))
 
     def __repr__(self):
@@ -82,6 +90,10 @@ class TaskSpec:
     kernels: List[TraceKernel]
     arrival: float = 0.0
     max_inflight: int = 1
+    #: optional absolute completion deadline (sim seconds). Tagged onto
+    #: every kernel request of the task; drives ``edf`` queue levels and
+    #: the ``SimReport.deadline_misses`` counter.
+    deadline: Optional[float] = None
 
     @property
     def solo_jct(self) -> float:

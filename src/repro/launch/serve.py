@@ -2,7 +2,8 @@
 batched requests — the end-to-end serving example path.
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --high qwen3-4b --low mamba2-2.7b --mode fikit --requests 10
+        --high qwen3-4b --low mamba2-2.7b --mode fikit --requests 10 \
+        --discipline sjf
 """
 from __future__ import annotations
 
@@ -10,6 +11,7 @@ import argparse
 import statistics as st
 
 from repro.config import get_config
+from repro.core.queues import QUEUE_DISCIPLINES
 from repro.core.scheduler import Mode
 from repro.serving import InferenceService, ServingSystem
 
@@ -17,24 +19,35 @@ from repro.serving import InferenceService, ServingSystem
 def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
                measure_runs: int = 4, batch: int = 2, seq: int = 48,
                host_gap: float = 0.002, devices: int = 1,
+               discipline: str = "fifo", deadline: float = None,
                verbose: bool = True):
+    """Host a high/low priority service pair on the wall-clock engine.
+
+    ``discipline`` is the intra-device queue discipline ("fifo"/"sjf"/
+    "edf"); ``deadline`` optionally gives every LOW-priority invocation a
+    relative completion budget in seconds — the tag edf levels order by,
+    and the source of the ``deadline_misses`` stat."""
     hi = InferenceService(get_config(high).reduced(), priority=0,
                           batch=batch, seq=seq, host_gap=host_gap)
     lo = InferenceService(get_config(low).reduced(), priority=5,
                           batch=batch * 2, seq=seq)
     with ServingSystem(Mode(mode), measure_runs=measure_runs,
-                       devices=devices) as sys_:
+                       devices=devices,
+                       queue_discipline=discipline) as sys_:
         meas_hi = sys_.onboard(hi)
         meas_lo = sys_.onboard(lo)
         res = sys_.invoke_concurrent([
             ("high", hi, requests, 0.0, 0.01),
-            ("low", lo, requests, 0.0, 0.0),
+            ("low", lo, requests, 0.0, 0.0, deadline),
         ])
         fills = sys_.engine.fill_count
         steals = sys_.engine.steal_count
+        misses = sys_.deadline_misses
+        tagged = sys_.deadlines_tagged
     out = {
         "mode": mode,
         "devices": devices,
+        "discipline": discipline,
         "measure_high_ms": 1e3 * st.mean(meas_hi),
         "measure_low_ms": 1e3 * st.mean(meas_lo),
         "high_jct_ms": 1e3 * st.mean(res["high"]),
@@ -43,6 +56,8 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
         "low_jct_cv": (st.pstdev(res["low"]) / st.mean(res["low"])),
         "fills": fills,
         "steals": steals,
+        "deadline_misses": misses,
+        "deadlines_tagged": tagged,
     }
     if verbose:
         for k, v in out.items():
@@ -59,9 +74,17 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--devices", type=int, default=1,
                     help="number of device executors (placement layer)")
+    ap.add_argument("--discipline", default="fifo",
+                    choices=sorted(QUEUE_DISCIPLINES),
+                    help="intra-device queue discipline")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="relative completion budget (s) tagged onto "
+                         "low-priority invocations (edf ordering + "
+                         "deadline_misses stat)")
     args = ap.parse_args()
     serve_pair(args.high, args.low, args.mode, args.requests,
-               devices=args.devices)
+               devices=args.devices, discipline=args.discipline,
+               deadline=args.deadline)
 
 
 if __name__ == "__main__":

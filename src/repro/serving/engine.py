@@ -57,21 +57,34 @@ class InferenceService:
 
 
 class ServingSystem:
-    """Owns the engine + profile store; runs measurement then sharing."""
+    """Owns the engine + profile store; runs measurement then sharing.
+
+    ``discipline`` elects the device per invocation (placement);
+    ``queue_discipline`` orders parked requests within each device's
+    priority levels ("fifo" default / "sjf" / "edf"). Invocations may
+    carry a relative ``deadline`` budget (seconds): it is tagged onto
+    every kernel request (consulted by edf levels) and drives the
+    ``deadline_misses``/``deadlines_tagged`` serving stats."""
 
     def __init__(self, mode: Mode = Mode.FIKIT, measure_runs: int = 5,
-                 devices: int = 1, discipline: str = "least_loaded"):
+                 devices: int = 1, discipline: str = "least_loaded",
+                 queue_discipline: str = "fifo"):
         self.profiles = ProfiledData()
         self.mode = mode
         self.measure_runs = measure_runs
         self.devices = devices
         self.discipline = discipline
+        self.queue_discipline = queue_discipline
         self.engine: Optional[WallClockEngine] = None
+        self.deadline_misses = 0
+        self.deadlines_tagged = 0
+        self._stats_lock = threading.Lock()
 
     def __enter__(self):
-        self.engine = WallClockEngine(self.mode, self.profiles,
-                                      devices=self.devices,
-                                      discipline=self.discipline).start()
+        self.engine = WallClockEngine(
+            self.mode, self.profiles, devices=self.devices,
+            discipline=self.discipline,
+            queue_discipline=self.queue_discipline).start()
         return self
 
     def __exit__(self, *exc):
@@ -99,30 +112,43 @@ class ServingSystem:
         return jcts
 
     def invoke(self, service: InferenceService, n: int = 1,
-               interval: float = 0.0) -> List[float]:
-        """n sharing-phase invocations; returns JCTs."""
+               interval: float = 0.0,
+               deadline: Optional[float] = None) -> List[float]:
+        """n sharing-phase invocations; returns JCTs. ``deadline`` is a
+        per-invocation completion budget in seconds; when given, every
+        kernel request is deadline-tagged (edf levels order by it) and
+        invocations finishing past the budget count into
+        ``self.deadline_misses``."""
         assert self.engine is not None, "use as context manager"
         cl = service.client(self.engine)
         jcts = []
         for _ in range(n):
             state = service.svc.make_input()
-            _, jct = cl.run(state)
+            _, jct = cl.run(state, deadline=deadline)
             jcts.append(jct)
+            if deadline is not None:
+                with self._stats_lock:
+                    self.deadlines_tagged += 1
+                    if jct > deadline:
+                        self.deadline_misses += 1
             if interval > 0:
                 time.sleep(interval)
         return jcts
 
     def invoke_concurrent(self, plans) -> Dict[str, List[float]]:
-        """plans: list of (name, service, n, interval, start_delay).
-        Runs each plan in its own client thread; returns JCTs per name."""
+        """plans: list of (name, service, n, interval, start_delay) tuples,
+        optionally extended with a 6th ``deadline`` element (relative
+        seconds per invocation). Runs each plan in its own client thread;
+        returns JCTs per name."""
         assert self.engine is not None
         out: Dict[str, List[float]] = {}
         threads = []
 
-        def runner(name, service, n, interval, delay):
+        def runner(name, service, n, interval, delay, deadline=None):
             if delay > 0:
                 time.sleep(delay)
-            out[name] = self.invoke(service, n=n, interval=interval)
+            out[name] = self.invoke(service, n=n, interval=interval,
+                                    deadline=deadline)
 
         for plan in plans:
             threads.append(threading.Thread(target=runner, args=plan))

@@ -18,6 +18,12 @@ durations drawn from a small discrete set so predicted-duration TIES are
 common (the tie-break is where an indexed structure most easily diverges
 from a scan).
 
+A third axis covers the non-FIFO queue disciplines the same way: ``sjf``
+(successor search over the duration index) and ``edf`` (deadline index +
+deadline tie-breaks) each run 200 randomized deadline-tagged cases against
+their O(n) reference scans. The FIFO default needs no new cases — the
+original 200 run it unchanged, which IS the bit-identity guarantee.
+
 Also hosts the policy invariant tests:
 - fillers never come from a priority level above (numerically below) the
   holder's;
@@ -52,7 +58,7 @@ class VirtualHarness:
     SimScheduler. No jitter, exact durations."""
 
     def __init__(self, tasks, mode, profiled, pipeline_depth=2,
-                 reference=False):
+                 discipline="fifo", reference=False):
         self.tasks = tasks
         self.now = 0.0
         self.device_free = 0.0
@@ -66,6 +72,7 @@ class VirtualHarness:
                                   pipeline_depth=pipeline_depth,
                                   clock=lambda: self.now,
                                   launch=self._to_device,
+                                  discipline=discipline,
                                   reference=reference)
 
     def _at(self, t, fn):
@@ -105,7 +112,7 @@ class VirtualHarness:
         self.policy.submit(KernelRequest(
             task_key=spec.key, kernel_id=k.kid, priority=spec.priority,
             task_instance=ti, seq_index=ki, submit_time=self.now,
-            payload=k.duration))
+            payload=k.duration, deadline=spec.deadline))
 
     # ---- serial device model
     def _to_device(self, req, filler):
@@ -194,9 +201,12 @@ def _profiles(tasks):
 # across tasks, stressing the index's FIFO tie-break against the scan's
 _DUR_GRID = [0.0005, 0.001, 0.0015, 0.002, 0.003, 0.004, 0.006]
 _GAP_GRID = [0.0, 0.0003, 0.001, 0.0025, 0.005, 0.008]
+# deadlines from a grid too (relative to arrival), None included: EDF's
+# undated-falls-back-to-FIFO path and deadline TIES both get exercised
+_DEADLINE_GRID = [None, 0.004, 0.008, 0.008, 0.02, 0.05]
 
 
-def random_tasks(rng):
+def random_tasks(rng, deadlines=False):
     n = rng.randint(2, 5)
     specs = []
     for t in range(n):
@@ -204,10 +214,13 @@ def random_tasks(rng):
         kid = KernelID(f"svc{t}/k")
         kernels = [TraceKernel(kid, rng.choice(_DUR_GRID),
                                rng.choice(_GAP_GRID)) for _ in range(nk)]
+        arrival = rng.choice([0.0, 0.0005, 0.002, 0.006, 0.012])
+        rel_dl = rng.choice(_DEADLINE_GRID) if deadlines else None
         specs.append(TaskSpec(
             TaskKey(f"svc{t}"), rng.randint(0, 9), kernels,
-            arrival=rng.choice([0.0, 0.0005, 0.002, 0.006, 0.012]),
-            max_inflight=rng.choice([1, 1, 1, 4, 8])))
+            arrival=arrival,
+            max_inflight=rng.choice([1, 1, 1, 4, 8]),
+            deadline=None if rel_dl is None else arrival + rel_dl))
     return specs
 
 
@@ -226,6 +239,37 @@ def test_indexed_fast_path_matches_reference_oracle(seed, mode):
     assert fast.policy.fill_count == ref.policy.fill_count
     # the fast path also agrees with SimScheduler end-to-end
     sim = SimScheduler(tasks, mode, pd, jitter=0.0)
+    sim.run()
+    assert sim.policy.trace == fast.policy.trace
+
+
+@pytest.mark.parametrize("discipline", ["sjf", "edf"])
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("seed", range(100))
+def test_discipline_fast_path_matches_reference_oracle(seed, mode,
+                                                       discipline):
+    """Each non-FIFO queue discipline's indexed path (successor/deadline
+    bisects + index-driven pops) vs its O(n) reference scan (scan-selected
+    BestPrioFit + scan-selected pops, holder re-elected per probe):
+    identical traces and device launch order on deadline-tagged, tie-heavy
+    randomized scenarios — 100 seeds x {FIKIT, PREEMPT} = 200 cases per
+    discipline. The ROADMAP's rule for touching decision logic: every new
+    discipline extends THIS suite."""
+    rng = random.Random(seed * 104729 + (0 if mode is Mode.FIKIT else 1)
+                        + (0 if discipline == "sjf" else 500))
+    tasks = random_tasks(rng, deadlines=True)
+    pd = _profiles(tasks)
+    fast = VirtualHarness(tasks, mode, pd, discipline=discipline,
+                          reference=False).run()
+    ref = VirtualHarness(tasks, mode, pd, discipline=discipline,
+                         reference=True).run()
+    assert fast.policy.trace == ref.policy.trace
+    assert fast.launch_order == ref.launch_order
+    assert fast.policy.fill_count == ref.policy.fill_count
+    # the fast path also agrees with SimScheduler end-to-end (deadlines
+    # ride KernelRequest through the placement pass-through unchanged)
+    sim = SimScheduler(tasks, mode, pd, jitter=0.0,
+                       queue_discipline=discipline)
     sim.run()
     assert sim.policy.trace == fast.policy.trace
 

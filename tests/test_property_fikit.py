@@ -11,7 +11,7 @@ from repro.core.fikit import best_prio_fit, fikit_procedure
 from repro.core.kernel_id import KernelID
 from repro.core.placement import DISCIPLINES
 from repro.core.profiler import ProfiledData, TaskProfile
-from repro.core.queues import PriorityQueues
+from repro.core.queues import PriorityQueues, QUEUE_DISCIPLINES
 from repro.core.scheduler import Mode, SimScheduler, profile_tasks
 from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
 
@@ -88,6 +88,124 @@ def test_fikit_procedure_never_exceeds_gap(entries, idle):
     rem = idle - total
     nxt, d = best_prio_fit(qs, rem, pd)
     assert nxt is None
+
+
+# ---------------------------------------------------------------------------
+# Queue-discipline invariants (SJF / EDF pops and fills)
+# ---------------------------------------------------------------------------
+@st.composite
+def discipline_queue(draw, discipline):
+    """A populated PriorityQueues under ``discipline``, plus the bound
+    profile. Multi-kernel streams included so head-only eligibility is
+    exercised; deadlines drawn with Nones and ties."""
+    pd = ProfiledData()
+    qs = PriorityQueues(profiled=pd, discipline_by_level=discipline)
+    n = draw(st.integers(1, 15))
+    for i in range(n):
+        key = TaskKey(f"t{i}")
+        kid = KernelID(f"t{i}_k")
+        prof = TaskProfile(key=key, runs=1)
+        prof.SK[kid] = draw(st.sampled_from([0.001, 0.002, 0.004, 0.008]))
+        pd.load(prof)
+        prio = draw(st.integers(0, 9))
+        dl = draw(st.sampled_from([None, 0.1, 0.2, 0.2, 0.5]))
+        for seq in range(draw(st.integers(1, 3))):
+            qs.push(KernelRequest(task_key=key, kernel_id=kid,
+                                  priority=prio, task_instance=i,
+                                  seq_index=seq, deadline=dl))
+    return pd, qs
+
+
+def _level_heads(qs, priority):
+    """Stream heads parked at ``priority`` (the pop/fill-eligible set)."""
+    seen = set()
+    heads = []
+    for req in qs[priority]:
+        stream = (req.task_key, req.task_instance)
+        if stream not in seen:
+            seen.add(stream)
+            heads.append(req)
+    return heads
+
+
+@given(discipline_queue("sjf"))
+@settings(max_examples=150, deadline=None)
+def test_sjf_pop_is_minimal_predicted_duration_among_heads(case):
+    """Every SJF pop releases a stream head with MINIMAL predicted SK
+    duration among the heads of the highest non-empty level."""
+    pd, qs = case
+    while True:
+        top = qs.highest_nonempty()
+        if top is None:
+            break
+        heads = _level_heads(qs, top)
+        popped = qs.pop_highest()
+        assert popped.priority == top
+        min_dur = min(pd.predict_duration(h.task_key, h.kernel_id)
+                      for h in heads)
+        assert pd.predict_duration(popped.task_key, popped.kernel_id) \
+            == min_dur
+
+
+@given(discipline_queue("edf"))
+@settings(max_examples=150, deadline=None)
+def test_edf_pop_leaves_no_earlier_deadline_head(case):
+    """After every EDF pop, no head remaining at that level has a strictly
+    earlier deadline (undated == +inf, so undated pops only once no dated
+    head remains)."""
+    _, qs = case
+    while True:
+        top = qs.highest_nonempty()
+        if top is None:
+            break
+        popped = qs.pop_highest()
+        popped_dl = popped.deadline if popped.deadline is not None \
+            else math.inf
+        for head in _level_heads(qs, top):
+            hdl = head.deadline if head.deadline is not None else math.inf
+            assert hdl >= popped_dl
+
+
+@given(discipline_queue("sjf"),
+       st.floats(min_value=1e-4, max_value=0.02))
+@settings(max_examples=150, deadline=None)
+def test_sjf_fill_is_shortest_fitting_head(case, idle):
+    """An SJF gap fill selects the SHORTEST profiled fitting head from the
+    highest level containing one."""
+    pd, qs = case
+    req, dur = best_prio_fit(qs, idle, pd)
+    if req is None:
+        return
+    assert dur < idle
+    # no level above the selected one held a fitting head, and at the
+    # selected level nothing fitting is shorter
+    for p in range(req.priority):
+        assert all(not (-1.0 < pd.predict_duration(h.task_key, h.kernel_id)
+                        < idle) for h in _level_heads(qs, p))
+    at_level = [pd.predict_duration(h.task_key, h.kernel_id)
+                for h in _level_heads(qs, req.priority)]
+    fitting = [d for d in at_level if -1.0 < d < idle]
+    assert all(dur <= d for d in fitting)
+
+
+@given(discipline_queue("edf"),
+       st.floats(min_value=1e-4, max_value=0.02))
+@settings(max_examples=150, deadline=None)
+def test_edf_fill_longest_fit_earliest_deadline_tie(case, idle):
+    """An EDF gap fill keeps the paper's longest-fit criterion; among
+    remaining equal-duration heads at that level none has a strictly
+    earlier deadline than the selected one."""
+    pd, qs = case
+    req, dur = best_prio_fit(qs, idle, pd)
+    if req is None:
+        return
+    sel_dl = req.deadline if req.deadline is not None else math.inf
+    at_level = [(pd.predict_duration(h.task_key, h.kernel_id),
+                 h.deadline if h.deadline is not None else math.inf)
+                for h in _level_heads(qs, req.priority)]
+    fitting = [(d, dl) for d, dl in at_level if -1.0 < d < idle]
+    assert all(d <= dur for d, _ in fitting)          # longest fit
+    assert all(dl >= sel_dl for d, dl in fitting if d == dur)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,277 @@
+"""Directed tests for the intra-device queue disciplines (fifo/sjf/edf):
+spec validation, per-level configuration, pop/fill selection semantics,
+the EDF undated-request FIFO fallback, and deadline-miss accounting.
+
+The randomized trace-identity guarantees live in
+``tests/test_policy_differential.py`` (indexed vs O(n) reference scans);
+this module pins the directed, human-readable properties.
+"""
+import random
+
+import pytest
+
+from repro.core.fikit import best_prio_fit, best_prio_fit_scan
+from repro.core.kernel_id import KernelID
+from repro.core.policy import FikitPolicy, Mode
+from repro.core.profiler import ProfiledData, TaskProfile
+from repro.core.queues import (PriorityQueues, QUEUE_DISCIPLINES,
+                               normalize_disciplines)
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
+
+pytestmark = pytest.mark.fast
+
+
+def _pd(entries):
+    """entries: [(task_name, kernel_name, duration)]"""
+    pd = ProfiledData()
+    by_task = {}
+    for tname, kname, dur in entries:
+        by_task.setdefault(tname, {})[kname] = dur
+    for tname, kernels in by_task.items():
+        prof = TaskProfile(key=TaskKey(tname), runs=1)
+        for kname, dur in kernels.items():
+            prof.SK[KernelID(kname)] = dur
+        pd.load(prof)
+    return pd
+
+
+def _req(tname, kname, prio, instance=0, seq=0, deadline=None):
+    return KernelRequest(task_key=TaskKey(tname), kernel_id=KernelID(kname),
+                         priority=prio, task_instance=instance,
+                         seq_index=seq, deadline=deadline)
+
+
+# ---------------------------------------------------------------------------
+# Spec validation (mirrors the placement.DISCIPLINES unknown-name test)
+# ---------------------------------------------------------------------------
+def test_unknown_discipline_raises_with_sorted_known_names():
+    with pytest.raises(ValueError) as ei:
+        PriorityQueues(discipline_by_level="lifo")
+    assert str(sorted(QUEUE_DISCIPLINES)) in str(ei.value)
+    assert "'lifo'" in str(ei.value)
+
+
+def test_unknown_discipline_raises_through_policy_and_engines():
+    with pytest.raises(ValueError) as ei:
+        FikitPolicy(Mode.FIKIT, clock=lambda: 0.0,
+                    launch=lambda r, f: None, discipline="srtf")
+    assert str(sorted(QUEUE_DISCIPLINES)) in str(ei.value)
+    with pytest.raises(ValueError):
+        SimScheduler([], Mode.FIKIT, queue_discipline="bogus")
+
+
+def test_discipline_spec_forms():
+    assert normalize_disciplines(None, 10) == ("fifo",) * 10
+    assert normalize_disciplines("sjf", 10) == ("sjf",) * 10
+    by_map = normalize_disciplines({0: "edf", 5: "sjf"}, 10)
+    assert by_map[0] == "edf" and by_map[5] == "sjf"
+    assert all(d == "fifo" for i, d in enumerate(by_map) if i not in (0, 5))
+    seq = ("fifo",) * 9 + ("edf",)
+    assert normalize_disciplines(list(seq), 10) == seq
+    with pytest.raises(ValueError):       # out-of-range mapped level
+        normalize_disciplines({10: "sjf"}, 10)
+    with pytest.raises(ValueError):       # wrong-length sequence
+        normalize_disciplines(["fifo"] * 3, 10)
+    qs = PriorityQueues(discipline_by_level={2: "edf"})
+    assert qs.discipline_of(2) == "edf" and qs.discipline_of(3) == "fifo"
+
+
+# ---------------------------------------------------------------------------
+# Pop selection semantics
+# ---------------------------------------------------------------------------
+def test_sjf_pops_shortest_head_ties_to_earliest():
+    pd = _pd([("a", "ka", 0.004), ("b", "kb", 0.002), ("c", "kc", 0.002)])
+    qs = PriorityQueues(profiled=pd, discipline_by_level="sjf")
+    qs.push(_req("a", "ka", 5, instance=0))
+    qs.push(_req("b", "kb", 5, instance=1))      # 2 ms, parked before c
+    qs.push(_req("c", "kc", 5, instance=2))      # 2 ms tie
+    assert qs.peek_highest().task_instance == 1  # shortest, earliest-parked
+    assert [qs.pop_highest().task_instance for _ in range(3)] == [1, 2, 0]
+
+
+def test_sjf_pop_respects_priority_levels_first():
+    """Discipline orders WITHIN a level; cross-level priority still wins."""
+    pd = _pd([("hi", "kh", 0.009), ("lo", "kl", 0.001)])
+    qs = PriorityQueues(profiled=pd, discipline_by_level="sjf")
+    qs.push(_req("lo", "kl", 7, instance=1))     # shorter but lower prio
+    qs.push(_req("hi", "kh", 2, instance=0))
+    assert qs.pop_highest().task_instance == 0
+
+
+def test_edf_pops_earliest_deadline_undated_last():
+    qs = PriorityQueues(discipline_by_level="edf")
+    qs.push(_req("a", "k", 5, instance=0, deadline=None))
+    qs.push(_req("b", "k", 5, instance=1, deadline=0.30))
+    qs.push(_req("c", "k", 5, instance=2, deadline=0.10))
+    qs.push(_req("d", "k", 5, instance=3, deadline=None))
+    # dated by deadline first; undated fall back to FIFO park order
+    assert [qs.pop_highest().task_instance for _ in range(4)] == [2, 1, 0, 3]
+
+
+def test_pops_only_release_stream_heads():
+    """A stream's later kernel must never pop before its earlier one, even
+    when it is shorter / more urgent."""
+    pd = _pd([("s", "k0", 0.008), ("s", "k1", 0.001)])
+    qs = PriorityQueues(profiled=pd, discipline_by_level="sjf")
+    qs.push(_req("s", "k0", 5, instance=0, seq=0))
+    qs.push(_req("s", "k1", 5, instance=0, seq=1))   # shorter, same stream
+    assert qs.pop_highest().seq_index == 0
+    assert qs.pop_highest().seq_index == 1
+    qe = PriorityQueues(discipline_by_level="edf")
+    qe.push(_req("s", "k0", 5, instance=0, seq=0, deadline=0.9))
+    qe.push(_req("s", "k1", 5, instance=0, seq=1, deadline=0.1))
+    assert qe.pop_highest().seq_index == 0
+
+
+# ---------------------------------------------------------------------------
+# Gap-fill selection semantics
+# ---------------------------------------------------------------------------
+def test_sjf_fill_selects_shortest_fitting():
+    pd = _pd([("a", "ka", 0.004), ("b", "kb", 0.001), ("c", "kc", 0.009)])
+    for maker in (best_prio_fit, best_prio_fit_scan):
+        qs = PriorityQueues(profiled=pd, discipline_by_level="sjf")
+        qs.push(_req("a", "ka", 5, instance=0))
+        qs.push(_req("b", "kb", 5, instance=1))
+        qs.push(_req("c", "kc", 5, instance=2))  # does not fit 6 ms
+        got, dur = maker(qs, 0.006, pd)
+        assert got.task_instance == 1 and dur == 0.001, maker.__name__
+
+
+def test_edf_fill_keeps_longest_fit_breaks_ties_by_deadline():
+    # primary criterion unchanged: 4 ms beats 1 ms inside a 6 ms gap even
+    # when the 1 ms head is more urgent
+    pd = _pd([("a", "ka", 0.004), ("b", "kb", 0.001)])
+    qs = PriorityQueues(profiled=pd, discipline_by_level="edf")
+    qs.push(_req("b", "kb", 5, instance=1, deadline=0.01))
+    qs.push(_req("a", "ka", 5, instance=0, deadline=9.0))
+    got, dur = best_prio_fit(qs, 0.006, pd)
+    assert got.task_instance == 0 and dur == 0.004
+    # equal predicted durations: earliest deadline wins over park order
+    pd2 = _pd([("x", "kx", 0.002), ("y", "ky", 0.002), ("z", "kz", 0.002)])
+    for maker in (best_prio_fit, best_prio_fit_scan):
+        qs2 = PriorityQueues(profiled=pd2, discipline_by_level="edf")
+        qs2.push(_req("x", "kx", 5, instance=0, deadline=None))
+        qs2.push(_req("y", "ky", 5, instance=1, deadline=0.5))
+        qs2.push(_req("z", "kz", 5, instance=2, deadline=0.2))
+        got, dur = maker(qs2, 0.006, pd2)
+        assert got.task_instance == 2 and dur == 0.002, maker.__name__
+
+
+# ---------------------------------------------------------------------------
+# EDF undated fallback == FIFO, end to end
+# ---------------------------------------------------------------------------
+def _mix(deadlines=False):
+    def k(name, dur, gap=0.0):
+        return TraceKernel(KernelID(name), dur, gap)
+    return [
+        TaskSpec(TaskKey("hi"), 0, [k("hi/a", 0.002, 0.006)] * 8),
+        TaskSpec(TaskKey("loA"), 5, [k("loA/a", 0.003, 0.0004)] * 9,
+                 arrival=0.001,
+                 deadline=0.08 if deadlines else None),
+        TaskSpec(TaskKey("loB"), 5, [k("loB/a", 0.003, 0.0004)] * 9,
+                 arrival=0.002,
+                 deadline=0.03 if deadlines else None),
+    ]
+
+
+def test_edf_without_deadlines_is_trace_identical_to_fifo():
+    """Every request undated -> edf degrades to FIFO ordering
+    deterministically: bit-identical decision traces and timelines."""
+    tasks = _mix(deadlines=False)
+    pd = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    fifo = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0,
+                        queue_discipline="fifo")
+    fifo.run()
+    edf = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0,
+                       queue_discipline="edf")
+    edf.run()
+    assert list(edf.policy.trace) == list(fifo.policy.trace)
+
+
+def test_edf_with_deadlines_reorders_equal_duration_ties():
+    """With equal predicted durations, the urgent (later-arriving!) lo task
+    overtakes the relaxed one under edf but not under fifo."""
+    tasks = _mix(deadlines=True)
+    pd = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    fifo = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0,
+                        queue_discipline="fifo").run()
+    edf = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0,
+                       queue_discipline="edf").run()
+    # loB (tight 30 ms deadline, parked second) finishes earlier under edf
+    assert edf.results[2].completion < fifo.results[2].completion
+    assert edf.deadline_misses <= fifo.deadline_misses
+
+
+# ---------------------------------------------------------------------------
+# Deadline-miss accounting
+# ---------------------------------------------------------------------------
+def test_sim_report_counts_deadline_misses():
+    def k(name, dur, gap=0.0):
+        return TraceKernel(KernelID(name), dur, gap)
+    tasks = [
+        TaskSpec(TaskKey("a"), 0, [k("a/x", 0.002)] * 5, deadline=1e-6),
+        TaskSpec(TaskKey("b"), 1, [k("b/x", 0.002)] * 5, deadline=10.0),
+        TaskSpec(TaskKey("c"), 2, [k("c/x", 0.002)] * 5),  # undated
+    ]
+    rep = SimScheduler(tasks, Mode.FIKIT).run()
+    assert rep.deadlines_tagged == 2
+    assert rep.deadline_misses == 1           # only the impossible one
+    assert rep.deadline_miss_rate == 0.5
+    undated = SimScheduler([tasks[2]], Mode.FIKIT).run()
+    assert undated.deadlines_tagged == 0
+    assert undated.deadline_miss_rate == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock deadline plumbing: HookClient budget -> absolute request tags
+# ---------------------------------------------------------------------------
+def test_wallclock_client_tags_absolute_deadlines():
+    from repro.core.client import HookClient, Segment
+    from repro.core.executor import WallClockEngine
+
+    segs = [Segment(f"seg{i}", lambda s: s) for i in range(3)]
+    with WallClockEngine(Mode.FIKIT, queue_discipline="edf") as eng:
+        cl = HookClient(eng, TaskKey("svc"), 0, segs, identify=False)
+        import time
+        t0 = time.perf_counter()
+        _, jct = cl.run(0, deadline=0.5)
+        recs = eng.records()
+    assert len(recs) == 3
+    for r in recs:
+        # absolute perf_counter deadline = call start + relative budget
+        assert r.req.deadline is not None
+        assert t0 < r.req.deadline < t0 + 0.5 + 1.0
+    # undated runs stay undated
+    with WallClockEngine(Mode.FIKIT, queue_discipline="edf") as eng2:
+        cl2 = HookClient(eng2, TaskKey("svc2"), 0, segs, identify=False)
+        cl2.run(0)
+        assert all(r.req.deadline is None for r in eng2.records())
+
+
+# ---------------------------------------------------------------------------
+# Randomized pop mini-differential (indexed vs reference scan), local-run
+# mirror of the hypothesis invariants in tests/test_property_fikit.py
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("discipline", sorted(QUEUE_DISCIPLINES))
+def test_pop_indexed_matches_scan_randomized(discipline):
+    # stable seed (str hash is salted per process -> unreproducible cases)
+    rng = random.Random(sorted(QUEUE_DISCIPLINES).index(discipline))
+    for _ in range(30):
+        n = rng.randint(1, 25)
+        entries = [(f"t{i}", f"t{i}k", rng.choice([0.001, 0.002, 0.004]))
+                   for i in range(n)]
+        pd = _pd(entries)
+        qi = PriorityQueues(profiled=pd, discipline_by_level=discipline)
+        qr = PriorityQueues(profiled=pd, discipline_by_level=discipline,
+                            reference=True)
+        for i, (t, kn, _) in enumerate(entries):
+            dl = rng.choice([None, 0.1, 0.2, 0.2, 0.4])
+            prio = rng.randint(0, 9)
+            qi.push(_req(t, kn, prio, instance=i, deadline=dl))
+            qr.push(_req(t, kn, prio, instance=i, deadline=dl))
+        while len(qi):
+            a, b = qi.pop_highest(), qr.pop_highest()
+            assert (a.task_instance, a.seq_index) == \
+                (b.task_instance, b.seq_index)
+        assert qr.pop_highest() is None
