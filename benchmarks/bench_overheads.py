@@ -6,12 +6,29 @@ execution of reduced-scale JAX services (not simulated).
   an aval hash — also expected to be noise-level.
 - Fig 14 (FIKIT sharing stage vs base): single profiled service under the
   FIKIT engine vs direct execution. Paper: +0.09%..+4.93% (<5%).
+- Fig 14-online (this repo's extension): the same sharing-stage run with
+  the ONLINE measurement loop enabled (EMA epoch commits + cold start).
+  The loop must fit inside the paper's <5% sharing-stage budget — its
+  observation path is a dict upsert per kernel_end and commits are
+  batched per epoch. The GATE therefore isolates the loop's marginal
+  cost: per-arch ``(JCT_fikit+online - JCT_fikit) / JCT_fikit``, gated on
+  the MEDIAN across archs staying inside the +/-5% band
+  (``fig14_online_gate_ok`` in BENCH_overheads.json; enforced by
+  ``scripts/check_bench_gates.py`` in the nightly workflow). The
+  engine-vs-direct-base percentages are still reported per arch for
+  paper comparability, but on CPU containers they carry large per-arch
+  SYSTEMATIC effects in both directions (segment-dispatch overhead vs
+  pipelining), identical with the loop on or off — gating the
+  on-vs-off delta measures exactly what the online subsystem adds.
 - Fig 15 (measuring stage vs base): per-kernel timed exclusive runs vs
   direct execution. Paper: +34.5%..+71.8% (measurement is the expensive
-  phase — which is WHY the two-phase design exists).
+  phase — which is WHY the two-phase design exists, and why the online
+  loop refines profiles from sharing-mode execution instead).
 """
 from __future__ import annotations
 
+import json
+import os
 import statistics as st
 import time
 
@@ -21,6 +38,7 @@ from benchmarks.common import WALLCLOCK_ARCHS, Csv
 from repro.config import get_config
 from repro.core.client import HookClient
 from repro.core.executor import WallClockEngine
+from repro.core.online import OnlineConfig
 from repro.core.profiler import ProfiledData, Profiler
 from repro.core.scheduler import Mode
 from repro.core.task import TaskKey
@@ -30,6 +48,13 @@ from repro.models.segmentation import SegmentedService
 RUNS = 24
 WARM = 6
 ARCHS = WALLCLOCK_ARCHS[:5]
+
+#: paper Fig 14 band: the online loop's marginal cost must stay inside
+#: this band. Read from the committed tolerance file so the payload's
+#: gate_ok and scripts/check_bench_gates.py can never disagree.
+with open(os.path.join(os.path.dirname(__file__),
+                       "bench_gates.json")) as _f:
+    GATE_PCT = json.load(_f)["overheads"]["max_fig14_online_delta_pct"]
 
 
 def _service(arch: str, host_gap=0.0008):
@@ -58,8 +83,8 @@ def _direct_jct(svc, runs=RUNS):
 
 
 def _engine_jct(svc, key, mode, profiled=None, identify=True, runs=RUNS,
-                measured=False):
-    with WallClockEngine(mode, profiled) as eng:
+                measured=False, online=None):
+    with WallClockEngine(mode, profiled, online=online) as eng:
         cl = HookClient(eng, key, 0, svc.segments, identify=identify)
         jcts = []
         prof = Profiler(key)
@@ -75,6 +100,7 @@ def _engine_jct(svc, key, mode, profiled=None, identify=True, runs=RUNS,
 
 def main(csvout=None):
     csvout = csvout or Csv(("name", "base_ms", "overhead_pct"))
+    payload = {"gate_pct": GATE_PCT, "archs": {}}
     for arch in ARCHS:
         cfg, svc = _service(arch)
         key = TaskKey(cfg.name)
@@ -83,24 +109,68 @@ def main(csvout=None):
         # Fig 13: identification on vs off (sharing engine either way)
         with_id, _ = _engine_jct(svc, key, Mode.SHARING, identify=True)
         no_id, _ = _engine_jct(svc, key, Mode.SHARING, identify=False)
+        fig13 = round(100 * (with_id - no_id) / no_id, 2)
         csvout.add(f"fig13 ident_on_vs_off {arch}",
-                   round(no_id * 1e3, 2),
-                   round(100 * (with_id - no_id) / no_id, 2))
+                   round(no_id * 1e3, 2), fig13)
 
         # Fig 15: measuring stage vs base (also produces the profile)
         meas, prof = _engine_jct(svc, key, Mode.EXCLUSIVE, measured=True)
+        fig15 = round(100 * (meas - base) / base, 2)
         csvout.add(f"fig15 measuring_vs_base {arch}", round(base * 1e3, 2),
-                   round(100 * (meas - base) / base, 2))
+                   fig15)
 
         # Fig 14: FIKIT sharing stage (profiled) vs base
         pd = ProfiledData()
         pd.load(prof.statistics())
         fikit, _ = _engine_jct(svc, key, Mode.FIKIT, profiled=pd)
+        fig14 = round(100 * (fikit - base) / base, 2)
         csvout.add(f"fig14 sharing_stage_vs_base {arch}",
-                   round(base * 1e3, 2),
-                   round(100 * (fikit - base) / base, 2))
-    csvout.emit("Fig13/14/15: interception, sharing-stage and "
-                "measuring-stage overheads (wall clock)")
+                   round(base * 1e3, 2), fig14)
+
+        # Fig 14-online: same sharing stage with live SK/SG refinement.
+        # Fresh ProfiledData from the same measured stats so the online
+        # run does not inherit the previous engine's state.
+        pd_on = ProfiledData()
+        pd_on.load(prof.statistics())
+        fikit_on, _ = _engine_jct(svc, key, Mode.FIKIT, profiled=pd_on,
+                                  online=OnlineConfig(epoch_observations=64,
+                                                      epoch_seconds=0.25))
+        fig14_on = round(100 * (fikit_on - base) / base, 2)
+        online_delta = round(100 * (fikit_on - fikit) / fikit, 2)
+        csvout.add(f"fig14-online sharing+online_vs_base {arch}",
+                   round(base * 1e3, 2), fig14_on)
+        csvout.add(f"fig14-online loop_cost_vs_fikit {arch}",
+                   round(fikit * 1e3, 2), online_delta)
+
+        payload["archs"][arch] = {
+            "base_ms": round(base * 1e3, 3),
+            "fig13_ident_pct": fig13,
+            "fig14_sharing_pct": fig14,
+            "fig14_online_pct": fig14_on,
+            "fig14_online_delta_pct": online_delta,
+            "fig15_measuring_pct": fig15,
+        }
+
+    deltas = sorted(a["fig14_online_delta_pct"]
+                    for a in payload["archs"].values())
+    med_delta = st.median(deltas)
+    payload["fig14_online_delta_med_pct"] = round(med_delta, 2)
+    payload["fig14_online_delta_max_abs_pct"] = round(
+        max(abs(d) for d in deltas), 2)
+    payload["fig14_online_gate_ok"] = abs(med_delta) < GATE_PCT
+    # reported (not gated): the paper-shaped engine-vs-base percentages
+    payload["fig14_max_pct"] = max(a["fig14_sharing_pct"]
+                                   for a in payload["archs"].values())
+    payload["fig14_online_max_pct"] = max(a["fig14_online_pct"]
+                                          for a in payload["archs"].values())
+    csvout.add("fig14-online gate (median loop cost vs fikit)",
+               round(med_delta, 2),
+               f"OK (|median| < {GATE_PCT}%)"
+               if payload["fig14_online_gate_ok"]
+               else f"OUTSIDE +/-{GATE_PCT}%")
+    csvout.emit("Fig13/14/15: interception, sharing-stage (offline AND "
+                "online-measure) and measuring-stage overheads (wall clock)")
+    csvout.json_payload = payload
     return csvout
 
 

@@ -10,13 +10,12 @@ clients, device-bound).
 from __future__ import annotations
 
 import csv
-import io
 import sys
 from typing import Dict, List, Tuple
 
 from repro.config import ModelConfig, get_config
 from repro.core.kernel_id import KernelID
-from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.scheduler import Mode, SimScheduler
 from repro.core.task import TaskKey, TaskSpec, TraceKernel
 
 # paper Fig 16's A..J pairings, mapped onto our assigned pool

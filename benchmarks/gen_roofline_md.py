@@ -3,7 +3,6 @@ dryrun_results.json (single-pod baseline + multipod presence column)."""
 from __future__ import annotations
 
 import json
-import re
 import sys
 
 from benchmarks.bench_roofline import model_flops, roofline_terms

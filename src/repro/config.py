@@ -7,7 +7,7 @@ variants (for CPU smoke tests and FIKIT policy benchmarks) are derived via
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

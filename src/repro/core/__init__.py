@@ -15,7 +15,8 @@ from repro.core.kernel_id import KernelID, kernel_id_for  # noqa: F401
 from repro.core.task import (  # noqa: F401
     KernelRequest, Priority, TaskKey, TaskSpec, TraceKernel,
 )
-from repro.core.profiler import Profiler, TaskProfile  # noqa: F401
+from repro.core.profiler import ProfiledData, Profiler, TaskProfile  # noqa: F401
+from repro.core.online import OnlineConfig, OnlineMeasurement  # noqa: F401
 from repro.core.queues import PriorityQueues  # noqa: F401
 from repro.core.fikit import (  # noqa: F401
     EPSILON, best_prio_fit, best_prio_fit_scan, fikit_procedure,

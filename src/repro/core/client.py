@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import itertools
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 from repro.core.executor import WallClockEngine
 from repro.core.kernel_id import KernelID, kernel_id_for
@@ -105,14 +105,12 @@ class HookClient:
                                     priority=self.priority,
                                     task_instance=inst, seq_index=i,
                                     payload=_bind(seg.fn, state))
-                submit_t = time.perf_counter()
                 fut = self.engine.submit(req)
                 state, k_start, k_end = fut.result()
                 if last_end is not None:
                     profiler.record_gap(max(0.0, k_start - last_end))
                 profiler.record(kid, k_end - k_start)
                 last_end = k_end
-                del submit_t
                 if seg.host_work is not None:
                     state = seg.host_work(state)
         finally:

@@ -43,6 +43,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.fikit import EPSILON
+from repro.core.online import OnlineConfig, OnlineMeasurement
 from repro.core.placement import DisciplineSpec, PlacementLayer
 from repro.core.policy import Mode
 from repro.core.profiler import ProfiledData
@@ -66,15 +67,27 @@ class WallClockEngine:
                  devices: int = 1,
                  discipline: DisciplineSpec = "least_loaded",
                  queue_discipline="fifo",
-                 steal: bool = True):
+                 steal: bool = True,
+                 online=None):
         """queue_discipline selects the per-level intra-device queue
         ordering ("fifo" default / "sjf" / "edf"); request deadlines for
         edf levels are absolute ``time.perf_counter`` seconds (the
         engine's clock), which ``HookClient.run(deadline=...)`` derives
-        from a caller-relative budget."""
+        from a caller-relative budget.
+
+        online (None / True / repro.core.online.OnlineConfig) enables the
+        live SK/SG refinement loop: each device thread's perf_counter
+        brackets feed the OnlineMeasurement (under the engine lock, like
+        every other placement entry point), epoch commits reload the
+        shared profile mid-serving, and ``stop()`` flushes the partial
+        final epoch. ``online_stats()`` exposes the counters."""
         self.mode = mode
         self.profiled = profiled or ProfiledData()
         self.devices = devices
+        cfg = OnlineConfig.coerce(online)
+        self.online = (OnlineMeasurement(self.profiled, cfg,
+                                         clock=time.perf_counter)
+                       if cfg is not None else None)
 
         self._lock = threading.RLock()
         # threaded driver: keep the queue lock; trace="off"/"ring" bounds
@@ -88,7 +101,8 @@ class WallClockEngine:
                                         feedback=feedback, epsilon=epsilon,
                                         clock=time.perf_counter,
                                         launch=self._device_launch,
-                                        threadsafe=True, trace=trace)
+                                        threadsafe=True, trace=trace,
+                                        online=self.online)
         # single-device alias kept for callers that inspect decision state
         self.policy = self.placement.policies[0]
         self._device_qs: List["queue.Queue"] = [queue.Queue()
@@ -119,6 +133,9 @@ class WallClockEngine:
         if self._started:
             for t in self._threads:
                 t.join(timeout=5)
+        if self.online is not None:
+            with self._lock:
+                self.online.commit()   # flush the partial final epoch
 
     def __enter__(self):
         return self.start()
@@ -146,7 +163,8 @@ class WallClockEngine:
                 self._records.append(ExecRecord(req, t0, t1, filler, device))
                 if filler:
                     self.placement.fill_complete(device)
-                self.placement.kernel_end(req.task_instance, req.kernel_id)
+                self.placement.kernel_end(req.task_instance, req.kernel_id,
+                                          start=t0, end=t1)
 
     # ----------------------------------------------------------- task control
     def task_begin(self, instance: int, key: TaskKey, priority: int) -> None:
@@ -200,6 +218,14 @@ class WallClockEngine:
     @property
     def steal_count(self) -> int:
         return self.placement.steal_count
+
+    def online_stats(self) -> Optional[dict]:
+        """Online measurement counters (None when the loop is off or
+        wired-but-disabled)."""
+        if self.online is None or not self.online.config.enabled:
+            return None
+        with self._lock:
+            return self.online.stats()
 
     def records(self) -> List[ExecRecord]:
         with self._lock:

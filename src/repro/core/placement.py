@@ -53,7 +53,7 @@ from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Set, Union
 
 from repro.core.fikit import EPSILON
-from repro.core.policy import ActiveTask, FikitPolicy, Mode, TraceSpec
+from repro.core.policy import FikitPolicy, Mode, TraceSpec
 from repro.core.profiler import ProfiledData
 from repro.core.queues import QueueDisciplineSpec
 from repro.core.task import NUM_PRIORITIES, KernelRequest, TaskKey
@@ -135,7 +135,8 @@ class PlacementLayer:
                  launch: Callable[[int, KernelRequest, bool], None] = None,
                  threadsafe: bool = True,
                  trace: TraceSpec = "list",
-                 reference: bool = False):
+                 reference: bool = False,
+                 online=None):
         if launch is None:
             raise TypeError("PlacementLayer requires a launch hook")
         if devices < 1:
@@ -143,6 +144,11 @@ class PlacementLayer:
         self.devices = devices
         self.mode = mode
         self.profiled = profiled or ProfiledData()
+        #: optional ``repro.core.online.OnlineMeasurement``: the layer
+        #: feeds it every kernel completion (with the observing device, so
+        #: observations buffer per device and merge on epoch commit) and
+        #: shares it with every per-device policy for gap-drift accounting
+        self.online = online
         self.steal_enabled = steal and devices > 1
         self._clock = clock
         self._launch_hook = launch
@@ -173,7 +179,7 @@ class PlacementLayer:
                         feedback=feedback, epsilon=epsilon, clock=clock,
                         launch=device_launcher(d), threadsafe=threadsafe,
                         trace=trace, discipline=queue_discipline,
-                        reference=reference)
+                        reference=reference, online=online)
             for d in range(devices)]
 
         self._device_of: Dict[int, int] = {}
@@ -222,6 +228,8 @@ class PlacementLayer:
             # too, so this was a no-op before the placement layer existed)
             self.spurious_task_ends += 1
             return []
+        if self.online is not None:
+            self.online.task_gone(instance)
         admitted = self.policies[d].task_end(instance)
         self._instances[d].discard(instance)
         self._retired.add(instance)
@@ -260,7 +268,14 @@ class PlacementLayer:
         self.policies[device].fill_complete()
 
     def kernel_end(self, instance: int, kernel_id, *, last: bool = False,
-                   actual_gap: Optional[float] = None) -> None:
+                   actual_gap: Optional[float] = None,
+                   start: Optional[float] = None,
+                   end: Optional[float] = None) -> None:
+        """``start``/``end`` are the completed kernel's device-time
+        brackets when the engine knows them — the online measurement
+        loop's duration sample. Passed BEFORE the policy's ``kernel_end``
+        so an epoch commit triggered by this very observation already
+        serves refreshed predictions to the fill decision it runs."""
         d = self._device_of.get(instance)
         if d is None:
             # duplicate/late completion for an already-purged instance (an
@@ -269,6 +284,9 @@ class PlacementLayer:
             # here would kill a wall-clock device thread
             self.spurious_kernel_completions += 1
             return
+        if self.online is not None and start is not None and end is not None:
+            self.online.observe(d, instance, self._key_of[instance],
+                                kernel_id, start, end, last=last)
         n = self._inflight.get(instance, 0)
         if n > 0:
             self._inflight[instance] = n - 1
@@ -338,6 +356,10 @@ class PlacementLayer:
         if best is None:
             return False
         _, _, inst, b = best
+        if self.online is not None:
+            # the task changes devices: its launch-to-launch gap anchor is
+            # meaningless across timelines, drop it
+            self.online.task_gone(inst)
         at, reqs = self.policies[b].detach_task(
             inst, list(self._parked[inst].values()))
         self._instances[b].discard(inst)

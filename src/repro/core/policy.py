@@ -204,6 +204,15 @@ class FikitPolicy:
     scan-selected discipline pops, re-elected holder on every probe) —
     the oracle the differential tests compare the indexed/cached path
     against.
+
+    ``online`` optionally attaches an ``repro.core.online.
+    OnlineMeasurement``: the policy then reports gap prediction error
+    (predicted SG vs the driver-known actual gap) into its drift
+    counters at the exact point the Fig-12 feedback operates. The policy
+    NEVER makes a different decision because of it — duration/gap
+    refinement reaches decisions only through ``profiled`` version
+    bumps, so ``online=None`` (the default) is decision-trace-identical
+    to the pre-online implementation.
     """
 
     def __init__(self, mode: Mode,
@@ -215,10 +224,12 @@ class FikitPolicy:
                  threadsafe: bool = True,
                  trace: TraceSpec = "list",
                  discipline: QueueDisciplineSpec = "fifo",
-                 reference: bool = False):
+                 reference: bool = False,
+                 online=None):
         if launch is None:
             raise TypeError("FikitPolicy requires a launch hook")
         self.mode = mode
+        self.online = online
         self.profiled = profiled or ProfiledData()
         self.pipeline_depth = max(1, pipeline_depth)
         self.feedback = feedback
@@ -423,6 +434,11 @@ class FikitPolicy:
         if self.holder() == instance and not last:
             at = self.active[instance]
             predicted = self.profiled.predict_gap(at.key, kernel_id)
+            if (self.online is not None and actual_gap is not None
+                    and predicted > self.epsilon):
+                # Fig-12 drift accounting: the driver knows the true gap
+                # the predicted SG is about to stand in for
+                self.online.observe_gap_error(predicted, actual_gap)
             if predicted > self.epsilon:           # skip small gaps
                 self.gap_open = True
                 self.gap_remaining = predicted

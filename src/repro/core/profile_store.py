@@ -1,13 +1,19 @@
 """Persistence for profiled data: TaskKey -> (SK, SG) as JSON.
 
 The paper loads profiling output into the scheduler's memory at startup;
-this store is the on-disk format between the measurement and sharing phases.
+this store is the on-disk format between the measurement and sharing
+phases. Profiles refined by the ONLINE measurement loop
+(``repro.core.online``) round-trip losslessly too: per-kernel observation
+counters (``obs``/``gap_obs``) and the EMA smoothing factor of the last
+online update (``ema_alpha``) are written when present, so a serving
+process can checkpoint its live-learned SK/SG state and resume smoothing
+where it left off. Entries written by older versions (no online fields)
+load with empty counters — the formats are mutually compatible.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict
 
 from repro.core.kernel_id import KernelID
 from repro.core.profiler import ProfiledData, TaskProfile
@@ -30,28 +36,47 @@ def _detuple(x):
 def save_profiles(path: str, data: ProfiledData) -> None:
     out = []
     for key, prof in data._by_key.items():
-        out.append({
+        entry = {
             "process": key.process,
             "args": list(key.args),
             "runs": prof.runs,
             "SK": [[_kid_to_json(k), v] for k, v in prof.SK.items()],
             "SG": [[_kid_to_json(k), v] for k, v in prof.SG.items()],
-        })
+        }
+        # online-measurement state: only written when the profile carries
+        # any, so purely-offline stores keep the original compact format
+        if prof.obs_count:
+            entry["obs"] = [[_kid_to_json(k), n]
+                            for k, n in prof.obs_count.items()]
+        if prof.gap_obs_count:
+            entry["gap_obs"] = [[_kid_to_json(k), n]
+                                for k, n in prof.gap_obs_count.items()]
+        if prof.ema_alpha is not None:
+            entry["ema_alpha"] = prof.ema_alpha
+        out.append(entry)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(out, f)
 
 
-def load_profiles(path: str) -> ProfiledData:
-    data = ProfiledData()
+def load_profiles(path: str, cold_start: bool = False) -> ProfiledData:
+    """Load a profile store. ``cold_start=True`` builds the returned
+    ``ProfiledData`` with the provisional-duration estimator enabled (the
+    online serving configuration)."""
+    data = ProfiledData(cold_start=cold_start)
     if not os.path.exists(path):
         return data
     with open(path) as f:
         raw = json.load(f)
     for entry in raw:
         key = TaskKey(entry["process"], tuple(entry["args"]))
-        prof = TaskProfile(key=key, runs=entry["runs"])
+        prof = TaskProfile(key=key, runs=entry["runs"],
+                           ema_alpha=entry.get("ema_alpha"))
         prof.SK = {_kid_from_json(k): v for k, v in entry["SK"]}
         prof.SG = {_kid_from_json(k): v for k, v in entry["SG"]}
+        prof.obs_count = {_kid_from_json(k): n
+                          for k, n in entry.get("obs", [])}
+        prof.gap_obs_count = {_kid_from_json(k): n
+                              for k, n in entry.get("gap_obs", [])}
         data.load(prof)
     return data

@@ -63,7 +63,11 @@ maintains coupled views:
 Predicted durations come from a bound ``ProfiledData``; the binding is
 lazy (first indexed decision) and keyed on ``ProfiledData.version`` so a
 profile (re)load invalidates cached durations and triggers one O(n log n)
-rebuild instead of serving stale predictions.
+rebuild instead of serving stale predictions. This is also the seam the
+ONLINE measurement loop (``repro.core.online``) rides: an epoch commit
+bumps ``version`` once per dirty TaskKey, and the next decision rebuilds
+against the refreshed SK values — which is exactly why online updates are
+batched in epochs rather than committed per kernel completion.
 
 A request's priority must be fixed while parked (it is: priority is a
 property of the owning task), so a stream never spans levels and
@@ -203,6 +207,15 @@ class PriorityQueues:
     def discipline_of(self, priority: int) -> str:
         """The queue discipline governing level ``priority``."""
         return self._disciplines[priority]
+
+    @property
+    def bound_version(self) -> int:
+        """The ``ProfiledData.version`` the duration index was last built
+        against (-1: never bound). A mismatch with the live profile's
+        ``version`` means the next indexed decision pays one O(n log n)
+        rebuild — the invalidation contract the online measurement tests
+        pin."""
+        return self._version
 
     # -------------------------------------------------------------- mutation
     def push(self, req: KernelRequest) -> None:

@@ -38,13 +38,14 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 from repro.core.fikit import EPSILON
+from repro.core.online import OnlineConfig, OnlineMeasurement
 from repro.core.placement import DisciplineSpec, PlacementLayer
 from repro.core.policy import Mode
 from repro.core.profiler import ProfiledData, Profiler
 from repro.core.task import KernelRequest, TaskSpec
 
 __all__ = ["Mode", "KernelExec", "TaskResult", "SimReport", "SimScheduler",
-           "measure_task", "profile_tasks"]
+           "OnlineConfig", "measure_task", "profile_tasks"]
 
 
 @dataclass
@@ -81,6 +82,9 @@ class SimReport:
     #: carried one at all (EDF instrumentation; 0/0 without deadlines)
     deadline_misses: int = 0
     deadlines_tagged: int = 0
+    #: ``OnlineMeasurement.stats()`` snapshot (observation/commit/drift
+    #: counters) when the run had the online loop enabled; None otherwise
+    online_stats: Optional[dict] = None
 
     def jct(self, i: int) -> float:
         return self.results[i].jct
@@ -123,7 +127,8 @@ class SimScheduler:
                  devices: int = 1,
                  discipline: DisciplineSpec = "least_loaded",
                  queue_discipline="fifo",
-                 steal: bool = True):
+                 steal: bool = True,
+                 online=None):
         """measurement_overhead: multiplier on kernel durations (the paper's
         20-80% measuring-stage slowdown), used to simulate the measurement
         phase. jitter: multiplicative gaussian noise on true durations/gaps
@@ -136,7 +141,13 @@ class SimScheduler:
         per-level intra-device queue ordering ("fifo" default / "sjf" /
         "edf" — see repro.core.queues.QUEUE_DISCIPLINES); TaskSpec.deadline
         tags flow onto every kernel request for edf levels and the
-        SimReport.deadline_misses counter."""
+        SimReport.deadline_misses counter. online (None / True /
+        repro.core.online.OnlineConfig) enables the live SK/SG refinement
+        loop: every simulated kernel completion feeds the
+        OnlineMeasurement, epoch commits reload the shared profile
+        mid-run, and SimReport.online_stats carries the counters; None
+        (default) builds nothing and is decision-trace-identical to the
+        pre-online simulator."""
         self.tasks = tasks
         self.mode = mode
         self.profiled = profiled or ProfiledData()
@@ -156,6 +167,10 @@ class SimScheduler:
         self._done_k = [0] * n          # kernels completed
         self._issued = [0] * n
         self._pending_issue: List[Optional[int]] = [None] * n
+        cfg = OnlineConfig.coerce(online)
+        self.online = (OnlineMeasurement(self.profiled, cfg,
+                                         clock=lambda: self.now)
+                       if cfg is not None else None)
         # single-threaded discrete-event driver: elide the queue lock
         self.placement = PlacementLayer(devices, mode, self.profiled,
                                         discipline=discipline, steal=steal,
@@ -165,7 +180,8 @@ class SimScheduler:
                                         clock=lambda: self.now,
                                         launch=self._device_launch,
                                         threadsafe=False, trace=trace,
-                                        reference=reference)
+                                        reference=reference,
+                                        online=self.online)
         # single-device alias: the decision core the differential suite
         # diffs against a bare FikitPolicy (placement K=1 is pass-through)
         self.policy = self.placement.policies[0]
@@ -187,6 +203,10 @@ class SimScheduler:
         while self._heap:
             self.now, _, kind, payload = heapq.heappop(self._heap)
             getattr(self, "_on_" + kind)(*payload)
+        online_stats = None
+        if self.online is not None and self.online.config.enabled:
+            self.online.commit()       # flush the partial final epoch
+            online_stats = self.online.stats()
         tagged = [(t, r) for t, r in zip(self.tasks, self.results)
                   if t.deadline is not None]
         return SimReport(self.results, self.timeline,
@@ -196,7 +216,8 @@ class SimScheduler:
                          steals=self.placement.steal_count,
                          deadline_misses=sum(1 for t, r in tagged
                                              if r.completion > t.deadline),
-                         deadlines_tagged=len(tagged))
+                         deadlines_tagged=len(tagged),
+                         online_stats=online_stats)
 
     # --------------------------------------------------------------- clients
     def _on_arrival(self, ti: int) -> None:
@@ -245,10 +266,11 @@ class SimScheduler:
             self.results[ti].start = start
         self.timeline.append(KernelExec(ti, req.seq_index, start, end,
                                         filler=filler, device=device))
-        self._push(end, "kernel_end", (ti, req.seq_index, filler, device))
+        self._push(end, "kernel_end",
+                   (ti, req.seq_index, filler, device, start, end))
 
-    def _on_kernel_end(self, ti: int, ki: int, filler: bool,
-                       device: int) -> None:
+    def _on_kernel_end(self, ti: int, ki: int, filler: bool, device: int,
+                       start: float, end: float) -> None:
         task = self.tasks[ti]
         self._done_k[ti] = ki + 1
         if filler:
@@ -267,7 +289,8 @@ class SimScheduler:
             self._pending_issue[ti] = None
             self._issue(ti, nxt)                   # flight slot freed
         self.placement.kernel_end(ti, task.kernels[ki].kid, last=last,
-                                  actual_gap=task.kernels[ki].gap_after)
+                                  actual_gap=task.kernels[ki].gap_after,
+                                  start=start, end=end)
 
 
 # ---------------------------------------------------------------------------

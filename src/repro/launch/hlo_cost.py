@@ -14,7 +14,6 @@ Used by the dry-run and the roofline analysis.
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from typing import Dict, List, Tuple

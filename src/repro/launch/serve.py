@@ -20,22 +20,33 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
                measure_runs: int = 4, batch: int = 2, seq: int = 48,
                host_gap: float = 0.002, devices: int = 1,
                discipline: str = "fifo", deadline: float = None,
+               online_measure: bool = False,
                verbose: bool = True):
     """Host a high/low priority service pair on the wall-clock engine.
 
     ``discipline`` is the intra-device queue discipline ("fifo"/"sjf"/
     "edf"); ``deadline`` optionally gives every LOW-priority invocation a
     relative completion budget in seconds — the tag edf levels order by,
-    and the source of the ``deadline_misses`` stat."""
+    and the source of the ``deadline_misses`` stat. ``online_measure``
+    keeps refining SK/SG live during the sharing phase (EMA epochs +
+    cold-start predictions; see ``repro.core.online``): the LOW service is
+    then NOT onboarded offline — it starts cold and becomes gap-fillable
+    from its own observed kernels, the scenario the offline two-phase
+    design cannot serve."""
     hi = InferenceService(get_config(high).reduced(), priority=0,
                           batch=batch, seq=seq, host_gap=host_gap)
     lo = InferenceService(get_config(low).reduced(), priority=5,
                           batch=batch * 2, seq=seq)
     with ServingSystem(Mode(mode), measure_runs=measure_runs,
                        devices=devices,
-                       queue_discipline=discipline) as sys_:
+                       queue_discipline=discipline,
+                       online_measure=online_measure) as sys_:
         meas_hi = sys_.onboard(hi)
-        meas_lo = sys_.onboard(lo)
+        if online_measure:
+            lo.svc.warmup()            # compile outside the timed phase
+            meas_lo = []
+        else:
+            meas_lo = sys_.onboard(lo)
         res = sys_.invoke_concurrent([
             ("high", hi, requests, 0.0, 0.01),
             ("low", lo, requests, 0.0, 0.0, deadline),
@@ -44,12 +55,15 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
         steals = sys_.engine.steal_count
         misses = sys_.deadline_misses
         tagged = sys_.deadlines_tagged
+    # read AFTER the context closes: stop() flushes the final partial epoch
+    online_stats = sys_.online_stats
     out = {
         "mode": mode,
         "devices": devices,
         "discipline": discipline,
+        "online_measure": online_measure,
         "measure_high_ms": 1e3 * st.mean(meas_hi),
-        "measure_low_ms": 1e3 * st.mean(meas_lo),
+        "measure_low_ms": 1e3 * st.mean(meas_lo) if meas_lo else 0.0,
         "high_jct_ms": 1e3 * st.mean(res["high"]),
         "low_jct_ms": 1e3 * st.mean(res["low"]),
         "high_jct_cv": (st.pstdev(res["high"]) / st.mean(res["high"])),
@@ -59,6 +73,12 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
         "deadline_misses": misses,
         "deadlines_tagged": tagged,
     }
+    if online_stats is not None:
+        out["online_observations"] = online_stats["observations"]
+        out["online_commits"] = online_stats["commits"]
+        out["online_cold_observations"] = online_stats["cold_observations"]
+        out["online_drift_rel_err"] = round(
+            online_stats["drift_mean_rel_err"], 4)
     if verbose:
         for k, v in out.items():
             print(f"  {k}: {v if isinstance(v, (str, int)) else round(v, 3)}")
@@ -81,10 +101,15 @@ def main():
                     help="relative completion budget (s) tagged onto "
                          "low-priority invocations (edf ordering + "
                          "deadline_misses stat)")
+    ap.add_argument("--online-measure", action="store_true",
+                    help="refine SK/SG live during the sharing phase "
+                         "(EMA epoch commits + cold-start predictions); "
+                         "the low-priority service is NOT onboarded "
+                         "offline and learns its profile online")
     args = ap.parse_args()
     serve_pair(args.high, args.low, args.mode, args.requests,
                devices=args.devices, discipline=args.discipline,
-               deadline=args.deadline)
+               deadline=args.deadline, online_measure=args.online_measure)
 
 
 if __name__ == "__main__":

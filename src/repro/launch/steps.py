@@ -8,7 +8,7 @@ drivers at reduced scale.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ENCDEC, VLM, InputShape, ModelConfig
 from repro.models import api
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import adamw_init, adamw_update
 from repro.sharding import specs as sh
 from repro.sharding.context import mesh_context
 

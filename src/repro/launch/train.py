@@ -11,7 +11,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import InputShape, get_config
 from repro.data.pipeline import SyntheticTextPipeline

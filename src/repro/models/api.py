@@ -14,7 +14,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import (DENSE, ENCDEC, HYBRID, MOE, SSM, VLM, InputShape,
+from repro.config import (DENSE, ENCDEC, HYBRID, MOE, SSM, VLM,
                           ModelConfig)
 from repro.models import encdec, mamba2, moe, rglru, transformer, vlm
 

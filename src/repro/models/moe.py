@@ -14,9 +14,7 @@ With no mesh in context (smoke tests) the same math runs single-device.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Callable, List, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ Everything is functional: ``build_params(cfg, key)`` returns real arrays when
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -68,27 +68,51 @@ class ServingSystem:
 
     def __init__(self, mode: Mode = Mode.FIKIT, measure_runs: int = 5,
                  devices: int = 1, discipline: str = "least_loaded",
-                 queue_discipline: str = "fifo"):
+                 queue_discipline: str = "fifo", online_measure=False):
+        """``online_measure`` (False / True / ``repro.core.online.
+        OnlineConfig``) enables live SK/SG refinement during the sharing
+        phase: every dispatched segment's device-time bracket feeds
+        EMA-smoothed profile updates (committed in epochs), never-profiled
+        services get cold-start provisional durations instead of being
+        invisible to gap filling, and ``online_stats`` reports
+        observation/commit/drift counters. Off (default) is the paper's
+        strictly-offline two-phase behavior."""
         self.profiles = ProfiledData()
         self.mode = mode
         self.measure_runs = measure_runs
         self.devices = devices
         self.discipline = discipline
         self.queue_discipline = queue_discipline
+        self.online_measure = online_measure
         self.engine: Optional[WallClockEngine] = None
         self.deadline_misses = 0
         self.deadlines_tagged = 0
         self._stats_lock = threading.Lock()
+        self._final_online_stats: Optional[dict] = None
 
     def __enter__(self):
         self.engine = WallClockEngine(
             self.mode, self.profiles, devices=self.devices,
             discipline=self.discipline,
-            queue_discipline=self.queue_discipline).start()
+            queue_discipline=self.queue_discipline,
+            online=self.online_measure or None).start()
         return self
 
     def __exit__(self, *exc):
         self.engine.stop()
+        if self.engine.online is not None and self.engine.online.config.enabled:
+            self._final_online_stats = self.engine.online.stats()  # post-flush
+
+    @property
+    def online_stats(self) -> Optional[dict]:
+        """Online measurement counters: live while serving, the final
+        (post-flush) snapshot after the context manager exits, None when
+        ``online_measure`` is off."""
+        if self._final_online_stats is not None:
+            return self._final_online_stats
+        if self.engine is not None:
+            return self.engine.online_stats()
+        return None
 
     # ------------------------------------------------------------ lifecycle
     def onboard(self, service: InferenceService) -> List[float]:

@@ -21,7 +21,7 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.config import ENCDEC, HYBRID, MOE, SSM, VLM, ModelConfig
+from repro.config import HYBRID, ModelConfig
 
 
 def batch_axes(mesh) -> Tuple[str, ...]:

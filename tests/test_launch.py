@@ -102,7 +102,6 @@ def test_hlo_cost_trip_count_correction():
 
 
 def test_collective_bytes_corrected_counts_psum():
-    mesh = jax.make_mesh((1,), ("x",))
     # single-device: no collectives expected -> empty dict, no crash
     @jax.jit
     def f(a):

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.config import SHAPES, get_config
+from repro.config import get_config
 from repro.configs import ARCH_IDS
 from repro.models import api
 

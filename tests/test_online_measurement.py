@@ -1,0 +1,453 @@
+"""Online measurement loop (repro.core.online): EMA epoch commits,
+cold-start estimation, drift counters, profile_store round-trips, and the
+queue-index invalidation that epoch commits ride.
+
+The OFF-is-bit-identical contract lives in the randomized differential
+suite (tests/test_policy_differential.py); this module covers the ON
+semantics directly.
+"""
+import math
+
+import pytest
+
+from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig, OnlineMeasurement
+from repro.core.profile_store import load_profiles, save_profiles
+from repro.core.profiler import ProfiledData, TaskProfile
+from repro.core.queues import PriorityQueues
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
+
+pytestmark = pytest.mark.fast
+
+HI = TaskKey("hi")
+LO = TaskKey("lo")
+K_HI = KernelID("hi/a")
+K_LO = KernelID("lo/a")
+
+
+def k(name, dur, gap=0.0):
+    return TraceKernel(KernelID(name), dur, gap)
+
+
+def gap_fill_tasks(n_hi=10, n_lo=12):
+    return [
+        TaskSpec(HI, 0, [k("hi/a", 0.002, 0.006)] * n_hi),
+        TaskSpec(LO, 5, [k("lo/a", 0.003, 0.0005)] * n_lo, arrival=0.001),
+    ]
+
+
+def make_profile(key, sk, sg=None):
+    prof = TaskProfile(key=key, runs=1)
+    prof.SK = dict(sk)
+    prof.SG = dict(sg or {})
+    return prof
+
+
+# ---------------------------------------------------------------------------
+# OnlineConfig coercion
+# ---------------------------------------------------------------------------
+def test_online_config_coerce():
+    assert OnlineConfig.coerce(None) is None
+    assert OnlineConfig.coerce(False) is None
+    assert isinstance(OnlineConfig.coerce(True), OnlineConfig)
+    cfg = OnlineConfig(ema_alpha=0.5)
+    assert OnlineConfig.coerce(cfg) is cfg
+    with pytest.raises(TypeError):
+        OnlineConfig.coerce("yes")
+
+
+# ---------------------------------------------------------------------------
+# EMA + epoch semantics (unit level)
+# ---------------------------------------------------------------------------
+def test_first_commit_sets_batch_mean_then_ema():
+    pd = ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(ema_alpha=0.25,
+                                            epoch_observations=10**9,
+                                            epoch_seconds=10**9))
+    om.observe(0, 1, HI, K_HI, 0.0, 0.004)
+    om.observe(0, 1, HI, K_HI, 0.010, 0.012)       # durations 4ms, 2ms
+    assert pd.version == 0                          # nothing committed yet
+    assert om.commit() == 1
+    assert pd.version == 1
+    assert math.isclose(pd.predict_duration(HI, K_HI), 0.003)  # batch mean
+    # second epoch: EMA folds the new batch into the standing value
+    om.observe(0, 1, HI, K_HI, 1.0, 1.007)          # 7ms
+    om.commit()
+    assert math.isclose(pd.predict_duration(HI, K_HI),
+                        0.75 * 0.003 + 0.25 * 0.007)
+    prof = pd.get(HI)
+    assert prof.obs_count[K_HI] == 3
+    assert prof.ema_alpha == 0.25
+
+
+def test_epoch_commits_by_observation_count():
+    pd = ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(epoch_observations=5,
+                                            epoch_seconds=10**9))
+    for i in range(4):
+        assert not om.observe(0, 1, HI, K_HI, i * 1.0, i * 1.0 + 0.002)
+    assert pd.version == 0 and om.commits == 0
+    assert om.observe(0, 1, HI, K_HI, 9.0, 9.002)   # 5th obs: epoch closes
+    assert om.commits == 1
+    assert pd.version == 1
+    assert om.pending_observations == 0
+
+
+def test_epoch_commits_by_elapsed_time():
+    now = [0.0]
+    pd = ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(epoch_observations=10**9,
+                                            epoch_seconds=0.5),
+                           clock=lambda: now[0])
+    om.observe(0, 1, HI, K_HI, 0.0, 0.002)
+    assert om.commits == 0
+    now[0] = 0.6                                    # past epoch_seconds
+    assert om.observe(0, 1, HI, K_HI, 0.55, 0.552)
+    assert om.commits == 1
+
+
+def test_gap_attribution_same_device_stream_only():
+    pd = ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(epoch_observations=10**9,
+                                            epoch_seconds=10**9))
+    om.observe(0, 1, HI, K_HI, 0.0, 0.002)
+    om.observe(0, 1, HI, K_HI, 0.005, 0.007)       # gap 3ms after K_HI
+    om.observe(1, 2, LO, K_LO, 0.0, 0.001)         # other device/instance
+    om.commit()
+    assert math.isclose(pd.predict_gap(HI, K_HI), 0.003)
+    assert pd.predict_gap(LO, K_LO) == 0.0          # single obs: no pair
+    assert om.gap_observations == 1
+    # a migrated task (task_gone) loses its anchor: no cross-device gap
+    om.task_gone(2)
+    om.observe(0, 2, LO, K_LO, 0.010, 0.011)
+    assert om.gap_observations == 1
+
+
+def test_disabled_config_never_observes_or_commits():
+    pd = ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(enabled=False))
+    assert not om.observe(0, 1, HI, K_HI, 0.0, 0.002)
+    om.observe_gap_error(0.001, 0.002)
+    assert om.commit() == 0
+    assert pd.version == 0
+    assert om.observations == 0 and om.gap_drift_obs == 0
+    assert not pd.cold_start                        # not flipped either
+
+
+def test_commit_merges_device_buffers_with_one_load_per_key():
+    pd = ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(epoch_observations=10**9,
+                                            epoch_seconds=10**9))
+    om.observe(0, 1, HI, K_HI, 0.0, 0.002)          # device 0
+    om.observe(1, 2, HI, K_HI, 0.0, 0.004)          # device 1, same key
+    om.observe(1, 3, LO, K_LO, 0.0, 0.001)
+    assert om.commit() == 2                         # two dirty TaskKeys
+    assert pd.version == 2                          # one load per key
+    assert math.isclose(pd.predict_duration(HI, K_HI), 0.003)  # merged mean
+    assert om.committed_keys == 2
+
+
+# ---------------------------------------------------------------------------
+# Drift counters
+# ---------------------------------------------------------------------------
+def test_drift_counters_vs_strict_prediction():
+    pd = ProfiledData()
+    pd.load(make_profile(HI, {K_HI: 0.004}))        # wrong: true is 2ms
+    om = OnlineMeasurement(pd, OnlineConfig(epoch_observations=10**9,
+                                            epoch_seconds=10**9))
+    om.observe(0, 1, HI, K_HI, 0.0, 0.002)
+    om.observe(0, 2, LO, K_LO, 0.0, 0.001)          # unprofiled: cold
+    s = om.stats()
+    assert s["drift_obs"] == 1
+    assert math.isclose(s["drift_mean_abs_err"], 0.002)
+    assert math.isclose(s["drift_mean_rel_err"], 0.5)
+    assert s["cold_observations"] == 1
+
+
+def test_gap_drift_recorded_by_policy_feedback_path():
+    tasks = gap_fill_tasks()
+    pd = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    rep = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0,
+                       online=True).run()
+    assert rep.online_stats["gap_drift_obs"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Cold-start estimation (ProfiledData)
+# ---------------------------------------------------------------------------
+def test_cold_start_off_keeps_sentinel():
+    pd = ProfiledData()
+    pd.load(make_profile(HI, {K_HI: 0.002}))
+    assert pd.predict_duration(HI, KernelID("hi/unseen")) == -1.0
+    assert pd.predict_duration(LO, K_LO) == -1.0
+    assert pd.cold_predictions == 0
+
+
+def test_cold_start_key_mean_then_global_then_sentinel():
+    pd = ProfiledData(cold_start=True)
+    assert pd.predict_duration(HI, K_HI) == -1.0    # nothing loaded at all
+    pd.load(make_profile(HI, {K_HI: 0.002, KernelID("hi/b"): 0.004}))
+    # unseen kernel of a KNOWN key: that key's mean SK
+    assert math.isclose(pd.predict_duration(HI, KernelID("hi/unseen")),
+                        0.003)
+    # unknown key: global mean over all loaded SK entries
+    assert math.isclose(pd.predict_duration(LO, K_LO), 0.003)
+    pd.load(make_profile(LO, {K_LO: 0.009}))
+    assert math.isclose(pd.predict_duration(LO, KernelID("lo/unseen")),
+                        0.009)
+    assert math.isclose(pd.predict_duration(TaskKey("new"), K_LO),
+                        (0.002 + 0.004 + 0.009) / 3)
+    assert pd.cold_predictions > 0
+    # profiled kernels are never affected by the estimator
+    assert pd.predict_duration(HI, K_HI) == 0.002
+    assert pd.predict_duration_raw(HI, KernelID("hi/unseen")) == -1.0
+
+
+def test_cold_start_reload_replaces_key_contribution():
+    pd = ProfiledData(cold_start=True)
+    pd.load(make_profile(HI, {K_HI: 0.002}))
+    pd.load(make_profile(HI, {K_HI: 0.006}))        # reload same key
+    assert math.isclose(pd.predict_duration(HI, KernelID("hi/unseen")),
+                        0.006)
+    assert math.isclose(pd.predict_duration(LO, K_LO), 0.006)  # not 0.004
+
+
+def test_cold_start_makes_unprofiled_task_fillable():
+    """The motivating scenario: a never-profiled lo task is invisible to
+    gap filling offline (-1.0 sentinel) but fillable under cold start."""
+    tasks = gap_fill_tasks()
+    # profile ONLY the hi task: lo is cold
+    pd_off = profile_tasks(tasks[:1], T=3, jitter=0.0,
+                           measurement_overhead=0.0)
+    rep_off = SimScheduler(tasks, Mode.FIKIT, pd_off, jitter=0.0).run()
+    assert rep_off.fills == 0                       # cold task: invisible
+
+    pd_on = profile_tasks(tasks[:1], T=3, jitter=0.0,
+                          measurement_overhead=0.0)
+    rep_on = SimScheduler(tasks, Mode.FIKIT, pd_on, jitter=0.0,
+                          online=True).run()
+    assert rep_on.fills > 0                         # cold-start fills
+    # the fills are the point: the cold lo task finishes earlier because
+    # its kernels ride the hi task's gaps instead of waiting it out
+    assert rep_on.jct(1) < rep_off.jct(1)
+
+
+# ---------------------------------------------------------------------------
+# Convergence on a stationary workload
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("jitter", [0.0, 0.05])
+def test_predictions_converge_to_true_durations(jitter):
+    """Starting from an EMPTY profile, the online loop's committed SK
+    converges to the true kernel durations of a stationary workload."""
+    tasks = [
+        TaskSpec(HI, 0, [k("hi/a", 0.002, 0.006)] * 80),
+        TaskSpec(LO, 5, [k("lo/a", 0.003, 0.0005)] * 90, arrival=0.001),
+    ]
+    pd = ProfiledData()
+    rep = SimScheduler(tasks, Mode.FIKIT, pd, jitter=jitter, seed=3,
+                       online=OnlineConfig(epoch_observations=16)).run()
+    assert rep.online_stats["commits"] > 1
+    for key, kid, true_dur in ((HI, K_HI, 0.002), (LO, K_LO, 0.003)):
+        got = pd.predict_duration(key, kid)
+        assert abs(got - true_dur) / true_dur < (0.02 if jitter == 0
+                                                 else 0.15), (key, got)
+    # drift error vs the learned profile is small by the end
+    assert rep.online_stats["drift_mean_rel_err"] < 0.5
+
+
+def test_stale_profile_is_corrected_online():
+    """A profile that has drifted (2x the true durations) is pulled back
+    toward truth by EMA epochs; drift counters expose the initial error."""
+    tasks = gap_fill_tasks(n_hi=60, n_lo=70)
+    pd = ProfiledData()
+    pd.load(make_profile(HI, {K_HI: 0.004}, {K_HI: 0.012}))   # all 2x
+    pd.load(make_profile(LO, {K_LO: 0.006}))
+    rep = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0,
+                       online=OnlineConfig(epoch_observations=16,
+                                           ema_alpha=0.5)).run()
+    assert rep.online_stats["drift_mean_rel_err"] > 0.1       # drift seen
+    assert abs(pd.predict_duration(HI, K_HI) - 0.002) < 0.0005
+    assert abs(pd.predict_duration(LO, K_LO) - 0.003) < 0.0008
+
+
+# ---------------------------------------------------------------------------
+# Epoch commits respect scheduling invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("epoch_n", [1, 4, 32])
+def test_online_run_keeps_fill_below_holder_and_stream_order(epoch_n):
+    tasks = [
+        TaskSpec(TaskKey("a"), 0, [k("a/x", 0.002, 0.005)] * 12),
+        TaskSpec(TaskKey("b"), 3, [k("b/x", 0.0015, 0.001)] * 10,
+                 arrival=0.0005),
+        TaskSpec(TaskKey("c"), 8, [k("c/x", 0.003, 0.0001)] * 14,
+                 arrival=0.001, max_inflight=6),
+    ]
+    pd = profile_tasks(tasks[:2], T=3, jitter=0.0, measurement_overhead=0.0)
+    sim = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.02, seed=5,
+                       online=OnlineConfig(epoch_observations=epoch_n))
+    rep = sim.run()
+    holder = None
+    for e in sim.policy.trace:
+        if e[0] == "holder":
+            holder = e[1]
+        elif e[0] == "fill":
+            assert holder is not None
+            assert tasks[e[1]].priority > tasks[holder].priority
+    per_task = {}
+    for e in rep.timeline:
+        per_task.setdefault(e.task, []).append(e.seq)
+    for ti, seqs in per_task.items():
+        assert seqs == sorted(seqs)
+        assert seqs == list(range(len(tasks[ti].kernels)))
+
+
+def test_online_multi_device_merges_and_conserves():
+    tasks = [
+        TaskSpec(TaskKey(f"t{i}"), i % 7,
+                 [k(f"t{i}/x", 0.001 + 0.0005 * (i % 3), 0.001)] * 8,
+                 arrival=0.0003 * i)
+        for i in range(8)
+    ]
+    pd = ProfiledData()
+    rep = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0, devices=3,
+                       online=OnlineConfig(epoch_observations=8)).run()
+    assert rep.online_stats["observations"] == sum(len(t.kernels)
+                                                  for t in tasks)
+    for ti, spec in enumerate(tasks):
+        execs = [e for e in rep.timeline if e.task == ti]
+        assert len(execs) == len(spec.kernels)
+    for i, spec in enumerate(tasks):
+        got = pd.predict_duration(spec.key, spec.kernels[0].kid)
+        true = spec.kernels[0].duration
+        assert abs(got - true) < 1e-9, (i, got, true)
+
+
+def test_online_determinism():
+    tasks = gap_fill_tasks()
+    pd1 = ProfiledData()
+    pd2 = ProfiledData()
+    cfg = OnlineConfig(epoch_observations=4)
+    r1 = SimScheduler(tasks, Mode.FIKIT, pd1, jitter=0.03, seed=11,
+                      online=cfg).run()
+    r2 = SimScheduler(tasks, Mode.FIKIT, pd2, jitter=0.03, seed=11,
+                      online=cfg).run()
+    assert [e.__dict__ for e in r1.timeline] == \
+        [e.__dict__ for e in r2.timeline]
+    assert r1.online_stats == r2.online_stats
+
+
+# ---------------------------------------------------------------------------
+# Queue-index invalidation on mid-serving version bumps
+# ---------------------------------------------------------------------------
+def test_epoch_commit_invalidates_queue_duration_index():
+    """A mid-serving commit bumps ProfiledData.version; the next indexed
+    decision rebuilds the duration index instead of serving stale SK."""
+    pd = ProfiledData()
+    pd.load(make_profile(LO, {K_LO: 0.005}))        # too long for the gap
+    qs = PriorityQueues(profiled=pd, threadsafe=False)
+    req = KernelRequest(task_key=LO, kernel_id=K_LO, priority=5,
+                        task_instance=1, seq_index=0)
+    qs.push(req)
+    qs.ensure_index(pd)
+    assert qs.bound_version == pd.version
+    assert qs.best_fit_under(0.004)[0] is None      # 5ms doesn't fit 4ms
+
+    om = OnlineMeasurement(pd, OnlineConfig(epoch_observations=10**9,
+                                            epoch_seconds=10**9))
+    om.observe(0, 2, LO, K_LO, 0.0, 0.002)          # the kernel is 2ms now
+    om.commit()
+    assert qs.bound_version != pd.version           # index is stale
+    qs.ensure_index(pd)
+    assert qs.bound_version == pd.version
+    # EMA pulled SK to 0.75*5ms + 0.25*2ms = 4.25ms: fits a 4.5ms gap
+    got, dur = qs.best_fit_under(0.0045)
+    assert got is req                               # refreshed SK fits
+    assert math.isclose(dur, 0.75 * 0.005 + 0.25 * 0.002)
+
+
+# ---------------------------------------------------------------------------
+# profile_store round-trips online state
+# ---------------------------------------------------------------------------
+def test_profile_store_roundtrips_online_state(tmp_path):
+    pd = ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(ema_alpha=0.4,
+                                            epoch_observations=10**9,
+                                            epoch_seconds=10**9))
+    om.observe(0, 1, HI, K_HI, 0.0, 0.002)
+    om.observe(0, 1, HI, K_HI, 0.004, 0.006)        # + a gap sample
+    om.observe(0, 2, LO, K_LO, 0.0, 0.003)
+    om.commit()
+    path = str(tmp_path / "profiles.json")
+    save_profiles(path, pd)
+    back = load_profiles(path, cold_start=True)
+    assert back.cold_start
+    for key, kid in ((HI, K_HI), (LO, K_LO)):
+        orig, got = pd.get(key), back.get(key)
+        assert got.SK == orig.SK
+        assert got.SG == orig.SG
+        assert got.obs_count == orig.obs_count
+        assert got.gap_obs_count == orig.gap_obs_count
+        assert got.ema_alpha == orig.ema_alpha == 0.4
+        assert got.online_observations == orig.online_observations
+    # resumed smoothing continues from the restored EMA state
+    om2 = OnlineMeasurement(back, OnlineConfig(ema_alpha=0.4,
+                                               epoch_observations=10**9,
+                                               epoch_seconds=10**9))
+    om2.observe(0, 5, HI, K_HI, 0.0, 0.004)
+    om2.commit()
+    assert math.isclose(back.predict_duration(HI, K_HI),
+                        0.6 * 0.002 + 0.4 * 0.004)
+    assert back.get(HI).obs_count[K_HI] == 3
+
+
+def test_profile_store_offline_format_unchanged_and_loadable(tmp_path):
+    """Purely offline profiles write the original compact format (no
+    online keys) and old-format files load with empty online state."""
+    import json
+    pd = ProfiledData()
+    pd.load(make_profile(HI, {K_HI: 0.002}, {K_HI: 0.006}))
+    path = str(tmp_path / "offline.json")
+    save_profiles(path, pd)
+    with open(path) as f:
+        raw = json.load(f)
+    assert set(raw[0]) == {"process", "args", "runs", "SK", "SG"}
+    back = load_profiles(path)
+    assert not back.cold_start
+    prof = back.get(HI)
+    assert prof.obs_count == {} and prof.gap_obs_count == {}
+    assert prof.ema_alpha is None
+    assert prof.SK == {K_HI: 0.002}
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock engine integration (fake payloads, no JAX)
+# ---------------------------------------------------------------------------
+def test_wallclock_engine_online_observes_and_flushes():
+    from repro.core.executor import WallClockEngine
+
+    eng = WallClockEngine(Mode.FIKIT, ProfiledData(),
+                          online=OnlineConfig(epoch_observations=10**9,
+                                              epoch_seconds=10**9))
+    with eng:
+        eng.task_begin(1, HI, 0)
+        for i in range(3):
+            req = KernelRequest(task_key=HI, kernel_id=K_HI, priority=0,
+                                task_instance=1, seq_index=i,
+                                payload=lambda: None)
+            eng.submit(req).result(timeout=5)
+        eng.task_end(1)
+        assert eng.online_stats()["observations"] == 3
+        assert eng.online_stats()["commits"] == 0
+    # stop() flushed the partial epoch into the profile
+    assert eng.online.commits == 1
+    assert eng.profiled.predict_duration(HI, K_HI) >= 0.0
+    assert eng.profiled.get(HI).obs_count[K_HI] == 3
+
+
+def test_wallclock_engine_online_off_is_none():
+    from repro.core.executor import WallClockEngine
+
+    eng = WallClockEngine(Mode.FIKIT, ProfiledData())
+    assert eng.online is None
+    assert eng.online_stats() is None

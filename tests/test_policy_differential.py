@@ -24,6 +24,11 @@ deadline tie-breaks) each run 200 randomized deadline-tagged cases against
 their O(n) reference scans. The FIFO default needs no new cases — the
 original 200 run it unchanged, which IS the bit-identity guarantee.
 
+A fourth axis pins the online measurement loop's OFF state: a simulator
+with the subsystem wired-but-disabled (``OnlineConfig(enabled=False)``)
+must be byte-identical in traces and timelines to one with no subsystem
+at all, on randomized (jittered, deadline-tagged, multi-device) scenarios.
+
 Also hosts the policy invariant tests:
 - fillers never come from a priority level above (numerically below) the
   holder's;
@@ -40,6 +45,7 @@ import random
 import pytest
 
 from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig
 from repro.core.policy import FikitPolicy, Mode
 from repro.core.scheduler import SimScheduler, profile_tasks
 from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
@@ -272,6 +278,53 @@ def test_discipline_fast_path_matches_reference_oracle(seed, mode,
                        queue_discipline=discipline)
     sim.run()
     assert sim.policy.trace == fast.policy.trace
+
+
+# ---------------------------------------------------------------------------
+# Differential: online measurement OFF is bit-identical to no subsystem
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("seed", range(30))
+def test_online_off_is_bit_identical(seed, mode):
+    """The online measurement loop's standing contract: ``online=None``
+    (nothing built) and ``online=OnlineConfig(enabled=False)`` (subsystem
+    wired through placement/policy but disabled) produce byte-identical
+    decision traces and device timelines on randomized scenarios. The
+    observation plumbing — start/end riding every kernel_end, the
+    cold-start-capable ProfiledData — must cost zero decisions when off."""
+    rng = random.Random(seed * 65537 + (0 if mode is Mode.FIKIT else 1))
+    tasks = random_tasks(rng, deadlines=True)
+    pd_a = _profiles(tasks)
+    pd_b = _profiles(tasks)
+    base = SimScheduler(tasks, mode, pd_a, jitter=0.02, seed=seed)
+    rep_a = base.run()
+    wired = SimScheduler(tasks, mode, pd_b, jitter=0.02, seed=seed,
+                         online=OnlineConfig(enabled=False))
+    rep_b = wired.run()
+    assert wired.online is not None            # subsystem IS constructed
+    assert base.policy.trace == wired.policy.trace
+    assert [e.__dict__ for e in rep_a.timeline] == \
+        [e.__dict__ for e in rep_b.timeline]
+    assert wired.online.observations == 0      # and never observed
+    assert not pd_b.cold_start                 # nor flipped cold start
+    assert rep_b.online_stats is None
+
+
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("seed", range(10))
+def test_online_off_matches_across_devices(seed, mode):
+    """Same contract through the multi-device placement path (per-device
+    buffers exist, observe() still never runs)."""
+    rng = random.Random(seed * 52361 + (0 if mode is Mode.FIKIT else 1))
+    tasks = random_tasks(rng)
+    pd_a = _profiles(tasks)
+    pd_b = _profiles(tasks)
+    rep_a = SimScheduler(tasks, mode, pd_a, jitter=0.0, devices=3).run()
+    rep_b = SimScheduler(tasks, mode, pd_b, jitter=0.0, devices=3,
+                         online=OnlineConfig(enabled=False)).run()
+    assert [e.__dict__ for e in rep_a.timeline] == \
+        [e.__dict__ for e in rep_b.timeline]
+    assert rep_a.steals == rep_b.steals
 
 
 # ---------------------------------------------------------------------------

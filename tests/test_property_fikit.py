@@ -9,9 +9,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.fikit import best_prio_fit, fikit_procedure
 from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig
 from repro.core.placement import DISCIPLINES
 from repro.core.profiler import ProfiledData, TaskProfile
-from repro.core.queues import PriorityQueues, QUEUE_DISCIPLINES
+from repro.core.queues import PriorityQueues
 from repro.core.scheduler import Mode, SimScheduler, profile_tasks
 from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
 
@@ -364,6 +365,109 @@ def test_placement_deterministic(specs, devices):
     assert [k.__dict__ for k in r1.timeline] == \
         [k.__dict__ for k in r2.timeline]
     assert r1.steals == r2.steals
+
+
+# ---------------------------------------------------------------------------
+# Online measurement invariants
+# ---------------------------------------------------------------------------
+@st.composite
+def online_cases(draw):
+    """Random workloads x online tunings x modes x device counts."""
+    specs = draw(task_specs())
+    epoch_n = draw(st.sampled_from([1, 4, 16, 64]))
+    alpha = draw(st.sampled_from([0.1, 0.25, 0.5, 1.0]))
+    cold = draw(st.booleans())
+    profiled = draw(st.booleans())      # start warm (offline profile) or cold
+    devices = draw(st.integers(1, 3))
+    mode = draw(st.sampled_from([Mode.FIKIT, Mode.PREEMPT]))
+    return specs, epoch_n, alpha, cold, profiled, devices, mode
+
+
+@given(online_cases())
+@settings(max_examples=60, deadline=None)
+def test_online_epoch_commits_preserve_invariants(case):
+    """With the online loop ON — any epoch size, any alpha, cold start on
+    or off, warm or empty initial profile — every safety invariant still
+    holds: conservation (each kernel exactly once, serial devices), fill
+    strictly below the holder's priority at fill time, and per-task
+    stream order. Epoch commits may CHANGE decisions; they may never
+    break these."""
+    specs, epoch_n, alpha, cold, profiled, devices, mode = case
+    pd = profile_tasks(specs, T=2, measurement_overhead=0.0) if profiled \
+        else ProfiledData()
+    cfg = OnlineConfig(epoch_observations=epoch_n, ema_alpha=alpha,
+                       cold_start=cold)
+    sim = SimScheduler(specs, mode, pd, jitter=0.02, seed=13,
+                       devices=devices, online=cfg)
+    rep = sim.run()
+    if devices == 1:
+        _check_conservation(specs, rep)
+    for ti, spec in enumerate(specs):
+        execs = sorted((k.start, k.end, k.seq) for k in rep.timeline
+                       if k.task == ti)
+        assert [e[2] for e in execs] == list(range(len(spec.kernels)))
+    for pol in sim.placement.policies:
+        holder = None
+        for e in pol.trace:
+            if e[0] == "holder":
+                holder = e[1]
+            elif e[0] == "fill":
+                assert holder is not None
+                assert specs[e[1]].priority > specs[holder].priority
+    assert rep.online_stats is not None
+    assert rep.online_stats["observations"] == sum(len(s.kernels)
+                                                   for s in specs)
+    assert rep.online_stats["pending_observations"] == 0  # final flush
+
+
+@given(online_cases())
+@settings(max_examples=30, deadline=None)
+def test_online_runs_deterministic(case):
+    """Same seed + same online config -> identical timelines AND identical
+    learned profiles (the loop adds no hidden nondeterminism)."""
+    specs, epoch_n, alpha, cold, profiled, devices, mode = case
+    reps = []
+    pds = []
+    for _ in range(2):
+        pd = profile_tasks(specs, T=2, measurement_overhead=0.0) \
+            if profiled else ProfiledData()
+        cfg = OnlineConfig(epoch_observations=epoch_n, ema_alpha=alpha,
+                           cold_start=cold)
+        reps.append(SimScheduler(specs, mode, pd, jitter=0.03, seed=29,
+                                 devices=devices, online=cfg).run())
+        pds.append(pd)
+    assert [k.__dict__ for k in reps[0].timeline] == \
+        [k.__dict__ for k in reps[1].timeline]
+    assert reps[0].online_stats == reps[1].online_stats
+    for spec in specs:
+        kid = spec.kernels[0].kid
+        assert pds[0].predict_duration_raw(spec.key, kid) == \
+            pds[1].predict_duration_raw(spec.key, kid)
+
+
+@given(task_specs(), st.sampled_from([4, 16]))
+@settings(max_examples=40, deadline=None)
+def test_online_learns_every_kernel_from_empty(specs, epoch_n):
+    """From an EMPTY profile with jitter 0, every executed kernel ends up
+    with a committed SK entry, its value bracketed by the true durations
+    observed for that KernelID (EMA of batch means can never leave the
+    sample range), and observation counters account for every kernel."""
+    pd = ProfiledData()
+    rep = SimScheduler(specs, Mode.FIKIT, pd, jitter=0.0,
+                       online=OnlineConfig(epoch_observations=epoch_n)).run()
+    assert rep.online_stats["observations"] == sum(len(s.kernels)
+                                                  for s in specs)
+    for spec in specs:
+        durs_by_kid = {}
+        for tk in spec.kernels:
+            durs_by_kid.setdefault(tk.kid, []).append(tk.duration)
+        for kid, durs in durs_by_kid.items():
+            got = pd.predict_duration_raw(spec.key, kid)
+            assert min(durs) - 1e-12 <= got <= max(durs) + 1e-12, \
+                (spec.key, kid, got, durs)
+        prof = pd.get(spec.key)
+        assert prof is not None
+        assert prof.online_observations == len(spec.kernels)
 
 
 @given(task_specs())

@@ -25,7 +25,7 @@ def test_lifecycle_measure_then_share(services, mode):
     hi, lo = services
     with ServingSystem(mode, measure_runs=3) as sys_:
         jm_hi = sys_.onboard(hi)
-        jm_lo = sys_.onboard(lo)
+        sys_.onboard(lo)
         assert len(jm_hi) == 3 and all(j > 0 for j in jm_hi)
         assert hi.key in sys_.profiles
         prof = sys_.profiles.get(hi.key)
@@ -38,6 +38,34 @@ def test_lifecycle_measure_then_share(services, mode):
         ])
         assert len(res["hi"]) == 3 and len(res["lo"]) == 3
         assert all(j > 0 for j in res["hi"] + res["lo"])
+
+
+def test_online_measure_serves_cold_service(services):
+    """With online_measure on, the LOW service is never onboarded: it
+    starts cold (no profile) yet serves fine, its SK/SG profile is
+    learned from live observations, and the stats expose the loop."""
+    hi, lo = services
+    with ServingSystem(Mode.FIKIT, measure_runs=3,
+                       online_measure=True) as sys_:
+        sys_.onboard(hi)
+        lo.svc.warmup()                      # compile, but NO onboarding
+        assert lo.key not in sys_.profiles
+        res = sys_.invoke_concurrent([
+            ("hi", hi, 3, 0.0, 0.005),
+            ("lo", lo, 3, 0.0, 0.0),
+        ])
+        assert len(res["hi"]) == 3 and len(res["lo"]) == 3
+        live = sys_.online_stats
+        assert live is not None and live["observations"] > 0
+    final = sys_.online_stats                # post-stop flush snapshot
+    assert final["observations"] >= live["observations"]
+    assert final["commits"] >= 1
+    # the cold service's profile was learned online
+    prof = sys_.profiles.get(lo.key)
+    assert prof is not None
+    assert prof.online_observations > 0
+    assert all(v > 0 for v in prof.SK.values())
+    assert sys_.profiles.cold_start
 
 
 def test_fikit_sharing_produces_fills_or_priority(services):
