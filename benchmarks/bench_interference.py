@@ -1,0 +1,152 @@
+"""Interference-aware gap filling vs class-blind filling on an
+adversarial memory-bound mix.
+
+The workload is built so duration-only BestPrioFit makes the WRONG
+choice: a memory-bound interactive hi service (2 ms kernels, 6 ms host
+gaps) shares the device with two low-priority filler pools —
+
+- ``lo_mem``: memory-bound 4.5 ms kernels. Longest fit under the 6 ms
+  gap, so the class-blind policy always picks them; co-running against
+  the memory-bound holder they physically slow down by the ground-truth
+  (mem, mem) factor 1.6x -> 7.2 ms of true occupancy, overshooting every
+  gap by ~1.2 ms and delaying the hi service.
+- ``lo_cpu``: compute-bound 4.0 ms kernels. Slightly shorter, but
+  near-free to co-run against a memory-bound holder (1.05x -> 4.2 ms,
+  fits).
+
+Three runs over the same ground-truth physical environment
+(``interference_env``, keyed by TraceKernel.kclass):
+
+    off      class-blind BestPrioFit (interference=None)
+    aware    interference-aware fit with the true-ish coefficient table
+    learned  coefficients start flat at 1.0 and are refined live by the
+             online measurement loop (observed/predicted ratios folded
+             at epoch commits) — the (mem, mem) coefficient must climb
+             past the exclusion threshold on its own
+
+Gates (tracked in BENCH_interference.json, enforced by
+``scripts/check_bench_gates.py``): aware hi-JCT improves vs off
+(``hi_jct_ratio_vs_off``), fill throughput stays in a band
+(``fill_ratio_vs_off``), and the learned (mem, mem) coefficient rises
+above ``min_learned_mm_coeff``.
+
+Set BENCH_SMOKE=1 (CI) for reduced kernel counts.
+"""
+from __future__ import annotations
+
+import os
+import statistics as st
+
+from benchmarks.common import Csv
+from repro.core.interference import (COMPUTE_BOUND, MEMORY_BOUND,
+                                     InterferenceModel)
+from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig
+from repro.core.profiler import ProfiledData
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+#: ground-truth physical slowdown per (holder class, filler class) —
+#: what the simulated device actually does to co-running fillers
+TRUE_ENV = {
+    (MEMORY_BOUND, MEMORY_BOUND): 1.6,
+    (COMPUTE_BOUND, COMPUTE_BOUND): 1.15,
+    (COMPUTE_BOUND, MEMORY_BOUND): 1.25,
+    (MEMORY_BOUND, COMPUTE_BOUND): 1.05,
+}
+
+
+def interference_mix(n_hi_kernels: int, n_lo_kernels: int):
+    """Memory-bound interactive hi stream + two adversarial filler pools
+    (memory-bound longest-fit bait vs compute-bound near-free)."""
+    tasks = [TaskSpec(
+        TaskKey("hi"), 0,
+        [TraceKernel(KernelID("hi/layer"), 0.002, 0.006,
+                     kclass=MEMORY_BOUND)] * n_hi_kernels,
+        arrival=0.0)]
+    for i in range(2):
+        tasks.append(TaskSpec(
+            TaskKey("lo_mem"), 8,
+            [TraceKernel(KernelID("lo_mem/layer"), 0.0045, 0.0002,
+                         kclass=MEMORY_BOUND)] * n_lo_kernels,
+            arrival=0.001 + 0.0002 * i, max_inflight=16))
+    for i in range(2):
+        tasks.append(TaskSpec(
+            TaskKey("lo_cpu"), 8,
+            [TraceKernel(KernelID("lo_cpu/layer"), 0.004, 0.0002,
+                         kclass=COMPUTE_BOUND)] * n_lo_kernels,
+            arrival=0.002 + 0.0002 * i, max_inflight=16))
+    return tasks
+
+
+def _fresh(profiled):
+    """Per-run copy of the profile store (online runs mutate it)."""
+    data = ProfiledData()
+    for key in profiled.keys():
+        data.load(profiled.get(key).clone())
+    return data
+
+
+def _run(tasks, profiled, hi_idx, *, interference=None, online=None):
+    rep = SimScheduler(tasks, Mode.FIKIT, _fresh(profiled), jitter=0.0,
+                       seed=0, interference=interference,
+                       interference_env=TRUE_ENV, online=online).run()
+    hi_jct = st.mean(rep.jct(i) for i in hi_idx)
+    return rep, hi_jct
+
+
+def main(csvout=None):
+    csvout = csvout or Csv(("name", "value", "derived"))
+    n_hi, n_lo = (60, 100) if SMOKE else (300, 400)
+    tasks = interference_mix(n_hi, n_lo)
+    hi_idx = [i for i, t in enumerate(tasks) if t.priority == 0]
+    profiled = profile_tasks(tasks, T=3, jitter=0.0,
+                             measurement_overhead=0.0)
+
+    rep_off, jct_off = _run(tasks, profiled, hi_idx)
+    rep_aware, jct_aware = _run(
+        tasks, profiled, hi_idx,
+        interference=InterferenceModel(TRUE_ENV))
+    learned_model = InterferenceModel({p: 1.0 for p in TRUE_ENV})
+    rep_learn, jct_learn = _run(
+        tasks, profiled, hi_idx, interference=learned_model,
+        online=OnlineConfig(epoch_observations=16, ema_alpha=0.5))
+    mm = learned_model.coeff(MEMORY_BOUND, MEMORY_BOUND)
+
+    ratio = jct_aware / jct_off
+    learn_ratio = jct_learn / jct_off
+    fill_ratio = rep_aware.fills / max(rep_off.fills, 1)
+    csvout.add("hi JCT off", round(1e3 * jct_off, 3),
+               f"fills {rep_off.fills}, "
+               f"overshoot {1e3 * rep_off.overshoot_time:.1f} ms")
+    csvout.add("hi JCT aware", round(1e3 * jct_aware, 3),
+               f"fills {rep_aware.fills}, "
+               f"overshoot {1e3 * rep_aware.overshoot_time:.1f} ms, "
+               f"ratio vs off {ratio:.3f}")
+    csvout.add("hi JCT learned", round(1e3 * jct_learn, 3),
+               f"fills {rep_learn.fills}, ratio vs off "
+               f"{learn_ratio:.3f}, mm coeff {mm:.3f}")
+    csvout.emit("Interference-aware gap filling vs class-blind "
+                "(memory-bound adversarial fillers)")
+    csvout.json_payload = {
+        "smoke": SMOKE,
+        "hi_jct_off_ms": round(1e3 * jct_off, 4),
+        "hi_jct_aware_ms": round(1e3 * jct_aware, 4),
+        "hi_jct_learned_ms": round(1e3 * jct_learn, 4),
+        "hi_jct_ratio_vs_off": round(ratio, 4),
+        "hi_jct_learned_ratio_vs_off": round(learn_ratio, 4),
+        "fills_off": rep_off.fills,
+        "fills_aware": rep_aware.fills,
+        "fills_learned": rep_learn.fills,
+        "fill_ratio_vs_off": round(fill_ratio, 4),
+        "learned_mm_coeff": round(mm, 4),
+        "overshoot_off_ms": round(1e3 * rep_off.overshoot_time, 3),
+        "overshoot_aware_ms": round(1e3 * rep_aware.overshoot_time, 3),
+    }
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

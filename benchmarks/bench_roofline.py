@@ -23,7 +23,11 @@ import jax
 
 from benchmarks.common import Csv
 from repro.config import MOE, SHAPES, get_config
+from repro.launch.hlo_cost import resource_class_from_cost
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+#: arch ridge point (FLOP/byte): programs above run compute-bound
+RIDGE = PEAK_FLOPS_BF16 / HBM_BW
 
 RESULTS = os.environ.get("DRYRUN_RESULTS",
                          os.path.join(os.path.dirname(__file__), "..",
@@ -71,12 +75,15 @@ def roofline_terms(rec):
     mem = nbytes / HBM_BW
     coll = sum(colls.values()) / ICI_BW
     dom = max((comp, "compute"), (mem, "memory"), (coll, "collective"))
-    return comp, mem, coll, dom[1]
+    # resource class: the two-way HBM-vs-FLOP split the scheduler's
+    # interference model uses (collectives excluded — ICI, not HBM)
+    rclass = resource_class_from_cost(flops, nbytes, RIDGE)
+    return comp, mem, coll, dom[1], rclass
 
 
 def main(csvout=None):
     csvout = csvout or Csv(("arch_x_shape", "terms_ms_c/m/coll",
-                            "dominant|useful_ratio|fits_hbm"))
+                            "dominant|class|useful_ratio|fits_hbm"))
     if not os.path.exists(RESULTS):
         csvout.add("missing", 0, f"run dryrun --all --out {RESULTS} first")
         csvout.emit("Roofline (no dry-run results found)")
@@ -87,7 +94,7 @@ def main(csvout=None):
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
         cfg = get_config(r["arch"])
         shape = SHAPES[r["shape"]]
-        comp, mem, coll, dom = roofline_terms(r)
+        comp, mem, coll, dom, rclass = roofline_terms(r)
         mf = model_flops(cfg, shape)
         flops = r.get("flops_corrected") or r["flops"]
         useful = mf / max(flops * r["devices"], 1.0)
@@ -95,7 +102,8 @@ def main(csvout=None):
         csvout.add(
             f"{r['arch']} x {r['shape']}",
             f"{comp*1e3:.2f}/{mem*1e3:.2f}/{coll*1e3:.2f}",
-            f"{dom}|{useful:.2f}|{'Y' if peak <= 16 else f'N({peak:.0f}G)'}")
+            f"{dom}|{rclass}|{useful:.2f}|"
+            f"{'Y' if peak <= 16 else f'N({peak:.0f}G)'}")
     csvout.emit("Roofline terms per (arch x shape), single-pod 16x16 "
                 "(per-chip seconds basis)")
     return csvout

@@ -26,6 +26,12 @@ Gate semantics per benchmark (tolerances in benchmarks/bench_gates.json):
 - disciplines — the sjf lo-JCT and edf deadline-miss wins hold, and
   neither discipline inflates hi-priority JCT past the FIFO ratio
   ceiling.
+- interference — interference-aware gap filling improves hi-priority JCT
+  vs the class-blind policy under memory-bound adversarial fillers
+  (ratio <= ceiling < 1), fill throughput stays inside a band (the
+  aware policy must keep filling, not give up), and the online-learned
+  (memory, memory) coefficient climbs past its floor from a flat-1.0
+  start.
 - overheads (nightly; wall clock) — the online measurement loop's
   marginal cost over the offline FIKIT sharing stage (median across
   archs of on-vs-off JCT delta) stays inside the paper's Fig-14 +/-5%
@@ -50,7 +56,8 @@ REPO = Path(__file__).resolve().parent.parent
 TOLERANCES = REPO / "benchmarks" / "bench_gates.json"
 
 #: the smoke benches every PR runs; "overheads" joins in the nightly run
-DEFAULT_REQUIRED = ("scheduler_micro", "placement", "disciplines")
+DEFAULT_REQUIRED = ("scheduler_micro", "placement", "disciplines",
+                    "interference")
 ALL_GATED = DEFAULT_REQUIRED + ("overheads",)
 
 Check = Tuple[str, bool, str]          # (gate name, ok, detail)
@@ -110,6 +117,25 @@ def _check_disciplines(p: dict, tol: dict) -> List[Check]:
     return checks
 
 
+def _check_interference(p: dict, tol: dict) -> List[Check]:
+    ratio = p["hi_jct_ratio_vs_off"]
+    fills = p["fill_ratio_vs_off"]
+    mm = p["learned_mm_coeff"]
+    return [
+        ("aware hi-JCT improves vs class-blind",
+         ratio <= tol["max_hi_jct_ratio_vs_off"],
+         f"{ratio} <= {tol['max_hi_jct_ratio_vs_off']}"),
+        ("fill throughput in band",
+         tol["min_fill_ratio_vs_off"] <= fills
+         <= tol["max_fill_ratio_vs_off"],
+         f"{tol['min_fill_ratio_vs_off']} <= {fills} <= "
+         f"{tol['max_fill_ratio_vs_off']}"),
+        ("learned (mem,mem) coefficient",
+         mm >= tol["min_learned_mm_coeff"],
+         f"{mm} >= {tol['min_learned_mm_coeff']}"),
+    ]
+
+
 def _check_overheads(p: dict, tol: dict) -> List[Check]:
     med = p["fig14_online_delta_med_pct"]
     return [
@@ -124,6 +150,7 @@ CHECKERS = {
     "scheduler_micro": _check_scheduler_micro,
     "placement": _check_placement,
     "disciplines": _check_disciplines,
+    "interference": _check_interference,
     "overheads": _check_overheads,
 }
 

@@ -43,6 +43,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.fikit import EPSILON
+from repro.core.interference import InterferenceModel
 from repro.core.online import OnlineConfig, OnlineMeasurement
 from repro.core.placement import DisciplineSpec, PlacementLayer
 from repro.core.policy import Mode
@@ -68,7 +69,8 @@ class WallClockEngine:
                  discipline: DisciplineSpec = "least_loaded",
                  queue_discipline="fifo",
                  steal: bool = True,
-                 online=None):
+                 online=None,
+                 interference=None):
         """queue_discipline selects the per-level intra-device queue
         ordering ("fifo" default / "sjf" / "edf"); request deadlines for
         edf levels are absolute ``time.perf_counter`` seconds (the
@@ -80,13 +82,23 @@ class WallClockEngine:
         brackets feed the OnlineMeasurement (under the engine lock, like
         every other placement entry point), epoch commits reload the
         shared profile mid-serving, and ``stop()`` flushes the partial
-        final epoch. ``online_stats()`` exposes the counters."""
+        final epoch. ``online_stats()`` exposes the counters.
+
+        interference (None / True / mapping /
+        repro.core.interference.InterferenceModel) enables
+        interference-aware gap filling (see ``SimScheduler``); None or a
+        disabled model keeps decisions bit-identical to
+        interference-off."""
         self.mode = mode
         self.profiled = profiled or ProfiledData()
         self.devices = devices
+        self.interference = InterferenceModel.coerce(interference)
+        if self.interference is not None and self.interference.enabled:
+            self.profiled.interference = self.interference
         cfg = OnlineConfig.coerce(online)
         self.online = (OnlineMeasurement(self.profiled, cfg,
-                                         clock=time.perf_counter)
+                                         clock=time.perf_counter,
+                                         interference=self.interference)
                        if cfg is not None else None)
 
         self._lock = threading.RLock()
@@ -102,7 +114,8 @@ class WallClockEngine:
                                         clock=time.perf_counter,
                                         launch=self._device_launch,
                                         threadsafe=True, trace=trace,
-                                        online=self.online)
+                                        online=self.online,
+                                        interference=self.interference)
         # single-device alias kept for callers that inspect decision state
         self.policy = self.placement.policies[0]
         self._device_qs: List["queue.Queue"] = [queue.Queue()

@@ -46,7 +46,9 @@ EPSILON = 1.0e-4  # 0.1 ms, paper §3.2 line 6-8 commentary
 
 
 def best_prio_fit(queues: PriorityQueues, idle_time: float,
-                  profiled: ProfiledData,
+                  profiled: ProfiledData, *,
+                  holder_class: Optional[str] = None,
+                  interference=None,
                   ) -> Tuple[Optional[KernelRequest], float]:
     """Algorithm 2: Sharing Stage Idling Gap Filling Policy.
 
@@ -56,22 +58,38 @@ def best_prio_fit(queues: PriorityQueues, idle_time: float,
     instead of O(total queued); dequeue of the selected request is
     O(log n) index maintenance.
 
+    ``holder_class`` (with an enabled interference model bound to the
+    queues at construction) switches the selection to the
+    interference-aware per-class search: a candidate of class ``c`` fits
+    only while ``predicted < idle_time / coeff(holder_class, c)``. The
+    returned duration stays the RAW prediction; the caller debits the gap
+    by the coefficient-scaled effective duration. ``interference`` is
+    accepted for signature parity with the scan oracle (the indexed side
+    uses the model bound to ``queues``; callers pass the same object to
+    both). With ``holder_class=None`` (the default, and always when
+    interference is off) the selection is bit-identical to the
+    pre-interference implementation.
+
     Oracle contract: ``best_prio_fit_scan`` is the O(n) reference with
-    IDENTICAL selection semantics for every queue discipline — same
-    request, same returned duration, for any queue state. The randomized
-    differential suite in ``tests/test_policy_differential.py`` pins the
-    two trace-identical; extend that suite whenever either side changes.
+    IDENTICAL selection semantics for every queue discipline and either
+    interference setting — same request, same returned duration, for any
+    queue state. The randomized differential suite in
+    ``tests/test_policy_differential.py`` pins the two trace-identical;
+    extend that suite whenever either side changes.
     """
     with queues.lock():
         queues.ensure_index(profiled)
-        req, dur = queues.best_fit_under(idle_time)
+        req, dur = queues.best_fit_under(idle_time,
+                                         holder_class=holder_class)
         if req is not None:
             queues.remove(req)
     return req, dur
 
 
 def best_prio_fit_scan(queues: PriorityQueues, idle_time: float,
-                       profiled: ProfiledData,
+                       profiled: ProfiledData, *,
+                       holder_class: Optional[str] = None,
+                       interference=None,
                        ) -> Tuple[Optional[KernelRequest], float]:
     """Reference oracle: the O(total queued) linear scan.
 
@@ -80,7 +98,16 @@ def best_prio_fit_scan(queues: PriorityQueues, idle_time: float,
     EDF branches define those disciplines' selection semantics the same
     way — by a plain scan over the level's FIFO snapshot, no index. The
     differential tests assert the indexed fast path makes bit-identical
-    decisions against this function; never used on the hot path."""
+    decisions against this function; never used on the hot path.
+
+    Interference-aware selection (``holder_class`` + an enabled
+    ``interference`` model) only tightens each head's fit bound from
+    ``idle_time`` to ``idle_time / coeff(holder_class, head_class)``; the
+    selection and tie rules are untouched, and with it off ``limit`` is
+    exactly ``idle_time``, keeping the scan character-for-character the
+    original comparisons."""
+    iron = (interference is not None and interference.enabled
+            and holder_class is not None)
     best_kernel_time = -1.0
     best_kernel_req: Optional[KernelRequest] = None
     with queues.lock():
@@ -97,7 +124,12 @@ def best_prio_fit_scan(queues: PriorityQueues, idle_time: float,
                     kernel_id = kernel_req.kernel_id
                     predicted = profiled.predict_duration(task_key,
                                                           kernel_id)
-                    if best_kernel_time < predicted < idle_time:
+                    limit = idle_time
+                    if iron:
+                        limit = idle_time / interference.coeff(
+                            holder_class,
+                            profiled.predict_class(task_key, kernel_id))
+                    if best_kernel_time < predicted < limit:
                         best_kernel_time = predicted
                         best_kernel_req = kernel_req
                 if best_kernel_time > 0:
@@ -117,7 +149,13 @@ def best_prio_fit_scan(queues: PriorityQueues, idle_time: float,
                 seen_streams.add(stream)
                 predicted = profiled.predict_duration(kernel_req.task_key,
                                                       kernel_req.kernel_id)
-                if not (-1.0 < predicted < idle_time):
+                limit = idle_time
+                if iron:
+                    limit = idle_time / interference.coeff(
+                        holder_class,
+                        profiled.predict_class(kernel_req.task_key,
+                                               kernel_req.kernel_id))
+                if not (-1.0 < predicted < limit):
                     continue                           # unprofiled / no fit
                 if discipline == "sjf":
                     # shortest fitting; first-seen-wins keeps FIFO ties

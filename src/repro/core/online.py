@@ -35,6 +35,15 @@ staying inside FIKIT's <5% sharing-stage overhead budget (Fig 14):
   prediction accrues observed-vs-predicted error, surfaced via
   ``stats()`` into ``SimReport.online_stats`` and the serving stats — the
   signal that a loaded profile has gone stale.
+- **Interference coefficients** (optional, an attached
+  ``repro.core.interference.InterferenceModel``): the policy tags every
+  interference-scored fill launch with its (holder, filler) class pair
+  (``note_fill_pair``); when the filler's completion is observed, the
+  observed/predicted duration ratio becomes a slowdown sample for that
+  pair, EMA-committed into the model in the SAME epochs as SK/SG, and
+  the duration sample itself is DE-RATED by the pair's current
+  coefficient before entering the SK buffers (so contended fills don't
+  inflate the uncontended SK estimate).
 
 The standing contract: with online measurement OFF (``online=None`` /
 ``OnlineConfig(enabled=False)``) nothing in this module runs and decision
@@ -139,16 +148,25 @@ class OnlineMeasurement:
 
     def __init__(self, profiled: ProfiledData,
                  config: Optional[OnlineConfig] = None,
-                 clock: Callable[[], float] = lambda: 0.0):
+                 clock: Callable[[], float] = lambda: 0.0,
+                 interference=None):
         self.profiled = profiled
         self.config = config or OnlineConfig()
         self._clock = clock
+        self.interference = (interference if interference is not None
+                             and getattr(interference, "enabled", False)
+                             else None)
         if self.config.cold_start and self.config.enabled:
             profiled.enable_cold_start()
         self._buffers: Dict[int, _DeviceBuffer] = {}
         # instance -> (device, key, kid, end) of its last observed kernel,
         # anchoring the launch-to-launch gap sample for THAT kid
         self._last: Dict[int, Tuple[int, TaskKey, KernelID, float]] = {}
+        # (instance, kid) -> FIFO of (holder_class, filler_class) tags for
+        # in-flight interference-scored fills awaiting their completion
+        self._pending_pairs: Dict[Tuple[int, KernelID], List] = {}
+        # (holder_class, filler_class) -> [ratio_sum, count] this epoch
+        self._pair_pending: Dict[Tuple[str, str], List[float]] = {}
         self._epoch_obs = 0
         self._last_commit: Optional[float] = None
         # counters (monotonic, surfaced via stats())
@@ -162,6 +180,8 @@ class OnlineMeasurement:
         self.drift_pred_sum = 0.0
         self.gap_drift_obs = 0
         self.gap_drift_abs_sum = 0.0
+        self.interference_pair_obs = 0
+        self.interference_updates = 0
 
     # ------------------------------------------------------------ observing
     def observe(self, device: int, instance: int, key: TaskKey,
@@ -178,27 +198,53 @@ class OnlineMeasurement:
         if buf is None:
             buf = self._buffers[device] = _DeviceBuffer()
         dur = max(0.0, end - start)
-        buf.add_dur(key, kid, dur)
+        # interference attribution: was this completion a fill the policy
+        # scored with a class pair? (FIFO tag matching per (instance, kid);
+        # with max_inflight > 1 and repeated kids a tag can land on the
+        # wrong occurrence of the same kernel — accepted EMA noise, the
+        # durations are statistically exchangeable)
+        pair = None
+        tags = self._pending_pairs.get((instance, kid))
+        if tags:
+            pair = tags.pop(0)
+            if not tags:
+                del self._pending_pairs[(instance, kid)]
+        pred = self.profiled.predict_duration_raw(key, kid)
+        sk_dur = dur
+        if pair is not None and self.interference is not None:
+            if pred > 0.0 and dur > 0.0:
+                # observed slowdown sample for this class pair
+                p = self._pair_pending.setdefault(pair, [0.0, 0])
+                p[0] += dur / pred
+                p[1] += 1
+                self.interference_pair_obs += 1
+            # de-rate the contended sample back to an uncontended SK
+            # estimate using the model's current belief
+            sk_dur = dur / max(1.0, self.interference.coeff(*pair))
+        buf.add_dur(key, kid, sk_dur)
         self.observations += 1
         self._epoch_obs += 1
         # drift: compare against the STRICT prediction (no cold estimate),
         # so cold kernels count as cold, not as infinitely wrong
-        pred = self.profiled.predict_duration_raw(key, kid)
         if pred >= 0.0:
             self.drift_obs += 1
-            self.drift_abs_sum += abs(dur - pred)
+            self.drift_abs_sum += abs(sk_dur - pred)
             self.drift_pred_sum += pred
         else:
             self.cold_observations += 1
         # gap attribution: device idle between consecutive kernels of ONE
         # stream approximates the host gap after the PREVIOUS kernel (the
         # same bracketing measure_run uses, under sharing noise — fillers
-        # occupying the gap inflate the sample; EMA + epochs smooth it)
+        # occupying the gap inflate the sample; EMA + epochs smooth it).
+        # A negative raw gap (overlapping brackets — wall-clock callback
+        # jitter, or a stale anchor) is SKIPPED, not clamped: a fabricated
+        # 0.0 sample would drag the SG estimate toward zero.
         prev = self._last.get(instance)
         if prev is not None and prev[0] == device:
-            gap = max(0.0, start - prev[3])
-            buf.add_gap(prev[1], prev[2], gap)
-            self.gap_observations += 1
+            gap = start - prev[3]
+            if gap >= 0.0:
+                buf.add_gap(prev[1], prev[2], gap)
+                self.gap_observations += 1
         if last:
             self._last.pop(instance, None)
         else:
@@ -217,9 +263,26 @@ class OnlineMeasurement:
         self.gap_drift_obs += 1
         self.gap_drift_abs_sum += abs(actual - predicted)
 
+    def note_fill_pair(self, instance: int, kid: KernelID,
+                       holder_class: str, filler_class: str) -> None:
+        """Tag an interference-scored fill launch with its class pair so
+        the eventual completion's duration can be attributed (called by
+        the policy at fill-launch time)."""
+        if not self.config.enabled:
+            return
+        self._pending_pairs.setdefault((instance, kid), []).append(
+            (holder_class, filler_class))
+
     def task_gone(self, instance: int) -> None:
-        """Drop the gap anchor of a retired/migrated task."""
+        """Drop the gap anchor — and any in-flight fill tags — of a
+        retired/migrated task. The placement layer calls this BEFORE a
+        steal detaches the task, so a cross-device launch can never be
+        attributed against the old device's timeline."""
         self._last.pop(instance, None)
+        if self._pending_pairs:
+            stale = [k for k in self._pending_pairs if k[0] == instance]
+            for k in stale:
+                del self._pending_pairs[k]
 
     # ------------------------------------------------------------ committing
     def commit(self, now: Optional[float] = None) -> int:
@@ -276,6 +339,13 @@ class OnlineMeasurement:
             self.profiled.load(prof)
         self.commits += 1
         self.committed_keys += len(dirty)
+        # interference coefficients commit in the SAME epochs as SK/SG:
+        # one EMA fold per class pair from this epoch's batch-mean ratio
+        if self.interference is not None and self._pair_pending:
+            for pair, (s, c) in self._pair_pending.items():
+                self.interference.update(pair, s / c, alpha)
+                self.interference_updates += 1
+            self._pair_pending.clear()
         return len(dirty)
 
     # ---------------------------------------------------------------- stats
@@ -302,4 +372,6 @@ class OnlineMeasurement:
             "gap_drift_mean_abs_err": (
                 self.gap_drift_abs_sum / self.gap_drift_obs
                 if self.gap_drift_obs else 0.0),
+            "interference_pair_obs": self.interference_pair_obs,
+            "interference_updates": self.interference_updates,
         }

@@ -136,7 +136,8 @@ class PlacementLayer:
                  threadsafe: bool = True,
                  trace: TraceSpec = "list",
                  reference: bool = False,
-                 online=None):
+                 online=None,
+                 interference=None):
         if launch is None:
             raise TypeError("PlacementLayer requires a launch hook")
         if devices < 1:
@@ -149,6 +150,11 @@ class PlacementLayer:
         #: observations buffer per device and merge on epoch commit) and
         #: shares it with every per-device policy for gap-drift accounting
         self.online = online
+        #: optional ``repro.core.interference.InterferenceModel``, shared
+        #: by every per-device policy (one coefficient table per node —
+        #: class-pair contention is a property of the hardware, not of a
+        #: device index)
+        self.interference = interference
         self.steal_enabled = steal and devices > 1
         self._clock = clock
         self._launch_hook = launch
@@ -179,7 +185,8 @@ class PlacementLayer:
                         feedback=feedback, epsilon=epsilon, clock=clock,
                         launch=device_launcher(d), threadsafe=threadsafe,
                         trace=trace, discipline=queue_discipline,
-                        reference=reference, online=online)
+                        reference=reference, online=online,
+                        interference=interference)
             for d in range(devices)]
 
         self._device_of: Dict[int, int] = {}

@@ -213,6 +213,16 @@ class FikitPolicy:
     refinement reaches decisions only through ``profiled`` version
     bumps, so ``online=None`` (the default) is decision-trace-identical
     to the pre-online implementation.
+
+    ``interference`` optionally attaches an enabled
+    ``repro.core.interference.InterferenceModel``: gap-fill candidates
+    are then scored by predicted HOLDER SLOWDOWN — a candidate of
+    resource class ``c`` under a holder-gap kernel of class ``h`` fits
+    only while its predicted duration stays under
+    ``gap_remaining / coeff(h, c)``, and each fill debits the gap by the
+    coefficient-scaled effective duration. With ``interference=None``
+    (the pinned default) or a disabled model every decision is
+    bit-identical to the pre-interference implementation.
     """
 
     def __init__(self, mode: Mode,
@@ -225,11 +235,16 @@ class FikitPolicy:
                  trace: TraceSpec = "list",
                  discipline: QueueDisciplineSpec = "fifo",
                  reference: bool = False,
-                 online=None):
+                 online=None,
+                 interference=None):
         if launch is None:
             raise TypeError("FikitPolicy requires a launch hook")
         self.mode = mode
         self.online = online
+        self.interference = interference
+        self._interference_on = (interference is not None
+                                 and getattr(interference, "enabled",
+                                             False))
         self.profiled = profiled or ProfiledData()
         self.pipeline_depth = max(1, pipeline_depth)
         self.feedback = feedback
@@ -243,7 +258,8 @@ class FikitPolicy:
         self.queues = PriorityQueues(profiled=self.profiled,
                                      threadsafe=threadsafe,
                                      discipline_by_level=discipline,
-                                     reference=reference)
+                                     reference=reference,
+                                     interference=interference)
         self.active: Dict[int, ActiveTask] = {}
         self.trace = make_trace_sink(trace)
         self._trace_on = getattr(self.trace, "enabled", True)
@@ -254,6 +270,12 @@ class FikitPolicy:
         self.gap_open = False
         self.gap_remaining = 0.0
         self.gap_end_actual: Optional[float] = None
+        #: (instance, kernel_id) whose completion opened the current gap —
+        #: pure bookkeeping (never traced, never read by decisions unless
+        #: interference scoring is on); the simulator's physical
+        #: interference environment reads it to slow concurrent fillers.
+        self.gap_kinfo: Optional[Tuple[int, KernelID]] = None
+        self._gap_class: Optional[str] = None
         self.fills_in_flight = 0
         self.fill_count = 0
         self.overshoot_time = 0.0
@@ -304,6 +326,8 @@ class FikitPolicy:
         elif self.mode in QUEUED_MODES:
             self.gap_open = False
             self.gap_remaining = 0.0
+            self.gap_kinfo = None
+            self._gap_class = None
             self._release_new_holder()
         self._note_holder()
         return admitted
@@ -442,6 +466,10 @@ class FikitPolicy:
             if predicted > self.epsilon:           # skip small gaps
                 self.gap_open = True
                 self.gap_remaining = predicted
+                self.gap_kinfo = (instance, kernel_id)
+                if self._interference_on:
+                    self._gap_class = self.profiled.predict_class(
+                        at.key, kernel_id)
                 self.gap_end_actual = (
                     self._clock() + actual_gap
                     if self.feedback and actual_gap is not None else None)
@@ -453,6 +481,8 @@ class FikitPolicy:
     def _close_gap(self, holder: int) -> None:
         self.gap_open = False
         self.gap_remaining = 0.0
+        self.gap_kinfo = None
+        self._gap_class = None
         if self.feedback and self.gap_end_actual is None:
             # wall-clock feedback: the holder's submit IS the gap's end
             self.gap_end_actual = self._clock()
@@ -466,13 +496,28 @@ class FikitPolicy:
             return
         while (self.fills_in_flight < self.pipeline_depth
                and self.gap_remaining > 0.0):
-            req, fill_time = self._fit(self.queues, self.gap_remaining,
-                                       self.profiled)
+            req, fill_time = self._fit(
+                self.queues, self.gap_remaining, self.profiled,
+                holder_class=self._gap_class,
+                interference=(self.interference if self._interference_on
+                              else None))
             if fill_time == -1:
                 break
             self.fills_in_flight += 1
             self.fill_count += 1
-            self.gap_remaining -= fill_time
+            eff = fill_time
+            if self._interference_on and self._gap_class is not None:
+                fclass = self.profiled.predict_class(req.task_key,
+                                                     req.kernel_id)
+                eff = fill_time * self.interference.coeff(self._gap_class,
+                                                          fclass)
+                if self.online is not None:
+                    # tag the launch so the observed duration can be
+                    # matched back to its (holder, filler) class pair
+                    self.online.note_fill_pair(req.task_instance,
+                                               req.kernel_id,
+                                               self._gap_class, fclass)
+            self.gap_remaining -= eff
             self._launch(req, filler=True, tag="fill")
 
     def _release_new_holder(self) -> None:

@@ -9,12 +9,22 @@ online update (``ema_alpha``) are written when present, so a serving
 process can checkpoint its live-learned SK/SG state and resume smoothing
 where it left off. Entries written by older versions (no online fields)
 load with empty counters — the formats are mutually compatible.
+
+Interference state (PR 6) rides the same store: a profile's per-kernel
+resource classes are written as a ``class`` entry field when present, and
+when the ``ProfiledData`` carries an attached
+``repro.core.interference.InterferenceModel`` the file becomes a dict
+``{"profiles": [...], "interference": {...}}`` so learned coefficients
+checkpoint and resume with the profiles. Plain stores keep the original
+top-level list format, and pre-classification files (no ``class`` field)
+load with every kernel defaulting to compute-bound — both pinned by test.
 """
 from __future__ import annotations
 
 import json
 import os
 
+from repro.core.interference import InterferenceModel
 from repro.core.kernel_id import KernelID
 from repro.core.profiler import ProfiledData, TaskProfile
 from repro.core.task import TaskKey
@@ -53,7 +63,20 @@ def save_profiles(path: str, data: ProfiledData) -> None:
                                 for k, n in prof.gap_obs_count.items()]
         if prof.ema_alpha is not None:
             entry["ema_alpha"] = prof.ema_alpha
+        if prof.kclass:
+            entry["class"] = [[_kid_to_json(k), c]
+                              for k, c in prof.kclass.items()]
         out.append(entry)
+    model = getattr(data, "interference", None)
+    if model is not None:
+        # dict envelope only when there is a model to checkpoint; plain
+        # stores keep the original top-level list format
+        out = {"profiles": out,
+               "interference": {
+                   "enabled": model.enabled,
+                   "coeffs": [[h, f, v]
+                              for (h, f), v in model.snapshot().items()],
+               }}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(out, f)
@@ -68,7 +91,15 @@ def load_profiles(path: str, cold_start: bool = False) -> ProfiledData:
         return data
     with open(path) as f:
         raw = json.load(f)
-    for entry in raw:
+    entries = raw
+    if isinstance(raw, dict):
+        entries = raw["profiles"]
+        imeta = raw.get("interference")
+        if imeta is not None:
+            data.interference = InterferenceModel(
+                {(h, f): v for h, f, v in imeta.get("coeffs", [])},
+                enabled=imeta.get("enabled", True))
+    for entry in entries:
         key = TaskKey(entry["process"], tuple(entry["args"]))
         prof = TaskProfile(key=key, runs=entry["runs"],
                            ema_alpha=entry.get("ema_alpha"))
@@ -78,5 +109,7 @@ def load_profiles(path: str, cold_start: bool = False) -> ProfiledData:
                           for k, n in entry.get("obs", [])}
         prof.gap_obs_count = {_kid_from_json(k): n
                               for k, n in entry.get("gap_obs", [])}
+        prof.kclass = {_kid_from_json(k): c
+                       for k, c in entry.get("class", [])}
         data.load(prof)
     return data

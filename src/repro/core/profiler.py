@@ -18,6 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.interference import COMPUTE_BOUND
 from repro.core.kernel_id import KernelID
 from repro.core.task import TaskKey
 
@@ -33,7 +34,12 @@ class TaskProfile:
     factor of the last online update (None when never updated online).
     Together with the current SK/SG values these fields are the complete
     EMA state, so a profile refined online round-trips losslessly through
-    ``repro.core.profile_store``."""
+    ``repro.core.profile_store``.
+
+    ``kclass`` maps a kernel to its resource class ("compute"/"memory",
+    see ``repro.core.interference``); kernels absent from it are treated
+    as compute-bound, which makes pre-classification profiles load
+    cleanly."""
     key: TaskKey
     SK: Dict[KernelID, float] = field(default_factory=dict)
     SG: Dict[KernelID, float] = field(default_factory=dict)
@@ -41,6 +47,7 @@ class TaskProfile:
     obs_count: Dict[KernelID, int] = field(default_factory=dict)
     gap_obs_count: Dict[KernelID, int] = field(default_factory=dict)
     ema_alpha: Optional[float] = None
+    kclass: Dict[KernelID, str] = field(default_factory=dict)
 
     @property
     def unique_ids(self):
@@ -63,7 +70,8 @@ class TaskProfile:
         return TaskProfile(key=self.key, SK=dict(self.SK), SG=dict(self.SG),
                            runs=self.runs, obs_count=dict(self.obs_count),
                            gap_obs_count=dict(self.gap_obs_count),
-                           ema_alpha=self.ema_alpha)
+                           ema_alpha=self.ema_alpha,
+                           kclass=dict(self.kclass))
 
 
 class Profiler:
@@ -83,6 +91,7 @@ class Profiler:
         self.key = key
         self._runs: List[List[Tuple[KernelID, float, Optional[float]]]] = []
         self._cur: Optional[List] = None
+        self._kclass: Dict[KernelID, str] = {}
 
     # ------------------------------------------------------------- recording
     def start_run(self) -> None:
@@ -90,10 +99,13 @@ class Profiler:
             raise RuntimeError("previous run not ended")
         self._cur = []
 
-    def record(self, kid: KernelID, duration: float) -> None:
+    def record(self, kid: KernelID, duration: float,
+               kclass: Optional[str] = None) -> None:
         if self._cur is None:
             raise RuntimeError("start_run() first")
         self._cur.append([kid, float(duration), None])
+        if kclass is not None:
+            self._kclass[kid] = kclass    # last observation wins
 
     def record_gap(self, gap: float) -> None:
         """Gap after the most recently recorded kernel."""
@@ -130,6 +142,7 @@ class Profiler:
         prof = TaskProfile(key=self.key, runs=len(self._runs))
         prof.SK = {k: ksum[k] / kcnt[k] for k in ksum}
         prof.SG = {k: gsum[k] / gcnt[k] for k in gsum}
+        prof.kclass = dict(self._kclass)
         return prof
 
 
@@ -167,12 +180,17 @@ class ProfiledData:
         self._by_key: Dict[TaskKey, TaskProfile] = {}
         self._sk: Dict[Tuple[TaskKey, KernelID], float] = {}
         self._sg: Dict[Tuple[TaskKey, KernelID], float] = {}
+        self._class: Dict[Tuple[TaskKey, KernelID], str] = {}
         self._cold_start = cold_start
         self._key_mean: Dict[TaskKey, float] = {}
         self._sk_sum = 0.0
         self._sk_cnt = 0
         self.cold_predictions = 0
         self.version = 0
+        #: optional attached ``repro.core.interference.InterferenceModel``
+        #: (set by engines when interference scoring is on) so learned
+        #: coefficients persist with the profiles via ``profile_store``.
+        self.interference = None
 
     @property
     def cold_start(self) -> bool:
@@ -193,6 +211,8 @@ class ProfiledData:
                 self._sk_cnt -= 1
             for kid in prev.SG:
                 self._sg.pop((profile.key, kid), None)
+            for kid in prev.kclass:
+                self._class.pop((profile.key, kid), None)
         self._by_key[profile.key] = profile
         for kid, v in profile.SK.items():
             self._sk[(profile.key, kid)] = v
@@ -200,6 +220,8 @@ class ProfiledData:
             self._sk_cnt += 1
         for kid, v in profile.SG.items():
             self._sg[(profile.key, kid)] = v
+        for kid, c in profile.kclass.items():
+            self._class[(profile.key, kid)] = c
         if profile.SK:
             self._key_mean[profile.key] = (sum(profile.SK.values())
                                            / len(profile.SK))
@@ -243,3 +265,9 @@ class ProfiledData:
 
     def predict_gap(self, key: TaskKey, kid: KernelID) -> float:
         return self._sg.get((key, kid), 0.0)
+
+    def predict_class(self, key: TaskKey, kid: KernelID) -> str:
+        """The kernel's profiled resource class; unclassified kernels
+        (including every pre-classification profile) default to
+        compute-bound."""
+        return self._class.get((key, kid), COMPUTE_BOUND)

@@ -67,7 +67,25 @@ rebuild instead of serving stale predictions. This is also the seam the
 ONLINE measurement loop (``repro.core.online``) rides: an epoch commit
 bumps ``version`` once per dirty TaskKey, and the next decision rebuilds
 against the refreshed SK values — which is exactly why online updates are
-batched in epochs rather than committed per kernel completion.
+batched in epochs rather than committed per kernel completion. The
+binding is additionally keyed on the profile's ``cold_start`` flag:
+flipping ``enable_cold_start()`` mid-run does not bump ``version`` (cold
+estimates are pure functions of already-loaded state), but it changes
+what ``predict_duration`` returns for unprofiled heads, so an index built
+before the flip would serve stale ``-1.0`` sentinels while the O(n)
+reference scan serves fresh estimates within the same decision.
+
+Interference-aware filling (``interference=`` an enabled
+``repro.core.interference.InterferenceModel``) additionally partitions
+each level's duration index by the head's resource class (``cindex``:
+class -> bisect-sorted entries, same tuples as ``index``). A fill
+decision with a known holder class then runs the same predecessor /
+successor searches once per class against a per-class limit
+``idle_time / coeff(holder_class, class)`` — a candidate fits only if its
+predicted duration times the pair's slowdown coefficient still fits the
+gap. With no model (the pinned default) or no holder class the plain
+single-index search runs unchanged, bit-identical to the
+pre-interference implementation.
 
 A request's priority must be fixed while parked (it is: priority is a
 property of the owning task), so a stream never spans levels and
@@ -170,7 +188,7 @@ class _Level:
     """One priority level's coupled FIFO / stream / index views."""
 
     __slots__ = ("discipline", "fifo", "seq", "streams", "index", "indexed",
-                 "dindex", "dindexed")
+                 "dindex", "dindexed", "cindex", "cindexed")
 
     def __init__(self, discipline: str = "fifo"):
         self.discipline = discipline
@@ -181,6 +199,8 @@ class _Level:
         self.indexed: Dict[int, tuple] = {}
         self.dindex: List[tuple] = []              # EDF deadline index
         self.dindexed: Dict[int, tuple] = {}
+        self.cindex: Dict[str, List[tuple]] = {}   # class -> duration index
+        self.cindexed: Dict[int, str] = {}         # uid -> resource class
 
 
 def _stream_of(req: KernelRequest) -> tuple:
@@ -191,7 +211,7 @@ class PriorityQueues:
     def __init__(self, levels: int = NUM_PRIORITIES, *,
                  profiled=None, threadsafe: bool = True,
                  discipline_by_level: QueueDisciplineSpec = None,
-                 reference: bool = False):
+                 reference: bool = False, interference=None):
         self.levels = levels
         self._disciplines = normalize_disciplines(discipline_by_level,
                                                   levels)
@@ -203,6 +223,10 @@ class PriorityQueues:
         self._push_seq = itertools.count()
         self._profiled = profiled
         self._version = profiled.version if profiled is not None else -1
+        self._cold = profiled.cold_start if profiled is not None else False
+        self._interference = interference
+        self._iron = (interference is not None
+                      and getattr(interference, "enabled", False))
 
     def discipline_of(self, priority: int) -> str:
         """The queue discipline governing level ``priority``."""
@@ -330,6 +354,13 @@ class PriorityQueues:
             entry = (dur, -seq, req.uid)
         insort(lvl.index, entry)
         lvl.indexed[req.uid] = entry
+        if self._iron:
+            cls = self._profiled.predict_class(req.task_key, req.kernel_id)
+            cidx = lvl.cindex.get(cls)
+            if cidx is None:
+                cidx = lvl.cindex[cls] = []
+            insort(cidx, entry)
+            lvl.cindexed[req.uid] = cls
 
     def _dindex_head(self, lvl: _Level, req: KernelRequest,
                      seq: int) -> None:
@@ -343,6 +374,10 @@ class PriorityQueues:
             i = bisect_left(lvl.index, entry)
             # entry uids are unique, so the slot is exact
             del lvl.index[i]
+            cls = lvl.cindexed.pop(req.uid, None)
+            if cls is not None:
+                cidx = lvl.cindex[cls]
+                del cidx[bisect_left(cidx, entry)]
         dentry = lvl.dindexed.pop(req.uid, None)
         if dentry is not None:
             del lvl.dindex[bisect_left(lvl.dindex, dentry)]
@@ -351,26 +386,38 @@ class PriorityQueues:
         """Bind/refresh the head indexes against ``profiled``.
 
         O(1) when already bound to this profile version; a full O(n log n)
-        rebuild when the profile object or its version changed (profiles
-        reload rarely; decisions happen constantly)."""
-        if profiled is self._profiled and self._version == profiled.version:
+        rebuild when the profile object, its version, or its ``cold_start``
+        flag changed (profiles reload rarely; decisions happen constantly).
+        The cold flag is part of the binding key because flipping
+        ``enable_cold_start()`` changes unprofiled heads' predictions
+        without bumping ``version`` — an index built before the flip would
+        disagree with the fresh-prediction reference scan."""
+        if (profiled is self._profiled and self._version == profiled.version
+                and self._cold == profiled.cold_start):
             return
         with self._lock:
             self._profiled = profiled
             self._version = profiled.version
+            self._cold = profiled.cold_start
             for lvl in self._levels:
                 entries = []
                 dentries = []
+                centries: Dict[str, List[tuple]] = {}
                 for dq in lvl.streams.values():
                     head = dq[0]
                     seq = lvl.seq[head.uid]
                     dur = profiled.predict_duration(head.task_key,
                                                     head.kernel_id)
                     if lvl.discipline == "edf":
-                        entries.append((dur, _dl(head), seq, head.uid))
+                        entry = (dur, _dl(head), seq, head.uid)
                         dentries.append((_dl(head), seq, head.uid))
                     else:
-                        entries.append((dur, -seq, head.uid))
+                        entry = (dur, -seq, head.uid)
+                    entries.append(entry)
+                    if self._iron:
+                        cls = profiled.predict_class(head.task_key,
+                                                     head.kernel_id)
+                        centries.setdefault(cls, []).append(entry)
                 entries.sort()
                 lvl.index = entries
                 lvl.indexed = {e[-1]: e for e in entries}
@@ -378,8 +425,15 @@ class PriorityQueues:
                     dentries.sort()
                     lvl.dindex = dentries
                     lvl.dindexed = {e[-1]: e for e in dentries}
+                if self._iron:
+                    for cidx in centries.values():
+                        cidx.sort()
+                    lvl.cindex = centries
+                    lvl.cindexed = {e[-1]: c
+                                    for c, cidx in centries.items()
+                                    for e in cidx}
 
-    def best_fit_under(self, idle_time: float
+    def best_fit_under(self, idle_time: float, holder_class: str = None
                        ) -> Tuple[Optional[KernelRequest], float]:
         """Gap-fill selection across levels, per-level discipline-aware.
 
@@ -396,9 +450,17 @@ class PriorityQueues:
         its candidate replaces a carried best only if strictly longer — the
         same strictly-better rule FIFO levels apply.
 
+        With a bound enabled interference model AND a ``holder_class``,
+        the same searches run per resource class against a tightened
+        per-class limit ``idle_time / coeff(holder_class, class)`` — see
+        ``_best_fit_interference``. Without either, the plain single-index
+        search below runs unchanged.
+
         At most a few bisects per level; at most ``levels`` levels. Does
         NOT dequeue. Call ``ensure_index`` first. The O(n) oracle with
         identical semantics is ``repro.core.fikit.best_prio_fit_scan``."""
+        if holder_class is not None and self._iron:
+            return self._best_fit_interference(idle_time, holder_class)
         best_req: Optional[KernelRequest] = None
         best_dur = _UNPROFILED
         for lvl in self._levels:
@@ -439,6 +501,93 @@ class PriorityQueues:
                 if dur > best_dur:
                     lo = bisect_left(idx, (dur,))    # earliest-deadline tie
                     best_req, best_dur = lvl.fifo[idx[lo][3]], dur
+                break                       # this level claims the decision
+        return best_req, best_dur
+
+    def _best_fit_interference(self, idle_time: float, holder_class: str
+                               ) -> Tuple[Optional[KernelRequest], float]:
+        """Interference-aware ``best_fit_under``: the per-level search runs
+        once per resource class over ``cindex`` with a per-class limit
+        ``idle_time / coeff(holder_class, class)``, then merges the
+        per-class candidates under the SAME selection/tie rules the plain
+        search applies (FIFO/EDF: longest raw duration; SJF: shortest;
+        ties to earliest-parked, EDF duration ties to earliest deadline).
+        Returned durations stay RAW predicted durations — the caller debits
+        the gap by the coefficient-scaled effective duration. Both sides of
+        the fit comparison use ``dur < limit`` (never ``dur * coeff <
+        idle_time``) so the O(n) scan oracle computes bit-identical
+        float comparisons."""
+        model = self._interference
+        best_req: Optional[KernelRequest] = None
+        best_dur = _UNPROFILED
+        for lvl in self._levels:
+            disc = lvl.discipline
+            if disc == "fifo":
+                cand = None          # best (dur, -seq, uid) across classes
+                for cls, cidx in lvl.cindex.items():
+                    if not cidx:
+                        continue
+                    limit = idle_time / model.coeff(holder_class, cls)
+                    i = bisect_left(cidx, (limit,))
+                    if i == 0:
+                        continue            # every head of cls >= limit
+                    e = cidx[i - 1]
+                    if cand is None or e > cand:
+                        cand = e            # longest; tie: earliest-parked
+                if cand is None:
+                    continue
+                dur = cand[0]
+                if dur <= best_dur:
+                    continue                # unprofiled, or not longer
+                best_req, best_dur = lvl.fifo[cand[2]], dur
+                if best_dur > 0:
+                    break                   # fit found at this level
+            elif disc == "sjf":
+                cand = None                 # min (dur, seq, uid)
+                for cls, cidx in lvl.cindex.items():
+                    if not cidx:
+                        continue
+                    limit = idle_time / model.coeff(holder_class, cls)
+                    j = bisect_left(cidx, (_UNPROFILED, 1))
+                    if j == len(cidx):
+                        continue            # no profiled heads of cls
+                    dur = cidx[j][0]
+                    if dur >= limit:
+                        continue            # shortest of cls doesn't fit
+                    k = bisect_left(cidx, (dur, 1))  # earliest-parked tie
+                    e = cidx[k - 1]
+                    key = (dur, -e[1], e[2])
+                    if cand is None or key < cand:
+                        cand = key
+                if cand is None:
+                    continue
+                dur = cand[0]
+                if dur > best_dur:
+                    best_req, best_dur = lvl.fifo[cand[2]], dur
+                break                       # this level claims the decision
+            else:  # edf
+                cand = None                 # min (-dur, deadline, seq)
+                cand_uid = None
+                for cls, cidx in lvl.cindex.items():
+                    if not cidx:
+                        continue
+                    limit = idle_time / model.coeff(holder_class, cls)
+                    i = bisect_left(cidx, (limit,))
+                    if i == 0:
+                        continue
+                    dur = cidx[i - 1][0]
+                    if dur <= _UNPROFILED:
+                        continue            # only unprofiled heads fit
+                    lo = bisect_left(cidx, (dur,))   # earliest-deadline tie
+                    e = cidx[lo]
+                    key = (-e[0], e[1], e[2])
+                    if cand is None or key < cand:
+                        cand, cand_uid = key, e[3]
+                if cand is None:
+                    continue
+                dur = -cand[0]
+                if dur > best_dur:
+                    best_req, best_dur = lvl.fifo[cand_uid], dur
                 break                       # this level claims the decision
         return best_req, best_dur
 

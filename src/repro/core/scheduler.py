@@ -38,6 +38,7 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 from repro.core.fikit import EPSILON
+from repro.core.interference import COMPUTE_BOUND, InterferenceModel
 from repro.core.online import OnlineConfig, OnlineMeasurement
 from repro.core.placement import DisciplineSpec, PlacementLayer
 from repro.core.policy import Mode
@@ -128,7 +129,9 @@ class SimScheduler:
                  discipline: DisciplineSpec = "least_loaded",
                  queue_discipline="fifo",
                  steal: bool = True,
-                 online=None):
+                 online=None,
+                 interference=None,
+                 interference_env=None):
         """measurement_overhead: multiplier on kernel durations (the paper's
         20-80% measuring-stage slowdown), used to simulate the measurement
         phase. jitter: multiplicative gaussian noise on true durations/gaps
@@ -147,7 +150,18 @@ class SimScheduler:
         OnlineMeasurement, epoch commits reload the shared profile
         mid-run, and SimReport.online_stats carries the counters; None
         (default) builds nothing and is decision-trace-identical to the
-        pre-online simulator."""
+        pre-online simulator. interference (None / True / mapping /
+        repro.core.interference.InterferenceModel) enables
+        interference-aware gap filling: fill candidates are bounded by
+        idle_time / coeff(holder_class, filler_class) and the gap is
+        debited by the effective (scaled) duration; None or a disabled
+        model keeps every decision bit-identical to interference-off.
+        interference_env ({(holder_class, filler_class): slowdown})
+        configures the SIMULATED PHYSICAL contention: a filler kernel
+        sharing the device with a gap holder runs slowdown x longer,
+        keyed by the GROUND-TRUTH classes from TraceKernel.kclass —
+        independent of what the scheduler believes, so a wrong model
+        visibly hurts JCT."""
         self.tasks = tasks
         self.mode = mode
         self.profiled = profiled or ProfiledData()
@@ -167,9 +181,22 @@ class SimScheduler:
         self._done_k = [0] * n          # kernels completed
         self._issued = [0] * n
         self._pending_issue: List[Optional[int]] = [None] * n
+        self.interference = InterferenceModel.coerce(interference)
+        if self.interference is not None and self.interference.enabled:
+            # expose on the shared profile so checkpointing can persist
+            # the (possibly online-refined) coefficient table
+            self.profiled.interference = self.interference
+        self._ienv = dict(interference_env) if interference_env else None
+        self._true_class = {}
+        if self._ienv is not None:
+            for ti, t in enumerate(tasks):
+                for k in t.kernels:
+                    self._true_class[(ti, k.kid)] = \
+                        k.kclass or COMPUTE_BOUND
         cfg = OnlineConfig.coerce(online)
         self.online = (OnlineMeasurement(self.profiled, cfg,
-                                         clock=lambda: self.now)
+                                         clock=lambda: self.now,
+                                         interference=self.interference)
                        if cfg is not None else None)
         # single-threaded discrete-event driver: elide the queue lock
         self.placement = PlacementLayer(devices, mode, self.profiled,
@@ -181,7 +208,8 @@ class SimScheduler:
                                         launch=self._device_launch,
                                         threadsafe=False, trace=trace,
                                         reference=reference,
-                                        online=self.online)
+                                        online=self.online,
+                                        interference=self.interference)
         # single-device alias: the decision core the differential suite
         # diffs against a bare FikitPolicy (placement K=1 is pass-through)
         self.policy = self.placement.policies[0]
@@ -258,6 +286,16 @@ class SimScheduler:
         """Placement launch hook: put the request on ``device``'s serial
         timeline."""
         dur = self._noisy(float(req.payload)) * (1.0 + self.meas_ovh)
+        if filler and self._ienv is not None:
+            # physical contention: a filler co-running against the gap
+            # holder is slowed by the GROUND-TRUTH class-pair factor,
+            # regardless of what the scheduler's model predicted
+            gk = self.placement.policies[device].gap_kinfo
+            if gk is not None:
+                h = self._true_class.get(gk, COMPUTE_BOUND)
+                f = self._true_class.get(
+                    (req.task_instance, req.kernel_id), COMPUTE_BOUND)
+                dur *= self._ienv.get((h, f), 1.0)
         start = max(self.now, self.device_free[device])
         end = start + dur
         self.device_free[device] = end
@@ -318,7 +356,8 @@ def measure_task(spec: TaskSpec, T: int = 10, jitter: float = 0.0,
             kid = spec.kernels[k.seq].kid
             # the device measured the kernel under measurement overhead;
             # report the de-rated (true) duration like cudaEvent timing
-            prof.record(kid, (k.end - k.start) / (1.0 + measurement_overhead))
+            prof.record(kid, (k.end - k.start) / (1.0 + measurement_overhead),
+                        kclass=spec.kernels[k.seq].kclass)
             if i < len(tl) - 1:
                 prof.record_gap(max(0.0, tl[i + 1].start - k.end))
         prof.end_run()

@@ -39,10 +39,17 @@ class TaskKey:
 @dataclass(frozen=True)
 class TraceKernel:
     """One kernel occurrence in a task trace: duration + following host gap
-    (both seconds). Used by the simulator and as ground truth in tests."""
+    (both seconds). Used by the simulator and as ground truth in tests.
+
+    ``kclass`` is the kernel's ground-truth resource class
+    (``repro.core.interference``: "compute" / "memory"), recorded into the
+    profile by the measurement phase and used by the simulator's physical
+    interference environment. ``None`` (default) means unclassified,
+    treated as compute-bound everywhere."""
     kid: KernelID
     duration: float
     gap_after: float = 0.0
+    kclass: Optional[str] = None
 
 
 _req_counter = itertools.count()

@@ -10,7 +10,12 @@ bodies / fusions / calls, and produces trip-count-corrected totals for:
 - per-collective traffic bytes (exact, from op output shapes), and
 - dot FLOPs (2 * prod(output dims) * prod(contracting dims)).
 
-Used by the dry-run and the roofline analysis.
+Used by the dry-run and the roofline analysis. The corrected
+(flops, bytes) pair also feeds ``resource_class_from_cost``: the
+arithmetic-intensity split of a program into compute-bound vs
+memory-bound against a per-arch ridge point, which is the offline
+analog of the scheduler's kernel resource classes
+(``repro.core.interference``).
 """
 from __future__ import annotations
 
@@ -40,6 +45,18 @@ def cost_analysis_dict(compiled) -> Dict[str, float]:
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+
+def resource_class_from_cost(flops: float, nbytes: float,
+                             ridge: float) -> str:
+    """Compute-bound vs memory-bound from trip-count-corrected HLO cost.
+
+    ``ridge`` is the arch's ridge point in FLOP/byte (peak FLOP/s over
+    HBM bandwidth). Delegates to the scheduler-side classifier so the
+    offline (HLO cost) and online (profiled kernel) paths can never
+    disagree on the boundary."""
+    from repro.core.interference import classify_intensity
+    return classify_intensity(flops, nbytes, ridge)
 
 
 def _shapes(text: str) -> List[Tuple[str, List[int]]]:

@@ -68,7 +68,8 @@ class ServingSystem:
 
     def __init__(self, mode: Mode = Mode.FIKIT, measure_runs: int = 5,
                  devices: int = 1, discipline: str = "least_loaded",
-                 queue_discipline: str = "fifo", online_measure=False):
+                 queue_discipline: str = "fifo", online_measure=False,
+                 interference=None):
         """``online_measure`` (False / True / ``repro.core.online.
         OnlineConfig``) enables live SK/SG refinement during the sharing
         phase: every dispatched segment's device-time bracket feeds
@@ -76,7 +77,12 @@ class ServingSystem:
         services get cold-start provisional durations instead of being
         invisible to gap filling, and ``online_stats`` reports
         observation/commit/drift counters. Off (default) is the paper's
-        strictly-offline two-phase behavior."""
+        strictly-offline two-phase behavior.
+
+        ``interference`` (None / True / mapping /
+        ``repro.core.interference.InterferenceModel``) enables
+        interference-aware gap filling in the hosted engine; off (None,
+        default) keeps scheduling bit-identical to interference-off."""
         self.profiles = ProfiledData()
         self.mode = mode
         self.measure_runs = measure_runs
@@ -84,24 +90,36 @@ class ServingSystem:
         self.discipline = discipline
         self.queue_discipline = queue_discipline
         self.online_measure = online_measure
+        self.interference = interference
         self.engine: Optional[WallClockEngine] = None
         self.deadline_misses = 0
         self.deadlines_tagged = 0
         self._stats_lock = threading.Lock()
         self._final_online_stats: Optional[dict] = None
 
-    def __enter__(self):
+    def start(self) -> "ServingSystem":
+        """Build + start a fresh engine. Clears any final-stats snapshot a
+        previous start/stop cycle cached, so ``online_stats`` reflects THIS
+        engine, not a stale restart leftover."""
+        self._final_online_stats = None
         self.engine = WallClockEngine(
             self.mode, self.profiles, devices=self.devices,
             discipline=self.discipline,
             queue_discipline=self.queue_discipline,
-            online=self.online_measure or None).start()
+            online=self.online_measure or None,
+            interference=self.interference).start()
         return self
 
-    def __exit__(self, *exc):
+    def stop(self) -> None:
         self.engine.stop()
         if self.engine.online is not None and self.engine.online.config.enabled:
             self._final_online_stats = self.engine.online.stats()  # post-flush
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
 
     @property
     def online_stats(self) -> Optional[dict]:

@@ -1,0 +1,398 @@
+"""Directed tests for interference-aware gap filling (PR 6).
+
+Covers the classifier boundary, the coefficient model, class plumbing
+through profiles and the store (including pre-classification files), the
+class-aware BestPrioFit semantics on BOTH paths, the effective gap
+debit, online coefficient learning with SK de-rating, and a mini
+end-to-end simulation where the aware policy beats the class-blind one
+on an adversarial mix. The randomized indexed-vs-scan and
+wired-but-disabled sweeps live in ``tests/test_policy_differential.py``.
+"""
+import json
+
+import pytest
+
+from repro.core.interference import (COMPUTE_BOUND, DEFAULT_COEFFS,
+                                     MEMORY_BOUND, InterferenceModel,
+                                     classify_intensity)
+from repro.core.fikit import best_prio_fit, best_prio_fit_scan
+from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig, OnlineMeasurement
+from repro.core.profile_store import load_profiles, save_profiles
+from repro.core.profiler import ProfiledData, Profiler, TaskProfile
+from repro.core.queues import PriorityQueues
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
+from repro.launch.hlo_cost import resource_class_from_cost
+
+pytestmark = pytest.mark.fast
+
+MEM = MEMORY_BOUND
+COMP = COMPUTE_BOUND
+
+
+# ---------------------------------------------------------------------------
+# Classifier + model
+# ---------------------------------------------------------------------------
+def test_classify_intensity_boundary():
+    # ridge 100 FLOP/byte: at the ridge counts as compute-bound
+    assert classify_intensity(1000.0, 10.0, 100.0) == COMP
+    assert classify_intensity(999.0, 10.0, 100.0) == MEM
+    assert classify_intensity(1001.0, 10.0, 100.0) == COMP
+
+
+def test_classify_zero_bytes_is_compute():
+    """No recorded traffic -> conservative compute-bound default."""
+    assert classify_intensity(0.0, 0.0, 100.0) == COMP
+    assert classify_intensity(5.0, -1.0, 100.0) == COMP
+
+
+def test_resource_class_from_cost_delegates():
+    assert resource_class_from_cost(1e12, 1e9, 240.0) == COMP
+    assert resource_class_from_cost(1e10, 1e9, 240.0) == MEM
+
+
+def test_model_coeff_and_unknown_pair():
+    m = InterferenceModel({(MEM, MEM): 1.5})
+    assert m.coeff(MEM, MEM) == 1.5
+    assert m.coeff(MEM, COMP) == 1.0      # unknown pair: no interference
+    assert m.enabled
+
+
+def test_model_update_ema_and_floor():
+    m = InterferenceModel({(MEM, MEM): 1.4})
+    m.update((MEM, MEM), 1.8, alpha=0.5)
+    assert m.coeff(MEM, MEM) == pytest.approx(1.6)
+    # floor clamp: a sub-1.0 batch (noise) can never model a speedup
+    m.update((MEM, MEM), 0.0, alpha=1.0)
+    assert m.coeff(MEM, MEM) == 1.0
+    assert m.updates == 2
+
+
+def test_model_coerce():
+    assert InterferenceModel.coerce(None) is None
+    assert InterferenceModel.coerce(False) is None
+    m = InterferenceModel.coerce(True)
+    assert m.snapshot() == DEFAULT_COEFFS
+    same = InterferenceModel(enabled=False)
+    assert InterferenceModel.coerce(same) is same
+    m2 = InterferenceModel.coerce({(MEM, COMP): 1.2})
+    assert m2.coeff(MEM, COMP) == 1.2
+    with pytest.raises(TypeError):
+        InterferenceModel.coerce(1.5)
+
+
+# ---------------------------------------------------------------------------
+# Class plumbing: profiler -> ProfiledData -> store
+# ---------------------------------------------------------------------------
+def _profile(key, sk, kclass=None):
+    prof = TaskProfile(key=key, runs=1)
+    prof.SK = dict(sk)
+    prof.kclass = dict(kclass or {})
+    return prof
+
+
+def test_predict_class_default_compute():
+    pd = ProfiledData()
+    kid = KernelID("t/k")
+    key = TaskKey("t")
+    pd.load(_profile(key, {kid: 1.0}))
+    assert pd.predict_class(key, kid) == COMP          # unclassified
+    pd.load(_profile(key, {kid: 1.0}, {kid: MEM}))
+    assert pd.predict_class(key, kid) == MEM
+    # reload without a class drops the stale entry
+    pd.load(_profile(key, {kid: 1.0}))
+    assert pd.predict_class(key, kid) == COMP
+
+
+def test_profiler_records_kclass():
+    prof = Profiler(TaskKey("t"))
+    kid = KernelID("t/k")
+    prof.start_run()
+    prof.record(kid, 1.0, kclass=MEM)
+    prof.record(kid, 1.2)                  # None does not erase
+    prof.end_run()
+    stats = prof.statistics()
+    assert stats.kclass == {kid: MEM}
+
+
+def test_store_roundtrips_class_and_coeffs(tmp_path):
+    pd = ProfiledData()
+    kid = KernelID("svc/k", (4,), (128,))
+    key = TaskKey("svc", (1, 32))
+    pd.load(_profile(key, {kid: 2.0}, {kid: MEM}))
+    pd.interference = InterferenceModel({(MEM, MEM): 1.43,
+                                         (MEM, COMP): 1.07})
+    path = str(tmp_path / "profiles.json")
+    save_profiles(path, pd)
+    with open(path) as f:
+        raw = json.load(f)
+    assert isinstance(raw, dict)           # envelope with a model attached
+    assert set(raw) == {"profiles", "interference"}
+    back = load_profiles(path)
+    assert back.predict_class(key, kid) == MEM
+    assert back.predict_duration(key, kid) == 2.0
+    assert back.interference is not None
+    assert back.interference.enabled
+    assert back.interference.coeff(MEM, MEM) == 1.43
+    assert back.interference.coeff(MEM, COMP) == 1.07
+
+
+def test_store_without_model_stays_list_format(tmp_path):
+    """Plain stores keep the original top-level list format and the exact
+    offline key set — old readers keep working."""
+    pd = ProfiledData()
+    kid = KernelID("svc/k")
+    key = TaskKey("svc")
+    pd.load(_profile(key, {kid: 2.0}))
+    path = str(tmp_path / "plain.json")
+    save_profiles(path, pd)
+    with open(path) as f:
+        raw = json.load(f)
+    assert isinstance(raw, list)
+    assert set(raw[0]) == {"process", "args", "runs", "SK", "SG"}
+
+
+def test_pre_classification_file_loads_compute_default(tmp_path):
+    """A file written before resource classes existed (no ``class``
+    field, top-level list) loads cleanly; every kernel defaults to
+    compute-bound."""
+    legacy = [{
+        "process": "old", "args": [], "runs": 3,
+        "SK": [[["old/k", [], []], 1.5]],
+        "SG": [[["old/k", [], []], 0.2]],
+    }]
+    path = str(tmp_path / "legacy.json")
+    with open(path, "w") as f:
+        json.dump(legacy, f)
+    pd = load_profiles(path)
+    key = TaskKey("old")
+    kid = KernelID("old/k")
+    assert pd.predict_duration(key, kid) == 1.5
+    assert pd.predict_class(key, kid) == COMP
+    assert pd.interference is None
+
+
+# ---------------------------------------------------------------------------
+# Class-aware BestPrioFit: directed semantics, both paths
+# ---------------------------------------------------------------------------
+def _mk_pd():
+    pd = ProfiledData()
+    pd.load(_profile(TaskKey("mem"), {KernelID("mem/k"): 0.0045},
+                     {KernelID("mem/k"): MEM}))
+    pd.load(_profile(TaskKey("cpu"), {KernelID("cpu/k"): 0.004},
+                     {KernelID("cpu/k"): COMP}))
+    return pd
+
+
+def _park(pd, model, discipline="fifo"):
+    q = PriorityQueues(profiled=pd, threadsafe=False,
+                       discipline_by_level=discipline,
+                       interference=model)
+    q.push(KernelRequest(task_key=TaskKey("mem"),
+                         kernel_id=KernelID("mem/k"), priority=5,
+                         task_instance=1, payload=0.0045))
+    q.push(KernelRequest(task_key=TaskKey("cpu"),
+                         kernel_id=KernelID("cpu/k"), priority=5,
+                         task_instance=2, payload=0.004))
+    return q
+
+
+MODEL = {(MEM, MEM): 1.6, (MEM, COMP): 1.05,
+         (COMP, COMP): 1.15, (COMP, MEM): 1.25}
+
+
+@pytest.mark.parametrize("fit", [best_prio_fit, best_prio_fit_scan])
+def test_blind_fit_picks_memory_bait(fit):
+    """Without a holder class the longest fit wins: the memory-bound
+    4.5 ms candidate — exactly the paper's Algorithm 2."""
+    pd = _mk_pd()
+    req, dur = fit(_park(pd, None), 0.006, pd)
+    assert req.task_key == TaskKey("mem")
+    assert dur == 0.0045
+
+
+@pytest.mark.parametrize("fit", [best_prio_fit, best_prio_fit_scan])
+def test_aware_fit_excludes_memory_bait(fit):
+    """Memory-bound holder: the mem candidate's effective occupancy
+    (4.5 x 1.6 = 7.2 ms) busts the 6 ms gap, so the compute candidate is
+    selected instead (4.0 x 1.05 = 4.2 ms fits); the RAW duration is
+    returned."""
+    pd = _mk_pd()
+    model = InterferenceModel(MODEL)
+    req, dur = fit(_park(pd, model), 0.006, pd,
+                   holder_class=MEM, interference=model)
+    assert req.task_key == TaskKey("cpu")
+    assert dur == 0.004                    # raw prediction, not effective
+
+
+@pytest.mark.parametrize("fit", [best_prio_fit, best_prio_fit_scan])
+def test_aware_fit_compute_holder_keeps_longest(fit):
+    """Compute-bound holder: mem 4.5 x 1.25 = 5.625 < 6 still fits and is
+    still the longest — the class dimension only changes decisions when
+    the effective occupancy busts the gap."""
+    pd = _mk_pd()
+    model = InterferenceModel(MODEL)
+    req, dur = fit(_park(pd, model), 0.006, pd,
+                   holder_class=COMP, interference=model)
+    assert req.task_key == TaskKey("mem")
+    assert dur == 0.0045
+
+
+@pytest.mark.parametrize("fit", [best_prio_fit, best_prio_fit_scan])
+def test_disabled_model_ignores_holder_class(fit):
+    """A wired-but-disabled model scores exactly like no model."""
+    pd = _mk_pd()
+    model = InterferenceModel(MODEL, enabled=False)
+    req, dur = fit(_park(pd, model), 0.006, pd,
+                   holder_class=MEM, interference=model)
+    assert req.task_key == TaskKey("mem")
+    assert dur == 0.0045
+
+
+# ---------------------------------------------------------------------------
+# Effective gap debit
+# ---------------------------------------------------------------------------
+def _debit_tasks():
+    """9 ms gaps; compute-bound 4 ms fillers. Blind filling debits the
+    raw 4 ms and fits TWO per gap; with coeff (mem, comp) = 1.4 the
+    effective debit is 5.6 ms and only ONE fits."""
+    hi = TaskSpec(TaskKey("hi"), 0,
+                  [TraceKernel(KernelID("hi/k"), 0.002, 0.009,
+                               kclass=MEM)] * 6)
+    lo = TaskSpec(TaskKey("cpu"), 5,
+                  [TraceKernel(KernelID("cpu/k"), 0.004, 0.0001,
+                               kclass=COMP)] * 30,
+                  arrival=0.0005, max_inflight=8)
+    return [hi, lo]
+
+
+def test_fill_loop_debits_effective_duration():
+    tasks = _debit_tasks()
+    pd = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    blind = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0).run()
+    pd2 = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    model = InterferenceModel({(MEM, COMP): 1.4})
+    aware = SimScheduler(tasks, Mode.FIKIT, pd2, jitter=0.0,
+                         interference=model).run()
+    assert blind.fills > aware.fills > 0
+
+
+# ---------------------------------------------------------------------------
+# Online coefficient learning + SK de-rating
+# ---------------------------------------------------------------------------
+def _om(model, **cfg):
+    pd = ProfiledData()
+    kid = KernelID("f/k")
+    key = TaskKey("f")
+    pd.load(_profile(key, {kid: 1.0}, {kid: MEM}))
+    om = OnlineMeasurement(
+        pd, OnlineConfig(epoch_observations=10 ** 9,
+                         epoch_seconds=10 ** 9, **cfg),
+        clock=lambda: 0.0, interference=model)
+    return om, pd, key, kid
+
+
+def test_pair_ratio_learned_at_commit():
+    model = InterferenceModel({(MEM, MEM): 1.0})
+    om, pd, key, kid = _om(model, ema_alpha=0.5)
+    om.note_fill_pair(7, kid, MEM, MEM)
+    om.observe(0, 7, key, kid, 0.0, 1.5)   # observed 1.5x the prediction
+    assert om.interference_pair_obs == 1
+    om.commit()
+    assert om.interference_updates == 1
+    assert model.coeff(MEM, MEM) == pytest.approx(1.25)  # EMA from 1.0
+    # tag consumed: a later untagged completion adds no pair sample
+    om.observe(0, 7, key, kid, 2.0, 3.5)
+    om.commit()
+    assert om.interference_pair_obs == 1
+
+
+def test_sk_sample_derated_by_current_coeff():
+    """A contended fill's duration enters the SK buffers de-rated by the
+    model's current belief, so contention doesn't read as drift."""
+    model = InterferenceModel({(MEM, MEM): 1.5})
+    om, pd, key, kid = _om(model, ema_alpha=1.0)
+    om.note_fill_pair(3, kid, MEM, MEM)
+    om.observe(0, 3, key, kid, 0.0, 1.5)   # raw 1.5, de-rated 1.0
+    om.commit()
+    assert pd.predict_duration(key, kid) == pytest.approx(1.0)
+
+
+def test_task_gone_drops_pending_pair_tags():
+    model = InterferenceModel({(MEM, MEM): 1.0})
+    om, pd, key, kid = _om(model)
+    om.note_fill_pair(4, kid, MEM, MEM)
+    om.task_gone(4)
+    om.observe(0, 4, key, kid, 0.0, 1.5)
+    assert om.interference_pair_obs == 0
+
+
+def test_disabled_online_never_tags():
+    model = InterferenceModel({(MEM, MEM): 1.0})
+    om, pd, key, kid = _om(model, enabled=False)
+    om.note_fill_pair(4, kid, MEM, MEM)
+    assert om._pending_pairs == {}
+
+
+def test_online_stats_carry_interference_counters():
+    model = InterferenceModel({(MEM, MEM): 1.0})
+    om, pd, key, kid = _om(model)
+    s = om.stats()
+    assert s["interference_pair_obs"] == 0
+    assert s["interference_updates"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Mini end-to-end: aware beats blind on the adversarial mix
+# ---------------------------------------------------------------------------
+def _adversarial_tasks(n_hi=40, n_lo=60):
+    tasks = [TaskSpec(
+        TaskKey("hi"), 0,
+        [TraceKernel(KernelID("hi/k"), 0.002, 0.006,
+                     kclass=MEM)] * n_hi)]
+    tasks.append(TaskSpec(
+        TaskKey("lo_mem"), 8,
+        [TraceKernel(KernelID("lo_mem/k"), 0.0045, 0.0002,
+                     kclass=MEM)] * n_lo,
+        arrival=0.001, max_inflight=16))
+    tasks.append(TaskSpec(
+        TaskKey("lo_cpu"), 8,
+        [TraceKernel(KernelID("lo_cpu/k"), 0.004, 0.0002,
+                     kclass=COMP)] * n_lo,
+        arrival=0.002, max_inflight=16))
+    return tasks
+
+
+TRUE_ENV = {(MEM, MEM): 1.6, (COMP, COMP): 1.15,
+            (COMP, MEM): 1.25, (MEM, COMP): 1.05}
+
+
+def test_aware_beats_blind_end_to_end():
+    tasks = _adversarial_tasks()
+    pd_a = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    pd_b = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    off = SimScheduler(tasks, Mode.FIKIT, pd_a, jitter=0.0,
+                       interference_env=TRUE_ENV).run()
+    aware = SimScheduler(tasks, Mode.FIKIT, pd_b, jitter=0.0,
+                         interference=InterferenceModel(TRUE_ENV),
+                         interference_env=TRUE_ENV).run()
+    assert aware.jct(0) < off.jct(0)
+    assert aware.fills > 0
+    # the blind run pays overshoot (fillers physically bust the gaps);
+    # the aware run avoids it entirely on this mix
+    assert off.overshoot_time > 0.0
+    assert aware.overshoot_time == 0.0
+
+
+def test_env_without_model_slows_fillers():
+    """The physical environment applies regardless of the scheduler's
+    beliefs — a filler's simulated duration stretches by the ground-truth
+    pair factor even with no model attached."""
+    tasks = _adversarial_tasks(n_hi=10, n_lo=20)
+    pd_a = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    pd_b = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    clean = SimScheduler(tasks, Mode.FIKIT, pd_a, jitter=0.0).run()
+    env = SimScheduler(tasks, Mode.FIKIT, pd_b, jitter=0.0,
+                       interference_env=TRUE_ENV).run()
+    assert env.jct(0) > clean.jct(0)

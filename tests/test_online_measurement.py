@@ -124,6 +124,129 @@ def test_gap_attribution_same_device_stream_only():
     assert om.gap_observations == 1
 
 
+def _om(pd=None):
+    pd = pd if pd is not None else ProfiledData()
+    om = OnlineMeasurement(pd, OnlineConfig(epoch_observations=10**9,
+                                            epoch_seconds=10**9))
+    return pd, om
+
+
+def test_cross_device_completion_never_yields_gap_sample():
+    """Same instance observed on another device (migration without a
+    task_gone — defensive path): the device check alone must refuse the
+    cross-timeline launch-to-launch delta."""
+    pd, om = _om()
+    om.observe(0, 1, HI, K_HI, 0.0, 0.002)
+    om.observe(1, 1, HI, K_HI, 0.010, 0.012)    # other device: no pair
+    assert om.gap_observations == 0
+    om.commit()
+    assert pd.predict_gap(HI, K_HI) == 0.0      # nothing fabricated
+    # the anchor re-bound to device 1: the next completion THERE pairs
+    om.observe(1, 1, HI, K_HI, 0.015, 0.016)
+    assert om.gap_observations == 1
+
+
+def test_steal_then_observe_drops_gap_anchor():
+    """The placement layer calls task_gone BEFORE a steal detaches a
+    task; the first completion on the destination device must produce no
+    gap sample, and the stream re-anchors on the new timeline."""
+    pd, om = _om()
+    om.observe(0, 1, HI, K_HI, 0.0, 0.002)
+    om.task_gone(1)                             # steal: anchor dropped
+    om.observe(1, 1, HI, K_HI, 0.004, 0.006)    # first launch on dest
+    assert om.gap_observations == 0
+    om.observe(1, 1, HI, K_HI, 0.009, 0.011)    # same-device pair: clean
+    assert om.gap_observations == 1
+    om.commit()
+    assert math.isclose(pd.predict_gap(HI, K_HI), 0.003)
+
+
+def test_negative_raw_gap_skipped_not_clamped():
+    """Overlapping wall-clock brackets (callback jitter) give a negative
+    launch-to-launch gap: the sample is DROPPED, not clamped — recording
+    a fabricated 0.0 would drag the SG estimate toward zero."""
+    pd, om = _om()
+    om.observe(0, 1, HI, K_HI, 0.0, 0.005)
+    om.observe(0, 1, HI, K_HI, 0.004, 0.006)    # starts before prev end
+    assert om.gap_observations == 0
+    om.commit()
+    assert pd.predict_gap(HI, K_HI) == 0.0
+    assert pd.get(HI).gap_obs_count == {}
+    # skipping is per-sample: the next clean pair still records
+    om.observe(0, 1, HI, K_HI, 0.009, 0.010)    # gap 3ms after prev end
+    assert om.gap_observations == 1
+    om.commit()
+    assert math.isclose(pd.predict_gap(HI, K_HI), 0.003)
+
+
+def test_directed_steal_gap_attribution_stays_same_device(monkeypatch):
+    """Force a real 2-device steal mid-run and replay every observation:
+    a gap sample may only pair two same-device completions of one stream
+    with no steal/retirement in between, and the stolen task's first
+    completion on the destination device contributes none."""
+    events = []
+    orig_observe = OnlineMeasurement.observe
+    orig_gone = OnlineMeasurement.task_gone
+
+    def spy_observe(self, device, instance, key, kid, start, end, *,
+                    last=False):
+        before = self.gap_observations
+        ret = orig_observe(self, device, instance, key, kid, start, end,
+                           last=last)
+        events.append(("obs", device, instance, key,
+                       self.gap_observations - before, last))
+        return ret
+
+    def spy_gone(self, instance):
+        events.append(("gone", instance))
+        return orig_gone(self, instance)
+
+    monkeypatch.setattr(OnlineMeasurement, "observe", spy_observe)
+    monkeypatch.setattr(OnlineMeasurement, "task_gone", spy_gone)
+
+    tasks = [
+        TaskSpec(HI, 0, [k("hi/a", 0.002, 0.006)] * 20),
+        TaskSpec(LO, 5, [k("lo/a", 0.003, 0.0005)] * 8, arrival=0.001),
+        TaskSpec(TaskKey("tiny"), 9, [k("tiny/a", 0.001, 0.0001)] * 2,
+                 arrival=0.0005),
+    ]
+
+    def pin(layer, instance, key, priority, arrival):
+        # hi+lo co-located on device 0; tiny holds device 1 then retires,
+        # leaving it idle to steal the parked lo task
+        return 1 if key.process == "tiny" else 0
+
+    pd = profile_tasks(tasks, T=3, jitter=0.0, measurement_overhead=0.0)
+    sim = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0, devices=2,
+                       discipline=pin,
+                       online=OnlineConfig(epoch_observations=4))
+    sim.run()
+    assert sim.placement.steal_count >= 1
+
+    # the lo stream really ran on both devices (the steal moved it)
+    lo_devices = {e[1] for e in events if e[0] == "obs" and e[3] == LO}
+    assert lo_devices == {0, 1}
+
+    anchor = {}
+    crossings = 0
+    for e in events:
+        if e[0] == "gone":
+            anchor.pop(e[1], None)
+            continue
+        _, device, inst, key, gained, last = e
+        if anchor.get(inst) is not None and anchor[inst] != device:
+            crossings += 1
+        if gained:
+            assert anchor.get(inst) == device, e
+        if last:
+            anchor.pop(inst, None)
+        else:
+            anchor[inst] = device
+    # with task_gone called before the steal, the destination-device
+    # completion never even sees a stale foreign anchor
+    assert crossings == 0
+
+
 def test_disabled_config_never_observes_or_commits():
     pd = ProfiledData()
     om = OnlineMeasurement(pd, OnlineConfig(enabled=False))

@@ -44,6 +44,8 @@ import random
 
 import pytest
 
+from repro.core.interference import (COMPUTE_BOUND, MEMORY_BOUND,
+                                     InterferenceModel)
 from repro.core.kernel_id import KernelID
 from repro.core.online import OnlineConfig
 from repro.core.policy import FikitPolicy, Mode
@@ -64,7 +66,7 @@ class VirtualHarness:
     SimScheduler. No jitter, exact durations."""
 
     def __init__(self, tasks, mode, profiled, pipeline_depth=2,
-                 discipline="fifo", reference=False):
+                 discipline="fifo", reference=False, interference=None):
         self.tasks = tasks
         self.now = 0.0
         self.device_free = 0.0
@@ -79,7 +81,8 @@ class VirtualHarness:
                                   clock=lambda: self.now,
                                   launch=self._to_device,
                                   discipline=discipline,
-                                  reference=reference)
+                                  reference=reference,
+                                  interference=interference)
 
     def _at(self, t, fn):
         heapq.heappush(self._heap, (t, next(self._tick), fn))
@@ -212,14 +215,19 @@ _GAP_GRID = [0.0, 0.0003, 0.001, 0.0025, 0.005, 0.008]
 _DEADLINE_GRID = [None, 0.004, 0.008, 0.008, 0.02, 0.05]
 
 
-def random_tasks(rng, deadlines=False):
+def random_tasks(rng, deadlines=False, classes=False):
     n = rng.randint(2, 5)
     specs = []
     for t in range(n):
         nk = rng.randint(2, 12)
         kid = KernelID(f"svc{t}/k")
+        # one class per kid (classes ARE per kernel identity): None keeps
+        # the kernel unclassified -> compute-bound default in scoring
+        kc = (rng.choice([COMPUTE_BOUND, MEMORY_BOUND, None])
+              if classes else None)
         kernels = [TraceKernel(kid, rng.choice(_DUR_GRID),
-                               rng.choice(_GAP_GRID)) for _ in range(nk)]
+                               rng.choice(_GAP_GRID), kclass=kc)
+                   for _ in range(nk)]
         arrival = rng.choice([0.0, 0.0005, 0.002, 0.006, 0.012])
         rel_dl = rng.choice(_DEADLINE_GRID) if deadlines else None
         specs.append(TaskSpec(
@@ -325,6 +333,68 @@ def test_online_off_matches_across_devices(seed, mode):
     assert [e.__dict__ for e in rep_a.timeline] == \
         [e.__dict__ for e in rep_b.timeline]
     assert rep_a.steals == rep_b.steals
+
+
+# ---------------------------------------------------------------------------
+# Differential: interference OFF is bit-identical to no model at all
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("seed", range(50))
+def test_interference_off_is_bit_identical(seed, mode):
+    """The interference model's standing contract: ``interference=None``
+    (nothing built) and a wired-but-disabled model
+    (``InterferenceModel(enabled=False)``) produce byte-identical
+    decision traces and device timelines on randomized class-tagged
+    scenarios — the class plumbing (kclass on profiles, per-class queue
+    sub-indexes, the holder-class gap bookkeeping) must cost zero
+    decisions when off. 50 seeds x {FIKIT, PREEMPT} = 100 cases."""
+    rng = random.Random(seed * 65537 + (2 if mode is Mode.FIKIT else 3))
+    tasks = random_tasks(rng, deadlines=True, classes=True)
+    pd_a = _profiles(tasks)
+    pd_b = _profiles(tasks)
+    base = SimScheduler(tasks, mode, pd_a, jitter=0.02, seed=seed)
+    rep_a = base.run()
+    wired = SimScheduler(tasks, mode, pd_b, jitter=0.02, seed=seed,
+                         interference=InterferenceModel(enabled=False))
+    rep_b = wired.run()
+    assert wired.interference is not None       # model IS constructed
+    assert base.policy.trace == wired.policy.trace
+    assert [e.__dict__ for e in rep_a.timeline] == \
+        [e.__dict__ for e in rep_b.timeline]
+
+
+# ---------------------------------------------------------------------------
+# Differential: interference ON — indexed per-class search vs O(n) scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("discipline", ["fifo", "sjf", "edf"])
+@pytest.mark.parametrize("seed", range(40))
+def test_interference_fast_path_matches_reference_oracle(seed, discipline):
+    """With an ENABLED interference model and random per-pair
+    coefficients, the indexed per-class selection (``_Level.cindex``
+    bisects) must make bit-identical decisions to the O(n) reference
+    scan's tightened-limit walk — for every queue discipline, on
+    class-tagged, tie-heavy randomized scenarios."""
+    rng = random.Random(seed * 15485863
+                        + {"fifo": 0, "sjf": 1, "edf": 2}[discipline])
+    tasks = random_tasks(rng, deadlines=(discipline == "edf"),
+                         classes=True)
+    pd = _profiles(tasks)
+    coeffs = {(h, f): round(rng.uniform(1.0, 2.0), 3)
+              for h in (COMPUTE_BOUND, MEMORY_BOUND)
+              for f in (COMPUTE_BOUND, MEMORY_BOUND)}
+    model = InterferenceModel(coeffs)
+    fast = VirtualHarness(tasks, Mode.FIKIT, pd, discipline=discipline,
+                          reference=False, interference=model).run()
+    ref = VirtualHarness(tasks, Mode.FIKIT, pd, discipline=discipline,
+                         reference=True, interference=model).run()
+    assert fast.policy.trace == ref.policy.trace
+    assert fast.launch_order == ref.launch_order
+    assert fast.policy.fill_count == ref.policy.fill_count
+    # the fast path also agrees with SimScheduler end-to-end
+    sim = SimScheduler(tasks, Mode.FIKIT, pd, jitter=0.0,
+                       queue_discipline=discipline, interference=model)
+    sim.run()
+    assert sim.policy.trace == fast.policy.trace
 
 
 # ---------------------------------------------------------------------------

@@ -184,6 +184,54 @@ def test_indexed_matches_scan_exhaustive_drain():
 
 
 # ---------------------------------------------------------------------------
+# Cold-start provisional durations vs the index binding
+# ---------------------------------------------------------------------------
+def test_cold_flag_flip_rebinds_index_without_version_bump():
+    """``enable_cold_start()`` changes what unprofiled heads predict
+    WITHOUT bumping ``version`` — the index binding keys on the cold flag
+    too, so the indexed path agrees with the O(n) scan within the very
+    next decision instead of serving stale -1.0 sentinels."""
+    pd = _pd([("warm", "kw", 0.002)])
+    qa, qb = PriorityQueues(), PriorityQueues()
+    for q in (qa, qb):
+        q.push(_req("cold", "kc", 5, instance=1))   # never profiled
+    # before the flip: the -1.0 sentinel hides the head on BOTH paths
+    assert best_prio_fit(qa, 0.01, pd)[0] is None
+    assert best_prio_fit_scan(qb, 0.01, pd)[0] is None
+    v = pd.version
+    pd.enable_cold_start()
+    assert pd.version == v                  # the flip does not bump
+    ra, da = best_prio_fit(qa, 0.01, pd)    # must rebind on the flag
+    rb, db = best_prio_fit_scan(qb, 0.01, pd)
+    assert ra is not None and rb is not None
+    assert da == db == 0.002                # provisional = global mean SK
+    assert (ra.task_key, ra.seq_index) == (rb.task_key, rb.seq_index)
+
+
+def test_cold_estimate_binding_fixed_until_version_bump():
+    """A head indexed under a cold provisional duration keeps that exact
+    binding until the profile version changes; the load that shifts the
+    global mean also bumps version, so the next decision serves the
+    refreshed estimate — never a half-stale mix."""
+    pd = _pd([("warm", "kw", 0.002)])
+    pd.enable_cold_start()
+    qs = PriorityQueues(threadsafe=False)
+    qs.push(_req("cold", "kc", 5, instance=1))
+    got, dur = best_prio_fit(qs, 0.01, pd)
+    assert dur == 0.002                     # global mean over {0.002}
+    assert qs.bound_version == pd.version
+    qs.push(got)
+    prof = TaskProfile(key=TaskKey("warm2"), runs=1)
+    prof.SK[KernelID("kw2")] = 0.006
+    pd.load(prof)                           # mean shifts AND version bumps
+    assert qs.bound_version != pd.version
+    got2, dur2 = best_prio_fit(qs, 0.01, pd)
+    assert got2 is not None
+    assert dur2 == pytest.approx((0.002 + 0.006) / 2)
+    assert qs.bound_version == pd.version
+
+
+# ---------------------------------------------------------------------------
 # fills_in_flight clamp (regression: spurious/double fill_complete)
 # ---------------------------------------------------------------------------
 def test_fill_complete_spurious_clamps_at_zero():

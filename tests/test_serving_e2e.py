@@ -5,7 +5,10 @@ import statistics as st
 import pytest
 
 from repro.config import get_config
+from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig
 from repro.core.scheduler import Mode
+from repro.core.task import KernelRequest, TaskKey
 from repro.serving import InferenceService, ServingSystem
 
 pytestmark = pytest.mark.slow
@@ -66,6 +69,36 @@ def test_online_measure_serves_cold_service(services):
     assert prof.online_observations > 0
     assert all(v > 0 for v in prof.SK.values())
     assert sys_.profiles.cold_start
+
+
+@pytest.mark.fast
+def test_restart_clears_stale_online_stats():
+    """A stopped system caches its final (post-flush) online stats; a
+    restart must clear that snapshot so ``online_stats`` reflects the
+    NEW engine instead of serving the previous run's leftovers (fake
+    payloads, no models needed)."""
+    cfg = OnlineConfig(epoch_observations=10**9, epoch_seconds=10**9)
+    sys_ = ServingSystem(Mode.FIKIT, online_measure=cfg)
+    sys_.start()
+    first_engine = sys_.engine
+    key = TaskKey("svc")
+    first_engine.task_begin(1, key, 0)
+    for i in range(3):
+        req = KernelRequest(task_key=key, kernel_id=KernelID("svc/k"),
+                            priority=0, task_instance=1, seq_index=i,
+                            payload=lambda: None)
+        first_engine.submit(req).result(timeout=5)
+    first_engine.task_end(1)
+    sys_.stop()
+    assert sys_.online_stats["observations"] == 3    # final snapshot
+    # restart: the cached snapshot must not mask the new engine's stats
+    sys_.start()
+    try:
+        assert sys_.engine is not first_engine
+        assert sys_.online_stats["observations"] == 0
+    finally:
+        sys_.stop()
+    assert sys_.online_stats["observations"] == 0    # fresh final snapshot
 
 
 def test_fikit_sharing_produces_fills_or_priority(services):
