@@ -1,0 +1,156 @@
+"""Ops-plane durability costs: crash-recovery latency vs store size, and
+hi-priority JCT disturbance under a low-priority cancel storm.
+
+Part 1 — **recovery sweep**: populate a file-backed ``JobStore`` with N
+incomplete jobs (each mid-stream: specs + partial completion watermarks +
+a profile snapshot), then time the full cold-restart path — reopen the
+store, build the recovery plan, reload the learned profiles, and
+construct the recovered ``SimScheduler``. Reported as per-job
+microseconds per store size; the gate bounds the worst per-job cost and
+its growth from the smallest to the largest store (recovery must stay
+~linear in store size, i.e. per-job cost ~flat).
+
+Part 2 — **cancel storm**: a high-priority interactive task shares the
+device with a pool of low-priority fillers; mid-run, every filler is
+cancelled through scripted ``FaultPlan`` controls at consecutive kernel
+boundaries. The hi task's JCT with the storm is compared against the
+identical run without it (same store attached in both). Cancellation
+purges parked requests at kernel boundaries only, so the disturbance
+ceiling is tight (``max_cancel_storm_hi_jct_ratio``).
+
+Gates (tracked in BENCH_recovery.json, enforced by
+``scripts/check_bench_gates.py``): ``max_recovery_us_per_job``,
+``max_recovery_growth``, ``max_cancel_storm_hi_jct_ratio``.
+
+Set BENCH_SMOKE=1 (CI) for reduced store sizes.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import Csv
+from repro.core.faults import FaultPlan
+from repro.core.jobstore import JobStore, spec_to_obj
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+STORE_SIZES = (50, 200) if SMOKE else (100, 400, 1600)
+STORM_FILLERS = 6 if SMOKE else 12
+
+
+def _job_spec(i: int, nk: int = 8) -> TaskSpec:
+    kid = KernelID(f"svc{i % 16}/k")
+    return TaskSpec(TaskKey(f"svc{i % 16}", (i,)), i % 10,
+                    [TraceKernel(kid, 0.002, 0.001)] * nk)
+
+
+def _populate(path: str, n_jobs: int) -> None:
+    with JobStore(path) as store:
+        for i in range(n_jobs):
+            s = _job_spec(i)
+            jid = store.record_submit(None, s.key, s.priority,
+                                      n_kernels=len(s.kernels),
+                                      spec=spec_to_obj(s))
+            for seq in range(i % len(s.kernels)):   # mid-stream watermark
+                store.record_completion(jid, seq)
+        store.snapshot_profiles(
+            profile_tasks([_job_spec(i) for i in range(16)], T=2,
+                          jitter=0.0, measurement_overhead=0.0))
+        store.checkpoint()
+
+
+def _time_recovery(path: str, reps: int = 3) -> float:
+    """Cold-restart wall time (us): reopen + plan + profile reload +
+    recovered-scheduler construction. Best of ``reps``."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        store = JobStore(path)
+        sim = SimScheduler.recover(store, Mode.FIKIT)
+        t1 = time.perf_counter()
+        assert sim.tasks, "recovery plan was empty"
+        store.close()
+        best = min(best, t1 - t0)
+    return best * 1e6
+
+
+def _storm_workload():
+    hi = TaskSpec(TaskKey("hi"), 0,
+                  [TraceKernel(KernelID("hi/a"), 0.002, 0.005)] * 12)
+    los = [TaskSpec(TaskKey(f"lo{i}"), 5 + i % 5,
+                    [TraceKernel(KernelID(f"lo{i}/a"), 0.0015, 0.0003)] * 10,
+                    arrival=0.0005 * (i + 1))
+           for i in range(STORM_FILLERS)]
+    return [hi] + los
+
+
+def _storm_run(cancel: bool) -> float:
+    specs = _storm_workload()
+    pd = profile_tasks(specs, T=2, jitter=0.0, measurement_overhead=0.0)
+    controls = {}
+    if cancel:
+        # one filler cancelled per boundary, a burst starting mid-run
+        for i in range(STORM_FILLERS):
+            controls[8 + i] = [("cancel", 1 + i)]
+    with JobStore.memory() as store:
+        sim = SimScheduler(specs, Mode.FIKIT, pd, jobstore=store,
+                           fault_plan=FaultPlan(controls=controls))
+        rep = sim.run()
+        if cancel:
+            assert len(sim.cancelled) == STORM_FILLERS
+        return rep.jct(0)
+
+
+def main() -> Csv:
+    csvout = Csv(header=("name", "value", "derived"))
+    tmp = tempfile.mkdtemp(prefix="fikit_bench_recovery_")
+    per_job_us = {}
+    try:
+        for n in STORE_SIZES:
+            path = os.path.join(tmp, f"store_{n}.db")
+            _populate(path, n)
+            total_us = _time_recovery(path)
+            per_job_us[str(n)] = round(total_us / n, 2)
+            csvout.add(f"recovery_total_us_n{n}", round(total_us, 1),
+                       f"{per_job_us[str(n)]}us/job")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    smallest, largest = str(STORE_SIZES[0]), str(STORE_SIZES[-1])
+    growth = round(per_job_us[largest] / per_job_us[smallest], 3)
+
+    hi_plain = _storm_run(cancel=False)
+    hi_storm = _storm_run(cancel=True)
+    storm_ratio = round(hi_storm / hi_plain, 4)
+    csvout.add("cancel_storm_hi_jct_ratio", storm_ratio,
+               f"{1e3 * hi_storm:.2f}ms vs {1e3 * hi_plain:.2f}ms")
+    csvout.add("recovery_growth_vs_smallest", growth,
+               f"{smallest}->{largest} jobs")
+
+    csvout.emit("Ops plane: crash-recovery latency vs store size + "
+                "hi-JCT disturbance under a lo cancel storm")
+    csvout.json_payload = {
+        "smoke": SMOKE,
+        "store_sizes": list(STORE_SIZES),
+        "recovery_sweep": {
+            "per_job_us": per_job_us,
+            "growth_vs_smallest": growth,
+            "size_ratio": STORE_SIZES[-1] / STORE_SIZES[0],
+        },
+        "cancel_storm": {
+            "fillers": STORM_FILLERS,
+            "hi_jct_ms_no_storm": round(1e3 * hi_plain, 3),
+            "hi_jct_ms_storm": round(1e3 * hi_storm, 3),
+            "hi_jct_ratio_vs_no_storm": storm_ratio,
+        },
+    }
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ BENCHES = [
     ("placement", "benchmarks.bench_placement"),              # multi-device
     ("disciplines", "benchmarks.bench_disciplines"),          # sjf/edf
     ("interference", "benchmarks.bench_interference"),        # class-aware
+    ("recovery", "benchmarks.bench_recovery"),                # ops plane
     ("sharing_jct", "benchmarks.bench_sharing_jct"),          # Fig 16/17
     ("vs_exclusive", "benchmarks.bench_vs_exclusive"),        # Fig 18
     ("preemption", "benchmarks.bench_preemption"),            # Fig 19/20

@@ -32,6 +32,11 @@ Gate semantics per benchmark (tolerances in benchmarks/bench_gates.json):
   aware policy must keep filling, not give up), and the online-learned
   (memory, memory) coefficient climbs past its floor from a flat-1.0
   start.
+- recovery — ops-plane durability stays cheap: worst per-job crash
+  recovery latency under an absolute ceiling, per-job recovery cost
+  roughly flat as the store grows (no super-linear reload), and a
+  cancel storm against low-priority tasks disturbs the high-priority
+  JCT by at most the ratio ceiling.
 - overheads (nightly; wall clock) — the online measurement loop's
   marginal cost over the offline FIKIT sharing stage (median across
   archs of on-vs-off JCT delta) stays inside the paper's Fig-14 +/-5%
@@ -57,7 +62,7 @@ TOLERANCES = REPO / "benchmarks" / "bench_gates.json"
 
 #: the smoke benches every PR runs; "overheads" joins in the nightly run
 DEFAULT_REQUIRED = ("scheduler_micro", "placement", "disciplines",
-                    "interference")
+                    "interference", "recovery")
 ALL_GATED = DEFAULT_REQUIRED + ("overheads",)
 
 Check = Tuple[str, bool, str]          # (gate name, ok, detail)
@@ -146,34 +151,73 @@ def _check_overheads(p: dict, tol: dict) -> List[Check]:
     ]
 
 
+def _check_recovery(p: dict, tol: dict) -> List[Check]:
+    sweep = p["recovery_sweep"]
+    worst = max(sweep["per_job_us"].values())
+    growth = sweep["growth_vs_smallest"]
+    storm = p["cancel_storm"]["hi_jct_ratio_vs_no_storm"]
+    return [
+        ("per-job recovery latency ceiling",
+         worst <= tol["max_recovery_us_per_job"],
+         f"worst {worst}us/job <= {tol['max_recovery_us_per_job']}us"),
+        ("recovery cost flat in store size",
+         growth <= tol["max_recovery_growth"],
+         f"per-job growth {growth}x <= {tol['max_recovery_growth']}x over "
+         f"{sweep['size_ratio']:g}x stored jobs"),
+        ("hi-JCT disturbance under lo cancel storm",
+         storm <= tol["max_cancel_storm_hi_jct_ratio"],
+         f"{storm} <= {tol['max_cancel_storm_hi_jct_ratio']}"),
+    ]
+
+
 CHECKERS = {
     "scheduler_micro": _check_scheduler_micro,
     "placement": _check_placement,
     "disciplines": _check_disciplines,
     "interference": _check_interference,
     "overheads": _check_overheads,
+    "recovery": _check_recovery,
 }
 
 
-def run_gates(required) -> int:
-    tolerances = json.loads(TOLERANCES.read_text())
+def run_gates(required, repo: Path = None,
+              tolerances_path: Path = None) -> int:
+    """Evaluate every gate; ``repo``/``tolerances_path`` override the
+    module defaults so the unit tests can point at synthetic payloads."""
+    repo = REPO if repo is None else Path(repo)
+    tolerances_path = (TOLERANCES if tolerances_path is None
+                       else Path(tolerances_path))
+    tolerances = json.loads(tolerances_path.read_text())
     failures = 0
     for name in ALL_GATED:
-        path = REPO / f"BENCH_{name}.json"
+        path = repo / f"BENCH_{name}.json"
         if not path.exists():
             if name in required:
-                print(f"FAIL {name}: required but {path.name} missing "
-                      f"(bench crashed or never ran)")
+                print(f"FAIL {name}: required but {path.name} missing — "
+                      f"the bench crashed or never ran; re-run it with "
+                      f"`python -m benchmarks.run --only {name}`")
                 failures += 1
             else:
                 print(f"skip {name}: {path.name} not present")
             continue
-        payload = json.loads(path.read_text())
-        smoke = " (smoke)" if payload.get("smoke") else ""
+        try:
+            payload = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            print(f"FAIL {name}: {path.name} is not valid JSON "
+                  f"(line {e.lineno}: {e.msg}) — the bench was likely "
+                  f"interrupted mid-write; re-run it with "
+                  f"`python -m benchmarks.run --only {name}`")
+            failures += 1
+            continue
+        smoke = " (smoke)" if isinstance(payload, dict) \
+            and payload.get("smoke") else ""
         try:
             checks = CHECKERS[name](payload, tolerances[name])
-        except (KeyError, TypeError, ZeroDivisionError) as e:
-            print(f"FAIL {name}{smoke}: malformed payload ({e!r})")
+        except (KeyError, TypeError, AttributeError,
+                ZeroDivisionError) as e:
+            print(f"FAIL {name}{smoke}: {path.name} is malformed — "
+                  f"missing or mistyped field ({e!r}); re-run the bench "
+                  f"with `python -m benchmarks.run --only {name}`")
             failures += 1
             continue
         for gate, ok, detail in checks:
@@ -181,8 +225,11 @@ def run_gates(required) -> int:
             print(f"{status} {name}{smoke}: {gate} — {detail}")
             failures += 0 if ok else 1
     if failures:
-        print(f"\n{failures} bench gate(s) failed against "
-              f"{TOLERANCES.relative_to(REPO)}")
+        try:
+            tol_name = tolerances_path.relative_to(repo)
+        except ValueError:
+            tol_name = tolerances_path
+        print(f"\n{failures} bench gate(s) failed against {tol_name}")
         return 1
     print("\nall bench gates passed")
     return 0

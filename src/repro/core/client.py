@@ -29,6 +29,14 @@ from repro.core.task import KernelRequest, TaskKey
 _instances = itertools.count(1)
 
 
+def new_instance() -> int:
+    """Allocate a fresh, process-unique task instance id. The serving
+    layer allocates one AHEAD of ``HookClient.run(instance=...)`` so it
+    can map the instance to its durable job record (and target it with
+    lifecycle verbs) before the first engine event fires."""
+    return next(_instances)
+
+
 class Segment:
     """One dispatchable unit of a service: name + callable(state) -> state.
 
@@ -58,8 +66,8 @@ class HookClient:
         self.identify = identify   # off = "base" env (no kernel-ID hook)
 
     # ------------------------------------------------------------- sharing
-    def run(self, state, deadline: Optional[float] = None
-            ) -> Tuple[object, float]:
+    def run(self, state, deadline: Optional[float] = None,
+            instance: Optional[int] = None) -> Tuple[object, float]:
         """Execute one task (all segments) under the scheduler. Returns
         (final_state, wall JCT).
 
@@ -67,8 +75,12 @@ class HookClient:
         call; it is converted to the engine's absolute clock
         (``perf_counter``) and tagged onto every kernel request, where
         ``edf``-disciplined queue levels order by it. The caller judges a
-        miss by comparing the returned JCT against the budget."""
-        inst = next(_instances)
+        miss by comparing the returned JCT against the budget.
+
+        ``instance`` pins the task instance id (from ``new_instance()``)
+        so callers can target the run with lifecycle verbs; default is a
+        fresh id."""
+        inst = next(_instances) if instance is None else instance
         t_begin = time.perf_counter()
         abs_deadline = None if deadline is None else t_begin + deadline
         self.engine.task_begin(inst, self.key, self.priority)

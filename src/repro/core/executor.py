@@ -60,6 +60,13 @@ class ExecRecord:
     device: int = 0
 
 
+class JobCancelled(RuntimeError):
+    """Set on the Future of every request purged by an ops-plane cancel
+    (and returned for submits arriving after the cancel), so a client
+    blocked on ``fut.result()`` unblocks with a typed error instead of
+    hanging forever."""
+
+
 class WallClockEngine:
     def __init__(self, mode: Mode = Mode.FIKIT,
                  profiled: Optional[ProfiledData] = None,
@@ -70,7 +77,8 @@ class WallClockEngine:
                  queue_discipline="fifo",
                  steal: bool = True,
                  online=None,
-                 interference=None):
+                 interference=None,
+                 on_kernel_complete=None):
         """queue_discipline selects the per-level intra-device queue
         ordering ("fifo" default / "sjf" / "edf"); request deadlines for
         edf levels are absolute ``time.perf_counter`` seconds (the
@@ -88,7 +96,15 @@ class WallClockEngine:
         repro.core.interference.InterferenceModel) enables
         interference-aware gap filling (see ``SimScheduler``); None or a
         disabled model keeps decisions bit-identical to
-        interference-off."""
+        interference-off.
+
+        on_kernel_complete (callable ``fn(req, start, end)`` or None) is
+        the ops plane's write-ahead seam: called by the device thread
+        under the engine lock the moment a kernel finishes, BEFORE any
+        scheduling side-effect of the completion, so a durable record
+        (``repro.core.jobstore``) commits ahead of the boundary's
+        processing. Exceptions from the hook propagate (a store that
+        cannot record must not be silently dropped)."""
         self.mode = mode
         self.profiled = profiled or ProfiledData()
         self.devices = devices
@@ -130,9 +146,16 @@ class WallClockEngine:
                              daemon=True, name=f"fikit-device-{d}")
             for d in range(devices)]
         self._started = False
+        self._stopped = False
+        self._draining = False
+        self._cancelled_insts: set = set()
+        self._on_kernel_complete = on_kernel_complete
 
     # ---------------------------------------------------------------- device
     def start(self) -> "WallClockEngine":
+        if self._stopped:
+            raise RuntimeError("WallClockEngine cannot restart after "
+                               "stop(); build a fresh engine")
         if not self._started:
             self._started = True
             for t in self._threads:
@@ -140,6 +163,12 @@ class WallClockEngine:
         return self
 
     def stop(self) -> None:
+        """Stop the device threads and flush the final online epoch.
+        Idempotent: a second stop() is a no-op (in particular the online
+        flush commits exactly once)."""
+        if self._stopped:
+            return
+        self._stopped = True
         self._stop = True
         for q in self._device_qs:
             q.put(None)
@@ -149,6 +178,16 @@ class WallClockEngine:
         if self.online is not None:
             with self._lock:
                 self.online.commit()   # flush the partial final epoch
+
+    def _check_running(self, what: str) -> None:
+        """Fail fast — a submit into a never-started or stopped engine
+        would otherwise hang its client forever on an unserved queue."""
+        if not self._started:
+            raise RuntimeError(f"{what} before WallClockEngine.start() — "
+                               f"no device thread is serving the queue")
+        if self._stopped:
+            raise RuntimeError(f"{what} after WallClockEngine.stop() — "
+                               f"the device threads have exited")
 
     def __enter__(self):
         return self.start()
@@ -172,6 +211,10 @@ class WallClockEngine:
                 t1 = time.perf_counter()
                 fut.set_exception(e)
             with self._lock:
+                if self._on_kernel_complete is not None:
+                    # write-ahead: the durable record commits BEFORE the
+                    # boundary's scheduling side-effects
+                    self._on_kernel_complete(req, t0, t1)
                 self._futures.pop(req.uid, None)   # resolved: stop pinning it
                 self._records.append(ExecRecord(req, t0, t1, filler, device))
                 if filler:
@@ -181,6 +224,10 @@ class WallClockEngine:
 
     # ----------------------------------------------------------- task control
     def task_begin(self, instance: int, key: TaskKey, priority: int) -> None:
+        self._check_running(f"task_begin({instance})")
+        if self._draining:
+            raise RuntimeError("WallClockEngine is draining — "
+                               "not admitting new tasks")
         with self._lock:
             if self.placement.task_begin(instance, key, priority):
                 return
@@ -192,6 +239,7 @@ class WallClockEngine:
 
     def task_end(self, instance: int) -> None:
         with self._lock:
+            self._cancelled_insts.discard(instance)
             admitted = self.placement.task_end(instance)
             if admitted:
                 self._admitted.update(admitted)
@@ -201,12 +249,69 @@ class WallClockEngine:
     def submit(self, req: KernelRequest) -> Future:
         """Hook-client -> scheduler message. Returns a Future of
         (output, start, end)."""
+        self._check_running(f"submit({req.task_instance}:{req.seq_index})")
         fut: Future = Future()
         req.submit_time = time.perf_counter()
         with self._lock:
+            if req.task_instance in self._cancelled_insts:
+                # the task was cancelled under this client's feet:
+                # fail fast instead of queueing work that can never run
+                fut.set_exception(JobCancelled(
+                    f"task {req.task_instance} was cancelled"))
+                return fut
             self._futures[req.uid] = fut
             self.placement.submit(req)
         return fut
+
+    # ------------------------------------------------------- lifecycle verbs
+    def cancel(self, instance: int) -> int:
+        """Cancel a task: purge its queued requests (their Futures fail
+        with ``JobCancelled`` so blocked clients unblock), let in-flight
+        kernels finish. Returns the number of purged requests."""
+        with self._lock:
+            purged, admitted = self.placement.cancel(instance)
+            self._cancelled_insts.add(instance)
+            for r in purged:
+                fut = self._futures.pop(r.uid, None)
+                if fut is not None:
+                    fut.set_exception(JobCancelled(
+                        f"task {instance} cancelled: kernel "
+                        f"{r.seq_index} purged before launch"))
+            if admitted:                       # EXCLUSIVE: next waiter
+                self._admitted.update(admitted)
+                self._admit_cond.notify_all()
+            return len(purged)
+
+    def pause(self, instance: int) -> bool:
+        """Pause a task at its next kernel boundary (True if it took
+        effect immediately). Its clients' pending Futures stay unresolved
+        — a blocked client simply waits out the pause."""
+        with self._lock:
+            return self.placement.pause(instance)
+
+    def resume(self, instance: int, device: Optional[int] = None) -> int:
+        """Re-admit a paused task (see ``PlacementLayer.resume``)."""
+        with self._lock:
+            return self.placement.resume(instance, device)
+
+    def drain(self, timeout: float = 10.0) -> bool:
+        """Stop admitting new tasks, wait for every live (non-paused)
+        task to finish its in-flight and queued work, then flush the
+        online epoch. Returns True when fully drained within
+        ``timeout`` seconds; the engine is still running either way
+        (call ``stop()`` to shut it down)."""
+        self._draining = True
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                live = len(self.placement._device_of)
+            if live == 0 or time.monotonic() >= deadline:
+                break
+            time.sleep(0.005)
+        if self.online is not None:
+            with self._lock:
+                self.online.commit()
+        return live == 0
 
     def _device_launch(self, device: int, req: KernelRequest,
                        filler: bool) -> None:

@@ -1,0 +1,447 @@
+"""Durable ops plane: a write-ahead job store for the serving path.
+
+FIKIT's scheduling state (priority queues, holder, gaps, online-learned
+SK/SG) lives in process memory; before this module existed a crash lost
+every queued request and every learned profile, and an operator had no way
+to cancel, pause, or drain a task. ``JobStore`` is the durable record the
+engines write THROUGH so a killed process can restart and resume:
+
+- **jobs** — one row per submitted task instance: its ``TaskKey``,
+  priority, deadline, total kernel count, an optional serialized kernel
+  spec (the simulator's replayable trace; wall-clock payloads are
+  callables and re-run from the service definition instead), and a
+  lifecycle state (``submitted → running → done`` with ``paused`` /
+  ``cancelled`` branches).
+- **completions** — one row per finished kernel ``(job, seq)``. This is
+  the write-ahead commit point of a kernel boundary: the row is durable
+  BEFORE any scheduling side-effect of the completion, so a crash at any
+  boundary loses nothing and recovery re-submits exactly the suffix
+  ``seq >= watermark``. The primary key makes a duplicated completion a
+  structural error (``DuplicateCompletion``), and the contiguity check
+  makes a stream-order violation one too (``StreamOrderViolation``) —
+  the conservation proof the kill-and-restart sweep rides on.
+- **profiles** — the latest snapshot of the (possibly online-refined)
+  ``ProfiledData``, in ``repro.core.profile_store`` JSON form including
+  EMA counters and interference coefficients, so recovery resumes
+  scheduling with the learned SK/SG intact.
+- **controls** — a queue of operator verbs (``cancel``/``pause``/
+  ``resume``/``drain``) written by the CLI (``repro.launch.serve``) and
+  consumed by a live serving process sharing the store file.
+
+Backends: a file path opens SQLite in WAL mode with per-statement
+durability (autocommit); ``JobStore.memory()`` opens ``:memory:`` — same
+schema and API, nothing touches disk — for tests and for engines that
+want conservation checking without persistence. All methods are
+thread-safe (one internal lock; SQLite connection shared).
+
+The standing contract: a store attached to an engine only OBSERVES —
+recording submissions and completions never changes a scheduling
+decision, pinned by randomized store-attached-vs-absent differential
+cases in ``tests/test_recovery.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import threading
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.profile_store import (_kid_from_json, _kid_to_json,
+                                      profiles_from_obj, profiles_to_obj)
+from repro.core.profiler import ProfiledData
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+# ---------------------------------------------------------------- lifecycle
+#: job lifecycle states
+SUBMITTED = "submitted"
+RUNNING = "running"
+PAUSED = "paused"
+CANCELLED = "cancelled"
+DONE = "done"
+STATES = (SUBMITTED, RUNNING, PAUSED, CANCELLED, DONE)
+#: states a job can never leave
+TERMINAL_STATES = (CANCELLED, DONE)
+#: operator verbs accepted by the control queue
+CONTROL_VERBS = ("cancel", "pause", "resume", "drain")
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS jobs (
+    job_id       INTEGER PRIMARY KEY,
+    process      TEXT NOT NULL,
+    args         TEXT NOT NULL,
+    priority     INTEGER NOT NULL,
+    n_kernels    INTEGER NOT NULL,
+    deadline     REAL,
+    spec         TEXT,
+    state        TEXT NOT NULL,
+    submitted_at REAL,
+    updated_at   REAL
+);
+CREATE TABLE IF NOT EXISTS completions (
+    job_id       INTEGER NOT NULL,
+    seq          INTEGER NOT NULL,
+    completed_at REAL,
+    PRIMARY KEY (job_id, seq)
+) WITHOUT ROWID;
+CREATE TABLE IF NOT EXISTS profiles (
+    id         INTEGER PRIMARY KEY CHECK (id = 1),
+    payload    TEXT NOT NULL,
+    updated_at REAL
+);
+CREATE TABLE IF NOT EXISTS controls (
+    ctl_id     INTEGER PRIMARY KEY AUTOINCREMENT,
+    verb       TEXT NOT NULL,
+    job_id     INTEGER,
+    arg        TEXT,
+    consumed   INTEGER NOT NULL DEFAULT 0,
+    created_at REAL
+);
+CREATE TABLE IF NOT EXISTS meta (
+    k TEXT PRIMARY KEY,
+    v TEXT
+);
+"""
+
+SCHEMA_VERSION = "1"
+
+
+class JobStoreError(RuntimeError):
+    """Base class for job-store integrity errors."""
+
+
+class UnknownJob(JobStoreError):
+    pass
+
+
+class DuplicateCompletion(JobStoreError):
+    """The same (job, seq) kernel completion was recorded twice — a
+    request would have executed twice after recovery."""
+
+
+class StreamOrderViolation(JobStoreError):
+    """A completion arrived out of stream order — kernel ``seq`` finished
+    before ``seq - 1`` did, which the serial-device + stream-order
+    invariants make impossible unless an engine is broken."""
+
+
+@dataclass
+class JobRecord:
+    """One job row, hydrated (``completed`` is the stream watermark: the
+    number of contiguously completed kernels)."""
+    job_id: int
+    key: TaskKey
+    priority: int
+    n_kernels: int
+    completed: int
+    state: str
+    deadline: Optional[float] = None
+    spec: Optional[dict] = None
+    submitted_at: float = 0.0
+
+    @property
+    def remaining(self) -> int:
+        return self.n_kernels - self.completed
+
+    @property
+    def incomplete(self) -> bool:
+        return self.state not in TERMINAL_STATES
+
+
+# ------------------------------------------------------- spec serialization
+def spec_to_obj(spec: TaskSpec) -> dict:
+    """Serialize a simulator ``TaskSpec``'s replayable parts (kernel
+    trace, client model). Key/priority/deadline live in job columns."""
+    return {
+        "kernels": [[_kid_to_json(k.kid), k.duration, k.gap_after, k.kclass]
+                    for k in spec.kernels],
+        "max_inflight": spec.max_inflight,
+        "arrival": spec.arrival,
+    }
+
+
+def spec_from_record(rec: JobRecord) -> TaskSpec:
+    """Rebuild the REMAINING TaskSpec for an incomplete job: the kernel
+    suffix from the completion watermark on, arriving immediately. The
+    caller pairs it with ``rec.completed`` as the seq base so recovered
+    completions keep their original stream indices."""
+    if rec.spec is None:
+        raise JobStoreError(f"job {rec.job_id} has no replayable spec "
+                            f"(wall-clock jobs re-run from the service)")
+    kernels = [TraceKernel(_kid_from_json(kj), dur, gap, kclass=kc)
+               for kj, dur, gap, kc in rec.spec["kernels"]]
+    return TaskSpec(rec.key, rec.priority, kernels[rec.completed:],
+                    arrival=0.0, max_inflight=rec.spec["max_inflight"],
+                    deadline=rec.deadline)
+
+
+class JobStore:
+    """SQLite-backed write-ahead record of jobs, completions, learned
+    profiles, and operator control requests. See module docstring."""
+
+    def __init__(self, path: str = ":memory:"):
+        self.path = path
+        self._lock = threading.RLock()
+        # autocommit (isolation_level=None): every INSERT is its own
+        # durable transaction — the write-ahead property the recovery
+        # sweep depends on
+        self._db = sqlite3.connect(path, isolation_level=None,
+                                   check_same_thread=False)
+        self._db.executescript(_SCHEMA)
+        if path != ":memory:":
+            # WAL keeps concurrent CLI readers (status verb) from
+            # blocking the serving process's boundary writes
+            self._db.execute("PRAGMA journal_mode=WAL")
+            self._db.execute("PRAGMA synchronous=NORMAL")
+        self._db.execute(
+            "INSERT OR IGNORE INTO meta (k, v) VALUES ('schema', ?)",
+            (SCHEMA_VERSION,))
+
+    @classmethod
+    def memory(cls) -> "JobStore":
+        """In-memory backend: same schema/API, no disk, no durability —
+        for tests and conservation-checking without persistence."""
+        return cls(":memory:")
+
+    def close(self) -> None:
+        with self._lock:
+            self._db.close()
+
+    def __enter__(self) -> "JobStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- writes
+    def record_submit(self, job_id: Optional[int], key: TaskKey,
+                      priority: int, *, n_kernels: int,
+                      spec: Optional[dict] = None,
+                      deadline: Optional[float] = None,
+                      state: str = RUNNING,
+                      at: Optional[float] = None) -> int:
+        """Record a job submission; returns its id. ``job_id=None``
+        allocates the next id. An existing row (a recovery re-submission)
+        is NOT overwritten — its original spec, kernel count, and
+        completions survive; only its state advances to ``state``."""
+        now = time.time() if at is None else at
+        with self._lock:
+            if job_id is not None:
+                cur = self._db.execute(
+                    "SELECT 1 FROM jobs WHERE job_id = ?", (job_id,))
+                if cur.fetchone() is not None:
+                    self._db.execute(
+                        "UPDATE jobs SET state = ?, updated_at = ? "
+                        "WHERE job_id = ?", (state, now, job_id))
+                    return job_id
+            cur = self._db.execute(
+                "INSERT INTO jobs (job_id, process, args, priority, "
+                "n_kernels, deadline, spec, state, submitted_at, "
+                "updated_at) VALUES (?, ?, ?, ?, ?, ?, ?, ?, ?, ?)",
+                (job_id, key.process, json.dumps(list(key.args)), priority,
+                 n_kernels, deadline,
+                 None if spec is None else json.dumps(spec),
+                 state, now, now))
+            return job_id if job_id is not None else cur.lastrowid
+
+    def record_state(self, job_id: int, state: str,
+                     at: Optional[float] = None) -> None:
+        if state not in STATES:
+            raise ValueError(f"unknown job state {state!r} "
+                             f"(known: {list(STATES)})")
+        now = time.time() if at is None else at
+        with self._lock:
+            cur = self._db.execute(
+                "UPDATE jobs SET state = ?, updated_at = ? "
+                "WHERE job_id = ?", (state, now, job_id))
+            if cur.rowcount == 0:
+                raise UnknownJob(f"job {job_id} not in store")
+
+    def record_completion(self, job_id: int, seq: int,
+                          at: Optional[float] = None) -> int:
+        """Durably record kernel ``seq`` of ``job_id`` as completed; the
+        write-ahead commit of a kernel boundary. Enforces stream
+        contiguity (``seq`` must be the current watermark) and raises
+        ``DuplicateCompletion`` / ``StreamOrderViolation`` otherwise.
+        Returns the new watermark."""
+        now = time.time() if at is None else at
+        with self._lock:
+            wm = self._watermark(job_id)
+            if seq < wm:
+                raise DuplicateCompletion(
+                    f"job {job_id} kernel {seq} already recorded "
+                    f"(watermark {wm}) — a request would run twice")
+            if seq > wm:
+                raise StreamOrderViolation(
+                    f"job {job_id} kernel {seq} completed before "
+                    f"kernel {wm} — stream order broken")
+            try:
+                self._db.execute(
+                    "INSERT INTO completions (job_id, seq, completed_at) "
+                    "VALUES (?, ?, ?)", (job_id, seq, now))
+            except sqlite3.IntegrityError as e:  # pragma: no cover
+                raise DuplicateCompletion(
+                    f"job {job_id} kernel {seq} already recorded") from e
+            return wm + 1
+
+    def reset_completions(self, job_id: int) -> None:
+        """Forget a job's completions (wall-clock recovery re-runs an
+        incomplete invocation from scratch — request-level at-least-once;
+        the simulator's kernel-exact path never needs this)."""
+        with self._lock:
+            self._db.execute("DELETE FROM completions WHERE job_id = ?",
+                             (job_id,))
+
+    # --------------------------------------------------------------- reads
+    def _watermark(self, job_id: int) -> int:
+        row = self._db.execute(
+            "SELECT MAX(seq) FROM completions WHERE job_id = ?",
+            (job_id,)).fetchone()
+        return 0 if row[0] is None else row[0] + 1
+
+    def _hydrate(self, row) -> JobRecord:
+        (job_id, process, args, priority, n_kernels, deadline, spec,
+         state, submitted_at) = row
+        return JobRecord(
+            job_id=job_id,
+            key=TaskKey(process, tuple(json.loads(args))),
+            priority=priority, n_kernels=n_kernels,
+            completed=self._watermark(job_id), state=state,
+            deadline=deadline,
+            spec=None if spec is None else json.loads(spec),
+            submitted_at=submitted_at or 0.0)
+
+    _JOB_COLS = ("job_id, process, args, priority, n_kernels, deadline, "
+                 "spec, state, submitted_at")
+
+    def job(self, job_id: int) -> JobRecord:
+        with self._lock:
+            row = self._db.execute(
+                f"SELECT {self._JOB_COLS} FROM jobs WHERE job_id = ?",
+                (job_id,)).fetchone()
+            if row is None:
+                raise UnknownJob(f"job {job_id} not in store")
+            return self._hydrate(row)
+
+    def jobs(self, states: Optional[Sequence[str]] = None
+             ) -> List[JobRecord]:
+        with self._lock:
+            rows = self._db.execute(
+                f"SELECT {self._JOB_COLS} FROM jobs "
+                f"ORDER BY job_id").fetchall()
+            recs = [self._hydrate(r) for r in rows]
+        if states is not None:
+            recs = [r for r in recs if r.state in states]
+        return recs
+
+    def incomplete_jobs(self, include_paused: bool = False
+                        ) -> List[JobRecord]:
+        """Jobs a restart must resume: not done, not cancelled. Paused
+        jobs stay paused across a restart (an explicit ``resume`` verb
+        re-admits them) unless ``include_paused``."""
+        skip = set(TERMINAL_STATES)
+        if not include_paused:
+            skip.add(PAUSED)
+        return [r for r in self.jobs() if r.state not in skip]
+
+    def completions(self, job_id: int) -> List[int]:
+        with self._lock:
+            rows = self._db.execute(
+                "SELECT seq FROM completions WHERE job_id = ? "
+                "ORDER BY seq", (job_id,)).fetchall()
+        return [r[0] for r in rows]
+
+    def watermark(self, job_id: int) -> int:
+        with self._lock:
+            return self._watermark(job_id)
+
+    # ------------------------------------------------------------ recovery
+    def recovery_plan(self, include_paused: bool = False
+                      ) -> Tuple[List[TaskSpec], List[int], List[int]]:
+        """Build the simulator recovery inputs: the remaining ``TaskSpec``
+        suffix per incomplete job, the job ids to keep recording under,
+        and the per-job seq bases (completion watermarks). Jobs without a
+        replayable spec (wall-clock invocations) are skipped — the serving
+        layer re-runs those from the service definition."""
+        specs, ids, bases = [], [], []
+        for rec in self.incomplete_jobs(include_paused=include_paused):
+            if rec.spec is None or rec.remaining <= 0:
+                continue
+            specs.append(spec_from_record(rec))
+            ids.append(rec.job_id)
+            bases.append(rec.completed)
+        return specs, ids, bases
+
+    # ------------------------------------------------------------ profiles
+    def snapshot_profiles(self, data: ProfiledData,
+                          at: Optional[float] = None) -> None:
+        """Checkpoint the (possibly online-refined) profile state. One
+        snapshot row, overwritten — the store keeps the LATEST learned
+        SK/SG, which is what recovery resumes with."""
+        now = time.time() if at is None else at
+        payload = json.dumps(profiles_to_obj(data))
+        with self._lock:
+            self._db.execute(
+                "INSERT INTO profiles (id, payload, updated_at) "
+                "VALUES (1, ?, ?) ON CONFLICT (id) DO UPDATE SET "
+                "payload = excluded.payload, "
+                "updated_at = excluded.updated_at", (payload, now))
+
+    def load_profiles(self, cold_start: bool = False
+                      ) -> Optional[ProfiledData]:
+        """The latest profile snapshot, or None if never checkpointed."""
+        with self._lock:
+            row = self._db.execute(
+                "SELECT payload FROM profiles WHERE id = 1").fetchone()
+        if row is None:
+            return None
+        return profiles_from_obj(json.loads(row[0]), cold_start=cold_start)
+
+    # ------------------------------------------------------------ controls
+    def request_control(self, verb: str, job_id: Optional[int] = None,
+                        arg: Optional[str] = None,
+                        at: Optional[float] = None) -> int:
+        """Enqueue an operator verb for the serving process sharing this
+        store (the CLI's side of the ops plane)."""
+        if verb not in CONTROL_VERBS:
+            raise ValueError(f"unknown control verb {verb!r} "
+                             f"(known: {list(CONTROL_VERBS)})")
+        now = time.time() if at is None else at
+        with self._lock:
+            cur = self._db.execute(
+                "INSERT INTO controls (verb, job_id, arg, created_at) "
+                "VALUES (?, ?, ?, ?)", (verb, job_id, arg, now))
+            return cur.lastrowid
+
+    def pop_controls(self) -> List[Tuple[str, Optional[int], Optional[str]]]:
+        """Consume all pending control requests in submission order."""
+        with self._lock:
+            rows = self._db.execute(
+                "SELECT ctl_id, verb, job_id, arg FROM controls "
+                "WHERE consumed = 0 ORDER BY ctl_id").fetchall()
+            if rows:
+                self._db.execute(
+                    "UPDATE controls SET consumed = 1 WHERE ctl_id <= ? "
+                    "AND consumed = 0", (rows[-1][0],))
+        return [(v, j, a) for _, v, j, a in rows]
+
+    # ---------------------------------------------------------- durability
+    def checkpoint(self) -> None:
+        """Fold the WAL into the main database file (drain/shutdown)."""
+        with self._lock:
+            if self.path != ":memory:":
+                self._db.execute("PRAGMA wal_checkpoint(TRUNCATE)")
+
+
+def coerce_store(spec) -> Optional[JobStore]:
+    """Normalize an engine's ``jobstore=`` argument: None -> None, a path
+    string -> opened file store, a ``JobStore`` -> itself."""
+    if spec is None:
+        return None
+    if isinstance(spec, JobStore):
+        return spec
+    if isinstance(spec, (str, os.PathLike)):
+        return JobStore(os.fspath(spec))
+    raise TypeError(f"jobstore= expects None/path/JobStore, got {spec!r}")

@@ -25,6 +25,13 @@ per-device isolation):
   immediately. Only tasks with ZERO kernels in flight are candidates, so
   one task's kernels never run on two devices at once.
 
+- It is the ops plane's lifecycle seam (``cancel`` / ``pause`` /
+  ``resume``): all three verbs act at kernel boundaries only (a pause
+  with kernels in flight defers to the task's next boundary), ride the
+  same ``detach_task``/``attach_task`` mechanism as stealing, and a
+  resume is a fresh placement decision — which is how a paused task
+  migrates to a different device.
+
 K=1 is a pure pass-through: the single discipline answer is device 0,
 stealing is structurally impossible, and the layer adds no trace events —
 so a K=1 ``PlacementLayer`` is decision-trace-identical to a bare
@@ -209,6 +216,11 @@ class PlacementLayer:
         self.steal_count = 0
         self.spurious_kernel_completions = 0
         self.spurious_task_ends = 0
+        # ops-plane lifecycle state (cancel/pause/resume — all applied at
+        # kernel boundaries only; kernels are non-preemptible)
+        self._paused: Dict[int, tuple] = {}      # inst -> (ActiveTask, reqs)
+        self._pause_pending: Set[int] = set()    # awaiting in-flight drain
+        self._cancelled: Set[int] = set()        # tolerate late task_end
 
     # ------------------------------------------------------------- lifecycle
     def task_begin(self, instance: int, key: TaskKey, priority: int,
@@ -228,6 +240,12 @@ class PlacementLayer:
                                            arrival=arrival)
 
     def task_end(self, instance: int) -> List[int]:
+        if instance in self._cancelled:
+            # the client's own retirement arriving after an ops-plane
+            # cancel already retired the task — expected, not spurious
+            self._cancelled.discard(instance)
+            return []
+        self._pause_pending.discard(instance)
         d = self._device_of.get(instance)
         if d is None:
             # duplicate/late retirement for a purged instance: tolerate
@@ -247,6 +265,12 @@ class PlacementLayer:
 
     # --------------------------------------------------------------- routing
     def submit(self, req: KernelRequest) -> bool:
+        paused = self._paused.get(req.task_instance)
+        if paused is not None:
+            # a paused task's client keeps issuing; buffer with the
+            # detached backlog and replay in stream order on resume
+            paused[1].append(req)
+            return False
         d = self._device_of[req.task_instance]
         if self.devices > 1:
             # load/park bookkeeping feeds device election and steal
@@ -306,6 +330,11 @@ class PlacementLayer:
         self.policies[d].kernel_end(instance, kernel_id, last=last,
                                     actual_gap=actual_gap)
         self._maybe_purge(instance)
+        if (instance in self._pause_pending
+                and not self._inflight.get(instance, 0)):
+            # a pause requested mid-kernel lands at THIS boundary: the
+            # task's last in-flight kernel just finished
+            self._do_pause(instance)
         if self.steal_enabled:
             # this completion may have made the task fully parked (zero in
             # flight, requests queued) — the moment it becomes stealable
@@ -323,6 +352,126 @@ class PlacementLayer:
                 parked.pop(req.uid, None)
             self._stealable.discard(inst)       # a kernel is now in flight
         self._launch_hook(device, req, filler)
+
+    # ------------------------------------------------------ lifecycle verbs
+    def cancel(self, instance: int):
+        """Cancel ``instance`` at a kernel boundary: purge its parked
+        requests, retire it, but let in-flight kernels run to completion
+        (kernels are non-preemptible — their completions are tolerated
+        through the existing late-completion machinery). Returns
+        ``(purged, admitted)``: the purged requests in stream order and
+        any instances newly admitted by EXCLUSIVE serialization."""
+        entry = self._paused.pop(instance, None)
+        if entry is not None:
+            # cancelling a paused task: its backlog is already detached
+            self._cancelled.add(instance)
+            return list(entry[1]), []
+        self._pause_pending.discard(instance)
+        d = self._device_of.get(instance)
+        if d is None:
+            if instance in self._retired or instance in self._cancelled:
+                # cancel raced completion (or a second cancel): the task
+                # already left the layer — terminal no-op, nothing purged
+                return [], []
+            raise ValueError(f"cannot cancel unknown instance {instance}")
+        if self.online is not None:
+            self.online.task_gone(instance)
+        parked = (list(self._parked[instance].values())
+                  if self.steal_enabled and instance in self._parked
+                  else None)
+        purged, admitted = self.policies[d].cancel_task(instance, parked)
+        self._cancelled.add(instance)
+        self._instances[d].discard(instance)
+        self._retired.add(instance)
+        self._stealable.discard(instance)
+        if self.steal_enabled and instance in self._parked:
+            self._parked[instance].clear()
+        if self._needs_load:
+            self._load[d] = max(0.0, self._load[d]
+                                - sum(self._predict(r) for r in purged))
+        self._maybe_purge(instance)
+        self._maybe_steal()
+        return purged, admitted
+
+    def pause(self, instance: int) -> bool:
+        """Pause ``instance``: detach it (and its parked backlog) from
+        its device. With kernels in flight the pause DEFERS to the next
+        kernel boundary of the task (returns False); otherwise it takes
+        effect now (returns True). Idempotent. EXCLUSIVE mode has no
+        pause — admission serialization would deadlock behind a paused
+        admitted task."""
+        if self.mode is Mode.EXCLUSIVE:
+            raise ValueError("pause/resume are not supported in "
+                             "EXCLUSIVE mode")
+        if instance in self._paused:
+            return True
+        if self._device_of.get(instance) is None:
+            raise ValueError(f"cannot pause unknown instance {instance}")
+        if self._inflight.get(instance, 0) > 0:
+            self._pause_pending.add(instance)
+            return False
+        self._do_pause(instance)
+        return True
+
+    def _do_pause(self, instance: int) -> None:
+        """Take the pause at a kernel boundary: detach the task record
+        and its parked requests out of the device's policy, park both in
+        the layer (the engine checkpoints the store; the layer keeps the
+        live objects), free the device."""
+        d = self._device_of.pop(instance)
+        self._pause_pending.discard(instance)
+        if self.online is not None:
+            # a resumed task may land on a different device/timeline: its
+            # launch-to-launch gap anchor would be meaningless
+            self.online.task_gone(instance)
+        parked = (list(self._parked[instance].values())
+                  if self.steal_enabled and instance in self._parked
+                  else None)
+        at, reqs = self.policies[d].pause_task(instance, parked)
+        self._instances[d].discard(instance)
+        self._stealable.discard(instance)
+        self._inflight.pop(instance, None)
+        self._parked.pop(instance, None)
+        self._key_of.pop(instance, None)
+        if self._needs_load:
+            self._load[d] = max(0.0, self._load[d]
+                                - sum(self._predict(r) for r in reqs))
+        self._paused[instance] = (at, list(reqs))
+        self._maybe_steal()                     # the device may be idle now
+
+    def resume(self, instance: int, device: Optional[int] = None) -> int:
+        """Re-admit a paused task, on ``device`` or (by default) wherever
+        the placement discipline elects NOW — a resumed task is a fresh
+        placement decision, which is how a pause/resume pair migrates a
+        task off a hot device. Replays the detached backlog in stream
+        order. Returns the hosting device."""
+        entry = self._paused.pop(instance, None)
+        if entry is None:
+            if instance in self._pause_pending:
+                # resume raced a deferred pause: the pause never took
+                # effect, the task never left its device
+                self._pause_pending.discard(instance)
+                return self._device_of[instance]
+            raise ValueError(f"instance {instance} is not paused")
+        at, reqs = entry
+        if device is None:
+            device = self._discipline(self, at.instance, at.key,
+                                      at.priority, at.arrival)
+        if not 0 <= device < self.devices:
+            raise ValueError(f"resume of {instance} onto device {device} "
+                             f"of {self.devices}")
+        self._device_of[instance] = device
+        self._key_of[instance] = at.key
+        self._instances[device].add(instance)
+        self._inflight[instance] = 0
+        self.policies[device].attach_task(at)
+        for r in reqs:                 # full submit(): load/park/steal
+            self.submit(r)             # bookkeeping comes back with it
+        return device
+
+    @property
+    def paused(self) -> Set[int]:
+        return set(self._paused)
 
     # -------------------------------------------------------------- stealing
     def _update_stealable(self, instance: int) -> None:

@@ -68,6 +68,9 @@ Every decision appends one tuple to ``self.trace``:
     ("gap_close", instance)
     ("detach", instance)            task migrated OUT (placement steal)
     ("attach", instance)            task migrated IN  (placement steal)
+    ("cancel", instance)            task cancelled (ops-plane verb);
+                                    always followed by the ("end", ...)
+                                    retirement events
 
 The ``detach``/``attach`` pair is the multi-device placement layer's
 migration seam (``repro.core.placement.PlacementLayer``): a fully-parked
@@ -362,6 +365,56 @@ class FikitPolicy:
         if self._trace_on:
             self.trace.append(("detach", instance))
         self._note_holder()
+        return at, reqs
+
+    # ------------------------------------------------------------ lifecycle
+    def cancel_task(self, instance: int,
+                    reqs: Optional[List[KernelRequest]] = None,
+                    ) -> Tuple[List[KernelRequest], List[int]]:
+        """Cancel ``instance`` at a kernel boundary: purge its parked
+        requests from the priority queues (never a launched kernel —
+        kernels are non-preemptible, so anything already on the device
+        runs to completion), then retire it with full ``task_end``
+        semantics: holder re-election, release of the new holder's
+        backlog, EXCLUSIVE admission of the next waiter.
+
+        ``reqs`` is the task's parked requests when the caller already
+        tracks them (the placement layer does); omitted, they are
+        collected by a queue scan. Returns ``(purged, admitted)`` — the
+        purged requests in stream order (so callers can fail their
+        futures / account conservation) and the instances newly admitted
+        by EXCLUSIVE serialization."""
+        if reqs is None:
+            reqs = [r for r in self.queues if r.task_instance == instance]
+        reqs = sorted(reqs, key=lambda r: r.seq_index)
+        with self.queues.lock():
+            for r in reqs:
+                self.queues.remove(r)
+        if self.mode is Mode.EXCLUSIVE and instance in self._excl_waiting:
+            # a deferred task can be cancelled before it was ever admitted
+            self._excl_waiting.remove(instance)
+        if self._trace_on:
+            self.trace.append(("cancel", instance))
+        admitted = self.task_end(instance)
+        return reqs, admitted
+
+    def pause_task(self, instance: int,
+                   reqs: Optional[List[KernelRequest]] = None,
+                   ) -> Tuple[ActiveTask, List[KernelRequest]]:
+        """``detach_task`` with holder-release semantics. A placement
+        steal only ever detaches a fully-parked non-holder, but a pause
+        may remove the CURRENT holder (a holder between kernels holds no
+        device slot) — in that case the open gap dies with it and the
+        next holder's backlog releases exactly as on retirement, so the
+        device never deadlocks waiting on a paused task's submits."""
+        was_holder = self.holder() == instance
+        at, reqs = self.detach_task(instance, reqs)
+        if was_holder and self.mode in QUEUED_MODES:
+            self.gap_open = False
+            self.gap_remaining = 0.0
+            self.gap_kinfo = None
+            self._gap_class = None
+            self._release_new_holder()
         return at, reqs
 
     def attach_task(self, at: ActiveTask) -> None:

@@ -43,7 +43,11 @@ def _detuple(x):
     return tuple(x) if isinstance(x, list) else x
 
 
-def save_profiles(path: str, data: ProfiledData) -> None:
+def profiles_to_obj(data: ProfiledData):
+    """Serialize a ``ProfiledData`` to the store's JSON-compatible object
+    (a list, or a dict envelope when an interference model is attached).
+    ``save_profiles`` writes this to a file; ``repro.core.jobstore`` embeds
+    it in the durable job store's profile-snapshot column."""
     out = []
     for key, prof in data._by_key.items():
         entry = {
@@ -77,20 +81,20 @@ def save_profiles(path: str, data: ProfiledData) -> None:
                    "coeffs": [[h, f, v]
                               for (h, f), v in model.snapshot().items()],
                }}
+    return out
+
+
+def save_profiles(path: str, data: ProfiledData) -> None:
+    out = profiles_to_obj(data)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(out, f)
 
 
-def load_profiles(path: str, cold_start: bool = False) -> ProfiledData:
-    """Load a profile store. ``cold_start=True`` builds the returned
-    ``ProfiledData`` with the provisional-duration estimator enabled (the
-    online serving configuration)."""
+def profiles_from_obj(raw, cold_start: bool = False) -> ProfiledData:
+    """Rebuild a ``ProfiledData`` from ``profiles_to_obj`` output (or any
+    legacy top-level-list store payload)."""
     data = ProfiledData(cold_start=cold_start)
-    if not os.path.exists(path):
-        return data
-    with open(path) as f:
-        raw = json.load(f)
     entries = raw
     if isinstance(raw, dict):
         entries = raw["profiles"]
@@ -113,3 +117,14 @@ def load_profiles(path: str, cold_start: bool = False) -> ProfiledData:
                        for k, c in entry.get("class", [])}
         data.load(prof)
     return data
+
+
+def load_profiles(path: str, cold_start: bool = False) -> ProfiledData:
+    """Load a profile store. ``cold_start=True`` builds the returned
+    ``ProfiledData`` with the provisional-duration estimator enabled (the
+    online serving configuration)."""
+    if not os.path.exists(path):
+        return ProfiledData(cold_start=cold_start)
+    with open(path) as f:
+        raw = json.load(f)
+    return profiles_from_obj(raw, cold_start=cold_start)

@@ -37,8 +37,10 @@ import random as _random
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+from repro.core import jobstore as _js
 from repro.core.fikit import EPSILON
 from repro.core.interference import COMPUTE_BOUND, InterferenceModel
+from repro.core.jobstore import coerce_store, spec_to_obj
 from repro.core.online import OnlineConfig, OnlineMeasurement
 from repro.core.placement import DisciplineSpec, PlacementLayer
 from repro.core.policy import Mode
@@ -131,7 +133,11 @@ class SimScheduler:
                  steal: bool = True,
                  online=None,
                  interference=None,
-                 interference_env=None):
+                 interference_env=None,
+                 jobstore=None,
+                 fault_plan=None,
+                 job_ids=None,
+                 seq_base=None):
         """measurement_overhead: multiplier on kernel durations (the paper's
         20-80% measuring-stage slowdown), used to simulate the measurement
         phase. jitter: multiplicative gaussian noise on true durations/gaps
@@ -161,7 +167,21 @@ class SimScheduler:
         sharing the device with a gap holder runs slowdown x longer,
         keyed by the GROUND-TRUTH classes from TraceKernel.kclass —
         independent of what the scheduler believes, so a wrong model
-        visibly hurts JCT."""
+        visibly hurts JCT.
+
+        jobstore (None / path / repro.core.jobstore.JobStore) attaches
+        the durable ops plane: submissions, per-kernel completion
+        watermarks (written at each kernel boundary BEFORE the boundary
+        is otherwise processed — the write-ahead contract crash recovery
+        rides on), terminal states, and profile snapshots. The store
+        only OBSERVES: decisions are bit-identical with or without one.
+        fault_plan (repro.core.faults.FaultPlan) scripts lifecycle verbs
+        and/or a process crash at global kernel-boundary indices; an
+        inert plan is decision-trace-identical to None. job_ids/seq_base
+        are the recovery inputs (see ``SimScheduler.recover``): the
+        persistent store ids to keep recording under and each task's
+        completion watermark, so a resumed task's completions land at
+        their original stream indices."""
         self.tasks = tasks
         self.mode = mode
         self.profiled = profiled or ProfiledData()
@@ -181,6 +201,17 @@ class SimScheduler:
         self._done_k = [0] * n          # kernels completed
         self._issued = [0] * n
         self._pending_issue: List[Optional[int]] = [None] * n
+        # ops plane: durable store + scripted faults + lifecycle verbs
+        self.jobstore = coerce_store(jobstore)
+        self.fault_plan = fault_plan
+        self.job_ids: List[Optional[int]] = (
+            list(job_ids) if job_ids is not None else [None] * n)
+        self.seq_base: List[int] = (
+            list(seq_base) if seq_base is not None else [0] * n)
+        self.cancelled: set = set()
+        self.paused_tasks: set = set()
+        self._begun = [False] * n
+        self._snap_commits = 0
         self.interference = InterferenceModel.coerce(interference)
         if self.interference is not None and self.interference.enabled:
             # expose on the shared profile so checkpointing can persist
@@ -226,6 +257,19 @@ class SimScheduler:
         heapq.heappush(self._heap, (time, next(self._seq), kind, payload))
 
     def run(self) -> SimReport:
+        if self.jobstore is not None:
+            # write-ahead the whole workload before the clock starts: a
+            # crash BEFORE a task's arrival event must not lose the task
+            # (it recovers as ``submitted``); arrival advances the row to
+            # ``running`` via the same upsert
+            for i, t in enumerate(self.tasks):
+                state = (_js.CANCELLED if i in self.cancelled
+                         else _js.SUBMITTED)
+                self.job_ids[i] = self.jobstore.record_submit(
+                    self.job_ids[i], t.key, t.priority,
+                    n_kernels=self.seq_base[i] + len(t.kernels),
+                    spec=spec_to_obj(t), deadline=t.deadline,
+                    state=state, at=self.now)
         for i, t in enumerate(self.tasks):
             self._push(t.arrival, "arrival", (i,))
         while self._heap:
@@ -235,6 +279,11 @@ class SimScheduler:
         if self.online is not None and self.online.config.enabled:
             self.online.commit()       # flush the partial final epoch
             online_stats = self.online.stats()
+        if self.jobstore is not None:
+            # final checkpoint: latest (possibly online-refined) SK/SG +
+            # fold the WAL so a subsequent cold open reads one file
+            self.jobstore.snapshot_profiles(self.profiled, at=self.now)
+            self.jobstore.checkpoint()
         tagged = [(t, r) for t, r in zip(self.tasks, self.results)
                   if t.deadline is not None]
         return SimReport(self.results, self.timeline,
@@ -249,13 +298,26 @@ class SimScheduler:
 
     # --------------------------------------------------------------- clients
     def _on_arrival(self, ti: int) -> None:
+        if ti in self.cancelled:       # cancelled before it ever arrived
+            return
         task = self.tasks[ti]
+        self._begun[ti] = True
+        if self.jobstore is not None:
+            # upsert: a recovery re-submission keeps the original row
+            # (full spec, kernel count, completions); only state advances
+            self.job_ids[ti] = self.jobstore.record_submit(
+                self.job_ids[ti], task.key, task.priority,
+                n_kernels=self.seq_base[ti] + len(task.kernels),
+                spec=spec_to_obj(task), deadline=task.deadline,
+                at=self.now)
         if self.placement.task_begin(ti, task.key, task.priority,
                                      arrival=self.results[ti].arrival):
             self._on_issue(ti, 0)
 
     def _on_issue(self, ti: int, ki: int) -> None:
         """Host of task ti is ready to issue kernel ki."""
+        if ti in self.cancelled:
+            return
         task = self.tasks[ti]
         if ki >= len(task.kernels):
             return
@@ -310,9 +372,25 @@ class SimScheduler:
     def _on_kernel_end(self, ti: int, ki: int, filler: bool, device: int,
                        start: float, end: float) -> None:
         task = self.tasks[ti]
+        if self.jobstore is not None:
+            # WRITE-AHEAD: the completion record is this boundary's
+            # commit point — durable before ANY scheduling side-effect,
+            # so a crash anywhere below loses nothing and recovery
+            # re-submits exactly the un-recorded suffix
+            self.jobstore.record_completion(self.job_ids[ti],
+                                            self.seq_base[ti] + ki,
+                                            at=self.now)
         self._done_k[ti] = ki + 1
         if filler:
             self.placement.fill_complete(device)
+        if ti in self.cancelled:
+            # a cancelled task's in-flight kernel ran to completion
+            # (kernels are non-preemptible); observe it, issue nothing
+            self.placement.kernel_end(ti, task.kernels[ki].kid, last=True,
+                                      actual_gap=task.kernels[ki].gap_after,
+                                      start=start, end=end)
+            self._fault_boundary()
+            return
         last = ki == len(task.kernels) - 1
         if last:
             self.results[ti].completion = self.now
@@ -329,6 +407,109 @@ class SimScheduler:
         self.placement.kernel_end(ti, task.kernels[ki].kid, last=last,
                                   actual_gap=task.kernels[ki].gap_after,
                                   start=start, end=end)
+        if self.jobstore is not None:
+            if last:
+                self.jobstore.record_state(self.job_ids[ti], _js.DONE,
+                                           at=self.now)
+            if (self.online is not None
+                    and self.online.commits != self._snap_commits):
+                # an online epoch committed refined SK/SG this boundary:
+                # checkpoint so recovery resumes with what was learned
+                self._snap_commits = self.online.commits
+                self.jobstore.snapshot_profiles(self.profiled, at=self.now)
+        self._fault_boundary()
+
+    # -------------------------------------------------------- ops plane
+    def _fault_boundary(self) -> None:
+        """Consult the fault plan at a kernel boundary — the only place
+        faults are injected (kernels are non-preemptible). Scripted
+        verbs apply BEFORE a scripted crash at the same boundary, so a
+        cancel-then-crash persists the cancel."""
+        if self.fault_plan is None:
+            return
+        crash, verbs = self.fault_plan.at_boundary()
+        for v in verbs:
+            verb, args = v[0], v[1:]
+            if verb == "cancel":
+                self.cancel(*args)
+            elif verb == "pause":
+                self.pause(*args)
+            elif verb == "resume":
+                self.resume(*args)
+            else:
+                raise ValueError(f"unknown fault-plan verb {v!r}")
+        if crash:
+            self.fault_plan.crash()
+
+    def cancel(self, ti: int) -> List[KernelRequest]:
+        """Cancel task ``ti``: purge its queued requests (in-flight
+        kernels finish — non-preemptible), retire it, record the
+        terminal state. Returns the purged requests."""
+        if ti in self.cancelled:
+            return []
+        if self._begun[ti] and self._done_k[ti] >= len(self.tasks[ti].kernels):
+            return []                  # raced completion: already DONE
+        self.cancelled.add(ti)
+        self.paused_tasks.discard(ti)
+        self._pending_issue[ti] = None
+        purged: List[KernelRequest] = []
+        if self._begun[ti]:
+            purged, admitted = self.placement.cancel(ti)
+            for nxt in admitted:       # EXCLUSIVE: next waiter admitted
+                self._on_issue(nxt, 0)
+        if self.jobstore is not None and self.job_ids[ti] is not None:
+            self.jobstore.record_state(self.job_ids[ti], _js.CANCELLED,
+                                       at=self.now)
+        return purged
+
+    def pause(self, ti: int) -> bool:
+        """Pause task ``ti`` (defers to its next kernel boundary when
+        kernels are in flight — returns False then, True when the pause
+        took effect immediately). The client keeps issuing; its requests
+        buffer with the detached backlog until ``resume``."""
+        if ti in self.paused_tasks:
+            return True
+        if ti in self.cancelled or not self._begun[ti]:
+            raise ValueError(f"cannot pause task {ti} "
+                             f"(cancelled or not yet arrived)")
+        landed = self.placement.pause(ti)
+        self.paused_tasks.add(ti)
+        if self.jobstore is not None and self.job_ids[ti] is not None:
+            self.jobstore.record_state(self.job_ids[ti], _js.PAUSED,
+                                       at=self.now)
+        return landed
+
+    def resume(self, ti: int, device: Optional[int] = None) -> int:
+        """Re-admit a paused task (on ``device``, or wherever the
+        placement discipline elects). Returns the hosting device."""
+        if ti not in self.paused_tasks:
+            raise ValueError(f"task {ti} is not paused")
+        d = self.placement.resume(ti, device)
+        self.paused_tasks.discard(ti)
+        if self.jobstore is not None and self.job_ids[ti] is not None:
+            self.jobstore.record_state(self.job_ids[ti], _js.RUNNING,
+                                       at=self.now)
+        return d
+
+    @classmethod
+    def recover(cls, jobstore, mode: Mode, *, include_paused: bool = False,
+                cold_start: bool = False, **kwargs) -> "SimScheduler":
+        """Rebuild a simulator from a store's incomplete jobs: each
+        job's REMAINING kernel suffix re-submits in stream order under
+        its original job id and completion watermark (so recovered
+        completions land at their original stream indices), and the
+        latest profile snapshot — online-learned SK/SG included —
+        reloads unless ``profiled=`` overrides it. Paused jobs stay
+        paused in the store across a restart unless ``include_paused``.
+        """
+        store = coerce_store(jobstore)
+        specs, ids, bases = store.recovery_plan(
+            include_paused=include_paused)
+        profiled = kwargs.pop("profiled", None)
+        if profiled is None:
+            profiled = store.load_profiles(cold_start=cold_start)
+        return cls(specs, mode, profiled=profiled, jobstore=store,
+                   job_ids=ids, seq_base=bases, **kwargs)
 
 
 # ---------------------------------------------------------------------------

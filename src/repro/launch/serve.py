@@ -1,16 +1,33 @@
 """Serving driver: hosts reduced-scale services on the FIKIT engine with
-batched requests — the end-to-end serving example path.
+batched requests — the end-to-end serving example path, plus the ops
+plane's operator CLI.
 
+    # serve (the original flat invocation still works — "submit" is the
+    # default verb):
     PYTHONPATH=src python -m repro.launch.serve \
         --high qwen3-4b --low mamba2-2.7b --mode fikit --requests 10 \
         --discipline sjf
+
+    # durable serving + crash recovery:
+    ... serve submit --jobstore /tmp/fikit.db --resume
+
+    # operator verbs against a live serving process sharing the store
+    # (each enqueues a control row the server's poller consumes; status
+    # reads the store directly and needs no live server):
+    ... serve status --jobstore /tmp/fikit.db
+    ... serve cancel 3 --jobstore /tmp/fikit.db
+    ... serve pause  3 --jobstore /tmp/fikit.db
+    ... serve resume 3 --jobstore /tmp/fikit.db --device 1
+    ... serve drain    --jobstore /tmp/fikit.db
 """
 from __future__ import annotations
 
 import argparse
 import statistics as st
+import sys as _sys
 
 from repro.config import get_config
+from repro.core.jobstore import JobStore
 from repro.core.queues import QUEUE_DISCIPLINES
 from repro.core.scheduler import Mode
 from repro.serving import InferenceService, ServingSystem
@@ -21,6 +38,7 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
                host_gap: float = 0.002, devices: int = 1,
                discipline: str = "fifo", deadline: float = None,
                online_measure: bool = False,
+               jobstore: str = None, resume: bool = False,
                verbose: bool = True):
     """Host a high/low priority service pair on the wall-clock engine.
 
@@ -32,7 +50,13 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
     cold-start predictions; see ``repro.core.online``): the LOW service is
     then NOT onboarded offline — it starts cold and becomes gap-fillable
     from its own observed kernels, the scenario the offline two-phase
-    design cannot serve."""
+    design cannot serve.
+
+    ``jobstore`` attaches the durable ops plane (a SQLite path): every
+    invocation is recorded write-ahead and the operator verbs
+    (cancel/pause/resume/drain, see ``main``) act on this run through
+    the shared store; ``resume=True`` first re-runs every invocation a
+    previous (killed) run left incomplete in the store."""
     hi = InferenceService(get_config(high).reduced(), priority=0,
                           batch=batch, seq=seq, host_gap=host_gap)
     lo = InferenceService(get_config(low).reduced(), priority=5,
@@ -40,13 +64,15 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
     with ServingSystem(Mode(mode), measure_runs=measure_runs,
                        devices=devices,
                        queue_discipline=discipline,
-                       online_measure=online_measure) as sys_:
+                       online_measure=online_measure,
+                       jobstore=jobstore) as sys_:
         meas_hi = sys_.onboard(hi)
         if online_measure:
             lo.svc.warmup()            # compile outside the timed phase
             meas_lo = []
         else:
             meas_lo = sys_.onboard(lo)
+        recovered = sys_.recover([hi, lo]) if (resume and jobstore) else []
         res = sys_.invoke_concurrent([
             ("high", hi, requests, 0.0, 0.01),
             ("low", lo, requests, 0.0, 0.0, deadline),
@@ -55,6 +81,7 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
         steals = sys_.engine.steal_count
         misses = sys_.deadline_misses
         tagged = sys_.deadlines_tagged
+        cancelled = sys_.cancelled_invocations
     # read AFTER the context closes: stop() flushes the final partial epoch
     online_stats = sys_.online_stats
     out = {
@@ -72,7 +99,11 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
         "steals": steals,
         "deadline_misses": misses,
         "deadlines_tagged": tagged,
+        "cancelled_invocations": cancelled,
     }
+    if jobstore is not None:
+        out["jobstore"] = jobstore
+        out["recovered_jobs"] = len(recovered)
     if online_stats is not None:
         out["online_observations"] = online_stats["observations"]
         out["online_commits"] = online_stats["commits"]
@@ -85,31 +116,103 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--high", default="qwen3-4b")
-    ap.add_argument("--low", default="mamba2-2.7b")
-    ap.add_argument("--mode", default="fikit",
+#: CLI verbs; anything else as the first argv token means the legacy
+#: flat form, which is rewritten to ``submit`` for back-compat
+VERBS = ("submit", "status", "cancel", "pause", "resume", "drain")
+
+
+def _cmd_submit(args) -> None:
+    serve_pair(args.high, args.low, args.mode, args.requests,
+               devices=args.devices, discipline=args.discipline,
+               deadline=args.deadline, online_measure=args.online_measure,
+               jobstore=args.jobstore, resume=args.resume)
+
+
+def _cmd_status(args) -> None:
+    with JobStore(args.jobstore) as store:
+        jobs = store.jobs()
+        if not jobs:
+            print("no jobs in store")
+            return
+        print(f"{'job':>5} {'process':<24} {'prio':>4} {'state':<10} "
+              f"{'done':>5} {'total':>5}")
+        for j in jobs:
+            print(f"{j.job_id:>5} {j.key.process:<24} {j.priority:>4} "
+                  f"{j.state:<10} {j.completed:>5} {j.n_kernels:>5}")
+
+
+def _cmd_control(verb: str, args) -> None:
+    """Enqueue an operator verb for the serving process sharing the
+    store file; it is applied at the next poller tick (a kernel-boundary
+    action on the engine side)."""
+    job_id = getattr(args, "job", None)
+    arg = None
+    if verb == "resume" and args.device is not None:
+        arg = str(args.device)
+    with JobStore(args.jobstore) as store:
+        store.request_control(verb, job_id, arg=arg)
+    target = f" for job {job_id}" if job_id is not None else ""
+    print(f"queued {verb}{target} in {args.jobstore}")
+
+
+def _add_store_arg(p, required=True) -> None:
+    p.add_argument("--jobstore", required=required,
+                   help="path of the durable job store (SQLite)")
+
+
+def main(argv=None):
+    argv = list(_sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] not in VERBS + ("-h", "--help"):
+        argv.insert(0, "submit")       # legacy flat form
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
+    sub = ap.add_subparsers(dest="verb", required=True)
+
+    sp = sub.add_parser("submit", help="host a high/low service pair")
+    sp.add_argument("--high", default="qwen3-4b")
+    sp.add_argument("--low", default="mamba2-2.7b")
+    sp.add_argument("--mode", default="fikit",
                     choices=[m.value for m in Mode])
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--devices", type=int, default=1,
+    sp.add_argument("--requests", type=int, default=8)
+    sp.add_argument("--devices", type=int, default=1,
                     help="number of device executors (placement layer)")
-    ap.add_argument("--discipline", default="fifo",
+    sp.add_argument("--discipline", default="fifo",
                     choices=sorted(QUEUE_DISCIPLINES),
                     help="intra-device queue discipline")
-    ap.add_argument("--deadline", type=float, default=None,
+    sp.add_argument("--deadline", type=float, default=None,
                     help="relative completion budget (s) tagged onto "
                          "low-priority invocations (edf ordering + "
                          "deadline_misses stat)")
-    ap.add_argument("--online-measure", action="store_true",
+    sp.add_argument("--online-measure", action="store_true",
                     help="refine SK/SG live during the sharing phase "
                          "(EMA epoch commits + cold-start predictions); "
                          "the low-priority service is NOT onboarded "
                          "offline and learns its profile online")
-    args = ap.parse_args()
-    serve_pair(args.high, args.low, args.mode, args.requests,
-               devices=args.devices, discipline=args.discipline,
-               deadline=args.deadline, online_measure=args.online_measure)
+    _add_store_arg(sp, required=False)
+    sp.add_argument("--resume", action="store_true",
+                    help="first re-run invocations a previous run left "
+                         "incomplete in the jobstore")
+
+    st_ = sub.add_parser("status", help="print the store's job table")
+    _add_store_arg(st_)
+    for verb, jobbed in (("cancel", True), ("pause", True),
+                         ("resume", True), ("drain", False)):
+        vp = sub.add_parser(verb, help=f"queue a {verb} for the live "
+                                       f"serving process on this store")
+        if jobbed:
+            vp.add_argument("job", type=int, help="job id (see status)")
+        if verb == "resume":
+            vp.add_argument("--device", type=int, default=None,
+                            help="pin the resumed task to this device")
+        _add_store_arg(vp)
+
+    args = ap.parse_args(argv)
+    if args.verb == "submit":
+        _cmd_submit(args)
+    elif args.verb == "status":
+        _cmd_status(args)
+    else:
+        _cmd_control(args.verb, args)
 
 
 if __name__ == "__main__":

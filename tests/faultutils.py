@@ -1,0 +1,179 @@
+"""Shared fixtures for the fault-injection / crash-recovery suite.
+
+Three tiny multi-task scenarios (12-18 kernels => 12-18 global kernel
+boundaries each), conservation assertion helpers, and a subprocess entry
+point so the kill-and-restart tests can hard-crash a REAL process
+(``os._exit``, the SIGKILL stand-in) and restart it cold:
+
+    PYTHONPATH=src python tests/faultutils.py run <scenario> <mode> \
+        <store.db> --crash-at 7
+    PYTHONPATH=src python tests/faultutils.py recover <scenario> <mode> \
+        <store.db>
+
+``run`` exits with ``CRASH_EXIT`` (86) at the scripted boundary; a
+``recover`` invocation rebuilds the simulator from the store and runs the
+remaining suffix to completion, printing a JSON summary on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __name__ == "__main__":           # subprocess entry: no pytest on path
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.faults import FaultPlan, InjectedCrash  # noqa: E402
+from repro.core.jobstore import DONE, JobStore  # noqa: E402
+from repro.core.kernel_id import KernelID  # noqa: E402
+from repro.core.online import OnlineConfig  # noqa: E402
+from repro.core.scheduler import Mode, SimScheduler, profile_tasks  # noqa: E402
+from repro.core.task import TaskKey, TaskSpec, TraceKernel  # noqa: E402
+
+
+def k(name, dur, gap=0.0):
+    return TraceKernel(KernelID(name), dur, gap)
+
+
+def scenario_pair():
+    """Gap-filling pair: sync high-prio with big gaps + sync low-prio.
+    12 kernels -> 12 boundaries."""
+    return [
+        TaskSpec(TaskKey("hi"), 0, [k("hi/a", 0.002, 0.005)] * 5),
+        TaskSpec(TaskKey("lo"), 5, [k("lo/a", 0.0015, 0.0004)] * 7,
+                 arrival=0.001),
+    ]
+
+
+def scenario_tiers():
+    """Three priority tiers with an async bottom; 15 boundaries."""
+    return [
+        TaskSpec(TaskKey("hi"), 0, [k("hi/a", 0.002, 0.004)] * 4),
+        TaskSpec(TaskKey("mid"), 2, [k("mid/a", 0.001, 0.002)] * 5,
+                 arrival=0.002),
+        TaskSpec(TaskKey("lo"), 7, [k("lo/a", 0.003, 0.0001)] * 6,
+                 arrival=0.0005, max_inflight=3),
+    ]
+
+
+def scenario_churn():
+    """Equal-prio pair + late boss + async flood; 18 boundaries."""
+    return [
+        TaskSpec(TaskKey("a"), 3, [k("a/x", 0.002, 0.001)] * 5),
+        TaskSpec(TaskKey("b"), 3, [k("b/x", 0.0015, 0.0008)] * 4,
+                 arrival=0.0002),
+        TaskSpec(TaskKey("boss"), 1, [k("boss/x", 0.001, 0.003)] * 3,
+                 arrival=0.006),
+        TaskSpec(TaskKey("bulk"), 9, [k("bulk/x", 0.0025, 0.0001)] * 6,
+                 arrival=0.003, max_inflight=4),
+    ]
+
+
+SCENARIOS = {
+    "pair": scenario_pair,
+    "tiers": scenario_tiers,
+    "churn": scenario_churn,
+}
+
+#: modes the recovery sweep covers (the two queued sharing modes)
+SWEEP_MODES = (Mode.FIKIT, Mode.PREEMPT)
+
+#: small epochs so the online loop commits (and the store snapshots the
+#: refined profile) several times inside even these tiny scenarios
+ONLINE = OnlineConfig(epoch_observations=4, epoch_seconds=0.005)
+
+
+def profiles(specs):
+    return profile_tasks(specs, T=3, jitter=0.0, measurement_overhead=0.0)
+
+
+def total_kernels(specs):
+    return sum(len(s.kernels) for s in specs)
+
+
+def build_sim(specs, mode, store=None, fault_plan=None, online=True):
+    return SimScheduler(specs, mode, profiled=profiles(specs),
+                        jobstore=store, fault_plan=fault_plan,
+                        online=ONLINE if online else None)
+
+
+# ------------------------------------------------------------- assertions
+def assert_conserved(store, specs, cancelled_keys=()):
+    """The conservation proof: every non-cancelled job is DONE with a
+    contiguous 0..n-1 completion stream — zero lost (count == n_kernels),
+    zero duplicated (set size == list size), order preserved."""
+    by_key = {s.key.process: s for s in specs}
+    jobs = store.jobs()
+    assert len(jobs) == len(specs), \
+        f"store has {len(jobs)} jobs, expected {len(specs)}"
+    for rec in jobs:
+        spec = by_key[rec.key.process]
+        seqs = store.completions(rec.job_id)
+        assert len(set(seqs)) == len(seqs), \
+            f"job {rec.job_id} duplicated completions: {seqs}"
+        if rec.key.process in cancelled_keys:
+            assert rec.state == "cancelled"
+            # a cancelled job keeps a contiguous PREFIX (whatever ran
+            # before the purge), never the full stream
+            assert seqs == list(range(len(seqs)))
+        else:
+            assert rec.state == DONE, \
+                f"job {rec.job_id} ({rec.key.process}) state {rec.state}"
+            assert seqs == list(range(len(spec.kernels))), \
+                f"job {rec.job_id} completions not contiguous: {seqs}"
+
+
+def crash_then_recover(scenario, mode, boundary, store_path):
+    """In-process soft-crash at ``boundary`` against a file store, then a
+    COLD reopen + ``SimScheduler.recover`` run to completion. Returns the
+    reopened store (caller closes) and the recovered scheduler."""
+    specs = SCENARIOS[scenario]()
+    with JobStore(store_path) as store:
+        sim = build_sim(specs, mode, store=store,
+                        fault_plan=FaultPlan(crash_at=boundary))
+        try:
+            sim.run()
+        except InjectedCrash as e:
+            assert e.boundary == boundary
+        else:
+            raise AssertionError(
+                f"no crash fired at boundary {boundary} "
+                f"({total_kernels(specs)} kernels total)")
+    store = JobStore(store_path)     # cold reopen: only durable state
+    rec = SimScheduler.recover(store, mode, online=ONLINE)
+    rec.run()
+    return store, rec
+
+
+# ------------------------------------------------------- subprocess entry
+def child_main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("action", choices=("run", "recover"))
+    ap.add_argument("scenario", choices=sorted(SCENARIOS))
+    ap.add_argument("mode", choices=[m.value for m in SWEEP_MODES])
+    ap.add_argument("store")
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="hard-crash (os._exit) at this kernel boundary")
+    args = ap.parse_args(argv)
+
+    mode = Mode(args.mode)
+    plan = (FaultPlan(crash_at=args.crash_at, hard=True)
+            if args.crash_at is not None else None)
+    with JobStore(args.store) as store:
+        if args.action == "run":
+            specs = SCENARIOS[args.scenario]()
+            sim = build_sim(specs, mode, store=store, fault_plan=plan)
+        else:
+            sim = SimScheduler.recover(store, mode, online=ONLINE)
+            sim.fault_plan = plan
+        sim.run()                    # a hard plan never returns from here
+        done = [r.job_id for r in store.jobs(states=(DONE,))]
+        print(json.dumps({"done": sorted(done),
+                          "watermarks": {r.job_id: r.completed
+                                         for r in store.jobs()}}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(child_main())

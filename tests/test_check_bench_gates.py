@@ -1,0 +1,95 @@
+"""Unit tests for scripts/check_bench_gates.py error surfaces: a gated
+BENCH json that is missing or malformed must produce a NAMED, actionable
+failure line (which bench, what to re-run) — never a raw traceback."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from scripts.check_bench_gates import (ALL_GATED, DEFAULT_REQUIRED,  # noqa: E402
+                                       main, run_gates)
+
+pytestmark = pytest.mark.fast
+
+GOOD_RECOVERY = {
+    "smoke": True,
+    "recovery_sweep": {"per_job_us": {"50": 60.0, "200": 55.0},
+                       "growth_vs_smallest": 0.92, "size_ratio": 4.0},
+    "cancel_storm": {"hi_jct_ratio_vs_no_storm": 1.0},
+}
+
+TOL = {"recovery": {"max_recovery_us_per_job": 2000.0,
+                    "max_recovery_growth": 3.0,
+                    "max_cancel_storm_hi_jct_ratio": 1.05}}
+
+
+def _setup(tmp_path, payload):
+    tol = tmp_path / "gates.json"
+    tol.write_text(json.dumps(TOL))
+    if payload is not None:
+        (tmp_path / "BENCH_recovery.json").write_text(payload)
+    return tol
+
+
+def test_passing_payload(tmp_path, capsys):
+    tol = _setup(tmp_path, json.dumps(GOOD_RECOVERY))
+    assert run_gates({"recovery"}, repo=tmp_path, tolerances_path=tol) == 0
+    out = capsys.readouterr().out
+    assert "ok   recovery" in out
+
+
+def test_missing_required_bench_is_named_and_actionable(tmp_path, capsys):
+    tol = _setup(tmp_path, None)
+    assert run_gates({"recovery"}, repo=tmp_path, tolerances_path=tol) == 1
+    out = capsys.readouterr().out
+    assert "FAIL recovery" in out
+    assert "BENCH_recovery.json missing" in out
+    assert "benchmarks.run --only recovery" in out       # how to fix it
+    assert "Traceback" not in out
+
+
+def test_missing_optional_bench_is_skipped(tmp_path, capsys):
+    tol = _setup(tmp_path, None)
+    assert run_gates(set(), repo=tmp_path, tolerances_path=tol) == 0
+    assert "skip recovery" in capsys.readouterr().out
+
+
+def test_malformed_json_is_named_not_traceback(tmp_path, capsys):
+    tol = _setup(tmp_path, '{"recovery_sweep": {truncated mid-wri')
+    assert run_gates({"recovery"}, repo=tmp_path, tolerances_path=tol) == 1
+    out = capsys.readouterr().out
+    assert "FAIL recovery" in out
+    assert "not valid JSON" in out
+    assert "benchmarks.run --only recovery" in out
+    assert "Traceback" not in out
+
+
+def test_missing_field_is_named_not_traceback(tmp_path, capsys):
+    broken = dict(GOOD_RECOVERY)
+    del broken["cancel_storm"]
+    tol = _setup(tmp_path, json.dumps(broken))
+    assert run_gates({"recovery"}, repo=tmp_path, tolerances_path=tol) == 1
+    out = capsys.readouterr().out
+    assert "FAIL recovery" in out and "malformed" in out
+    assert "Traceback" not in out
+
+
+def test_regressing_payload_fails_gate(tmp_path, capsys):
+    bad = json.loads(json.dumps(GOOD_RECOVERY))
+    bad["cancel_storm"]["hi_jct_ratio_vs_no_storm"] = 2.0
+    tol = _setup(tmp_path, json.dumps(bad))
+    assert run_gates({"recovery"}, repo=tmp_path, tolerances_path=tol) == 1
+    out = capsys.readouterr().out
+    assert "FAIL recovery" in out and "disturbance" in out
+
+
+def test_main_rejects_unknown_required_name(capsys):
+    assert main(["--require", "no_such_bench"]) == 2
+    assert "unknown benchmark" in capsys.readouterr().out
+
+
+def test_recovery_is_gated_by_default():
+    assert "recovery" in DEFAULT_REQUIRED
+    assert set(DEFAULT_REQUIRED) <= set(ALL_GATED)

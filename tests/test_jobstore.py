@@ -1,0 +1,243 @@
+"""Unit tests for the durable job store (repro.core.jobstore): schema,
+write-ahead completion contiguity, recovery plans, profile snapshots
+(EMA counters included), the operator control queue, and cold reopen."""
+import os
+import sqlite3
+
+import pytest
+
+from repro.core.jobstore import (CANCELLED, DONE, PAUSED, RUNNING,
+                                 DuplicateCompletion, JobStore,
+                                 StreamOrderViolation, UnknownJob,
+                                 coerce_store, spec_from_record,
+                                 spec_to_obj)
+from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig, OnlineMeasurement
+from repro.core.profiler import ProfiledData
+from repro.core.scheduler import profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+pytestmark = pytest.mark.fast
+
+
+def k(name, dur, gap=0.0, kclass=None):
+    return TraceKernel(KernelID(name), dur, gap, kclass=kclass)
+
+
+def spec(n=4, process="svc", prio=3, **kw):
+    return TaskSpec(TaskKey(process), prio,
+                    [k(f"{process}/a", 0.002, 0.001)] * n, **kw)
+
+
+# ------------------------------------------------------------------ schema
+def test_memory_and_file_backends_share_schema(tmp_path):
+    for store in (JobStore.memory(), JobStore(str(tmp_path / "j.db"))):
+        with store:
+            jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=2)
+            assert store.job(jid).state == RUNNING
+            assert store.watermark(jid) == 0
+
+
+def test_file_store_persists_across_reopen(tmp_path):
+    path = str(tmp_path / "jobs.db")
+    with JobStore(path) as store:
+        jid = store.record_submit(None, TaskKey("svc", ("x",)), 2,
+                                  n_kernels=3, deadline=0.5,
+                                  spec=spec_to_obj(spec(3)))
+        store.record_completion(jid, 0)
+    with JobStore(path) as store:
+        rec = store.job(jid)
+        assert rec.key == TaskKey("svc", ("x",))
+        assert (rec.priority, rec.n_kernels, rec.deadline) == (2, 3, 0.5)
+        assert rec.completed == 1 and rec.remaining == 2
+        assert rec.spec is not None
+
+
+def test_unknown_job_raises():
+    with JobStore.memory() as store:
+        with pytest.raises(UnknownJob):
+            store.job(99)
+        with pytest.raises(UnknownJob):
+            store.record_state(99, DONE)
+
+
+def test_record_state_rejects_unknown_state():
+    with JobStore.memory() as store:
+        jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=1)
+        with pytest.raises(ValueError, match="unknown job state"):
+            store.record_state(jid, "exploded")
+
+
+def test_resubmit_upsert_keeps_row_and_completions():
+    with JobStore.memory() as store:
+        jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=4,
+                                  spec=spec_to_obj(spec(4)))
+        store.record_completion(jid, 0)
+        store.record_state(jid, PAUSED)
+        # recovery re-submission: same id advances state only
+        again = store.record_submit(jid, TaskKey("a"), 0, n_kernels=4)
+        assert again == jid
+        rec = store.job(jid)
+        assert rec.state == RUNNING
+        assert rec.completed == 1           # completions survived
+        assert rec.spec is not None         # original spec survived
+
+
+# -------------------------------------------------- write-ahead contiguity
+def test_completion_watermark_contiguous():
+    with JobStore.memory() as store:
+        jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=3)
+        assert store.record_completion(jid, 0) == 1
+        assert store.record_completion(jid, 1) == 2
+        assert store.completions(jid) == [0, 1]
+        assert store.watermark(jid) == 2
+
+
+def test_duplicate_completion_is_structural_error():
+    with JobStore.memory() as store:
+        jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=3)
+        store.record_completion(jid, 0)
+        with pytest.raises(DuplicateCompletion, match="run twice"):
+            store.record_completion(jid, 0)
+
+
+def test_stream_order_violation_detected():
+    with JobStore.memory() as store:
+        jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=3)
+        with pytest.raises(StreamOrderViolation, match="stream order"):
+            store.record_completion(jid, 2)
+
+
+def test_reset_completions_rewinds_watermark():
+    with JobStore.memory() as store:
+        jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=3)
+        store.record_completion(jid, 0)
+        store.reset_completions(jid)
+        assert store.watermark(jid) == 0
+        store.record_completion(jid, 0)     # re-run allowed from scratch
+
+
+# ---------------------------------------------------------- recovery plan
+def test_spec_round_trip_and_suffix():
+    s = TaskSpec(TaskKey("svc"), 4,
+                 [k("svc/a", 0.002, 0.001, kclass="memory"),
+                  k("svc/b", 0.003, 0.0),
+                  k("svc/c", 0.001, 0.002)],
+                 max_inflight=2, deadline=1.5)
+    with JobStore.memory() as store:
+        jid = store.record_submit(None, s.key, s.priority,
+                                  n_kernels=3, spec=spec_to_obj(s),
+                                  deadline=s.deadline)
+        store.record_completion(jid, 0)
+        rebuilt = spec_from_record(store.job(jid))
+    assert rebuilt.key == s.key and rebuilt.priority == 4
+    assert len(rebuilt.kernels) == 2        # suffix from the watermark on
+    assert rebuilt.kernels[0].kid == s.kernels[1].kid
+    assert rebuilt.kernels[0].kclass is None
+    assert rebuilt.max_inflight == 2 and rebuilt.deadline == 1.5
+    assert rebuilt.arrival == 0.0           # resumes immediately
+
+
+def test_recovery_plan_skips_terminal_paused_and_specless():
+    with JobStore.memory() as store:
+        live = store.record_submit(None, TaskKey("live"), 0, n_kernels=4,
+                                   spec=spec_to_obj(spec(4, "live")))
+        store.record_completion(live, 0)
+        done = store.record_submit(None, TaskKey("done"), 0, n_kernels=1,
+                                   spec=spec_to_obj(spec(1, "done")))
+        store.record_completion(done, 0)
+        store.record_state(done, DONE)
+        gone = store.record_submit(None, TaskKey("gone"), 0, n_kernels=2,
+                                   spec=spec_to_obj(spec(2, "gone")))
+        store.record_state(gone, CANCELLED)
+        slept = store.record_submit(None, TaskKey("zzz"), 0, n_kernels=2,
+                                    spec=spec_to_obj(spec(2, "zzz")))
+        store.record_state(slept, PAUSED)
+        store.record_submit(None, TaskKey("wc"), 0, n_kernels=2)  # no spec
+
+        specs, ids, bases = store.recovery_plan()
+        assert ids == [live] and bases == [1]
+        assert len(specs[0].kernels) == 3
+
+        _, ids_p, _ = store.recovery_plan(include_paused=True)
+        assert ids_p == [live, slept]
+
+        incomplete = {r.job_id for r in store.incomplete_jobs()}
+        assert incomplete == {live, 5}      # wall-clock job included here
+
+
+# ---------------------------------------------------------------- profiles
+def test_profile_snapshot_round_trip_with_online_state():
+    specs = [spec(4, "svc")]
+    pd = profile_tasks(specs, T=3, jitter=0.0, measurement_overhead=0.0)
+    online = OnlineMeasurement(pd, OnlineConfig(epoch_observations=2))
+    key, kid = TaskKey("svc"), specs[0].kernels[0].kid
+    for i in range(4):
+        online.observe(0, 1, key, kid, i * 0.01, i * 0.01 + 0.004,
+                       last=(i == 3))
+    online.commit()
+    assert online.commits > 0
+    with JobStore.memory() as store:
+        assert store.load_profiles() is None
+        store.snapshot_profiles(pd)
+        loaded = store.load_profiles()
+    prof, orig = loaded.get(key), pd.get(key)
+    assert prof.predict_duration(kid) == \
+        pytest.approx(orig.predict_duration(kid))
+    assert prof.online_observations == orig.online_observations > 0
+    assert prof.obs_count == orig.obs_count
+    assert prof.ema_alpha == orig.ema_alpha
+
+
+def test_profile_snapshot_overwrites_single_row():
+    with JobStore.memory() as store:
+        store.snapshot_profiles(ProfiledData())
+        store.snapshot_profiles(ProfiledData())
+        n = store._db.execute("SELECT COUNT(*) FROM profiles").fetchone()
+        assert n[0] == 1
+
+
+# ---------------------------------------------------------------- controls
+def test_control_queue_fifo_and_consume_once():
+    with JobStore.memory() as store:
+        store.request_control("cancel", 3)
+        store.request_control("resume", 3, arg="1")
+        store.request_control("drain")
+        assert store.pop_controls() == [("cancel", 3, None),
+                                        ("resume", 3, "1"),
+                                        ("drain", None, None)]
+        assert store.pop_controls() == []   # consumed exactly once
+
+
+def test_control_queue_rejects_unknown_verb():
+    with JobStore.memory() as store:
+        with pytest.raises(ValueError, match="unknown control verb"):
+            store.request_control("explode")
+
+
+# ------------------------------------------------------------------ coerce
+def test_coerce_store(tmp_path):
+    assert coerce_store(None) is None
+    s = JobStore.memory()
+    assert coerce_store(s) is s
+    s.close()
+    path = tmp_path / "x.db"
+    opened = coerce_store(os.fspath(path))
+    assert isinstance(opened, JobStore) and path.exists()
+    opened.close()
+    with pytest.raises(TypeError):
+        coerce_store(42)
+
+
+def test_checkpoint_truncates_wal(tmp_path):
+    path = str(tmp_path / "j.db")
+    with JobStore(path) as store:
+        jid = store.record_submit(None, TaskKey("a"), 0, n_kernels=1)
+        store.record_completion(jid, 0)
+        store.checkpoint()
+        wal = path + "-wal"
+        assert (not os.path.exists(wal)) or os.path.getsize(wal) == 0
+    # the folded main file is a complete database on its own
+    db = sqlite3.connect(path)
+    assert db.execute("SELECT COUNT(*) FROM completions").fetchone()[0] == 1
+    db.close()

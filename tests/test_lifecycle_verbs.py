@@ -1,0 +1,337 @@
+"""Lifecycle verbs (cancel / pause / resume / drain) on both drivers,
+plus the serving-system usage guards.
+
+Sim side: verbs scripted at exact kernel boundaries via ``FaultPlan``
+controls (deterministic), asserting the conservation record in the store
+and that verbs never break the remaining workload. Wall-clock side: a
+cancelled client's parked Future unblocks with ``JobCancelled``, pause
+buffers submits until resume, drain refuses new tasks, and the
+engine/system usage guards raise clear errors instead of hanging.
+"""
+import threading
+import time
+
+import pytest
+
+from faultutils import ONLINE, assert_conserved, build_sim, k
+from repro.core.executor import JobCancelled, WallClockEngine
+from repro.core.faults import FaultPlan
+from repro.core.jobstore import (CANCELLED, DONE, PAUSED, JobStore)
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode, SimScheduler
+from repro.core.task import KernelRequest, TaskKey, TaskSpec
+from repro.serving import ServingSystem
+
+pytestmark = pytest.mark.fast
+
+
+def pair_specs():
+    return [
+        TaskSpec(TaskKey("hi"), 0, [k("hi/a", 0.002, 0.005)] * 5),
+        TaskSpec(TaskKey("lo"), 5, [k("lo/a", 0.0015, 0.0004)] * 7,
+                 arrival=0.001),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# simulator: scripted verbs at exact kernel boundaries
+# ---------------------------------------------------------------------------
+def test_sim_cancel_storm_spares_other_tasks():
+    """Cancel the low task mid-run: hi completes untouched, lo keeps a
+    contiguous completion PREFIX and a terminal ``cancelled`` state."""
+    specs = pair_specs()
+    with JobStore.memory() as store:
+        sim = build_sim(specs, Mode.FIKIT, store=store,
+                        fault_plan=FaultPlan(controls={3: [("cancel", 1)]}))
+        rep = sim.run()
+        assert 1 in sim.cancelled
+        assert_conserved(store, specs, cancelled_keys=("lo",))
+        lo = store.job(sim.job_ids[1])
+        assert lo.state == CANCELLED
+        assert lo.completed < 7                  # the purge cut the stream
+        assert rep.jct(0) > 0                    # hi ran to completion
+        assert sim._done_k[0] == 5
+
+
+def test_sim_cancel_before_arrival():
+    """Cancelling a task that never arrived: it never runs, its job row
+    is terminal-cancelled from the first write."""
+    specs = pair_specs()
+    with JobStore.memory() as store:
+        sim = build_sim(specs, Mode.FIKIT, store=store)
+        assert sim.cancel(1) == []               # nothing queued yet
+        sim.run()
+        assert_conserved(store, specs, cancelled_keys=("lo",))
+        assert store.job(sim.job_ids[1]).completed == 0
+        assert store.recovery_plan() == ([], [], [])
+
+
+def test_sim_cancel_idempotent():
+    specs = pair_specs()
+    sim = build_sim(specs, Mode.FIKIT,
+                    fault_plan=FaultPlan(controls={2: [("cancel", 1)],
+                                                  4: [("cancel", 1)]}))
+    sim.run()                                    # second cancel is a no-op
+    assert sim.cancel(1) == []
+
+
+def test_sim_pause_resume_roundtrip():
+    """Pause at one boundary, resume at a later one: everything still
+    completes, and the store saw the paused interlude."""
+    specs = pair_specs()
+    states = []
+    with JobStore.memory() as store:
+        sim = build_sim(specs, Mode.FIKIT, store=store,
+                        fault_plan=FaultPlan(controls={
+                            2: [("pause", 1)],
+                            6: [("resume", 1)]}))
+        orig_record = store.record_state
+
+        def spy(job_id, state, at=None):
+            states.append(state)
+            orig_record(job_id, state, at=at)
+        store.record_state = spy
+        sim.run()
+        assert_conserved(store, specs)
+    assert PAUSED in states and states.index(PAUSED) < states.index(DONE)
+
+
+def test_sim_pause_holder_releases_device():
+    """Pausing the gap HOLDER must hand the device to someone else —
+    the lo task keeps completing while hi is paused."""
+    specs = pair_specs()
+    with JobStore.memory() as store:
+        sim = build_sim(specs, Mode.FIKIT, store=store,
+                        fault_plan=FaultPlan(controls={
+                            1: [("pause", 0)],
+                            6: [("resume", 0)]}))
+        sim.run()
+        assert_conserved(store, specs)           # nobody deadlocked
+
+
+def test_sim_unresumed_pause_survives_restart():
+    """A pause with no resume: the run ends with the job PAUSED in the
+    store; recovery skips it by default and resumes it on request."""
+    specs = pair_specs()
+    with JobStore.memory() as store:
+        sim = build_sim(specs, Mode.FIKIT, store=store,
+                        fault_plan=FaultPlan(controls={2: [("pause", 1)]}))
+        sim.run()
+        assert store.job(sim.job_ids[1]).state == PAUSED
+        assert store.job(sim.job_ids[0]).state == DONE
+        specs_d, ids_d, _ = store.recovery_plan()
+        assert ids_d == []                       # paused stays paused
+        rec = SimScheduler.recover(store, Mode.FIKIT, include_paused=True,
+                                   online=ONLINE)
+        rec.run()
+        assert_conserved(store, specs)
+
+
+def test_sim_cross_device_resume_migrates():
+    """pause + resume(device=) is the migration primitive: the resumed
+    task's remaining kernels run on the target device."""
+    from faultutils import profiles
+    specs = pair_specs()
+    sim = SimScheduler(specs, Mode.FIKIT, profiled=profiles(specs),
+                       devices=2, discipline="round_robin",
+                       fault_plan=FaultPlan(controls={
+                           2: [("pause", 1)],
+                           5: [("resume", 1, 1)]}))
+    rep = sim.run()
+    assert sim._done_k == [5, 7]                 # all kernels ran
+    lo_devices = {kx.device for kx in rep.timeline if kx.task == 1}
+    assert 1 in lo_devices                       # migrated onto device 1
+
+
+def test_sim_exclusive_pause_raises():
+    specs = pair_specs()
+    sim = build_sim(specs, Mode.EXCLUSIVE,
+                    fault_plan=FaultPlan(controls={1: [("pause", 0)]}))
+    with pytest.raises(ValueError, match="EXCLUSIVE"):
+        sim.run()
+
+
+def test_sim_pause_unknown_task_raises():
+    specs = pair_specs()
+    sim = build_sim(specs, Mode.FIKIT)
+    with pytest.raises(ValueError, match="cancelled or not yet arrived"):
+        sim.pause(0)                             # before arrival
+    with pytest.raises(ValueError, match="not paused"):
+        sim.resume(0)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock engine: verbs under real threads
+# ---------------------------------------------------------------------------
+def _req(key, inst, seq, payload, priority=5):
+    return KernelRequest(task_key=key, kernel_id=KernelID(f"{key.process}/k"),
+                         priority=priority, task_instance=inst,
+                         seq_index=seq, payload=payload)
+
+
+def test_wallclock_cancel_unblocks_parked_client():
+    """A request parked behind a busy holder gets ``JobCancelled`` on its
+    Future when the task is cancelled — the client unblocks instead of
+    hanging; post-cancel submits fail fast."""
+    hold = threading.Event()
+    hi_key, lo_key = TaskKey("hi"), TaskKey("lo")
+    with WallClockEngine(Mode.FIKIT) as eng:
+        eng.task_begin(1, hi_key, 0)
+        blocking = eng.submit(_req(hi_key, 1, 0,
+                                   lambda: hold.wait(5), priority=0))
+        eng.task_begin(2, lo_key, 5)
+        parked = eng.submit(_req(lo_key, 2, 0, lambda: None))
+        purged = eng.cancel(2)
+        assert purged == 1
+        with pytest.raises(JobCancelled):
+            parked.result(timeout=5)
+        late = eng.submit(_req(lo_key, 2, 1, lambda: None))
+        with pytest.raises(JobCancelled):        # fail fast, never queued
+            late.result(timeout=5)
+        eng.task_end(2)                          # tolerated, not spurious
+        hold.set()
+        blocking.result(timeout=5)
+        eng.task_end(1)
+        assert not eng.placement._device_of     # nothing left behind
+
+
+def test_wallclock_pause_buffers_until_resume():
+    key = TaskKey("svc")
+    with WallClockEngine(Mode.FIKIT) as eng:
+        eng.task_begin(1, key, 3)
+        assert eng.pause(1) is True              # nothing in flight
+        fut = eng.submit(_req(key, 1, 0, lambda: "ran"))
+        time.sleep(0.05)
+        assert not fut.done()                    # buffered, not launched
+        assert eng.resume(1) == 0
+        out, _, _ = fut.result(timeout=5)
+        assert out == "ran"
+        eng.task_end(1)
+
+
+def test_wallclock_drain_refuses_new_tasks():
+    key = TaskKey("svc")
+    with WallClockEngine(Mode.FIKIT) as eng:
+        eng.task_begin(1, key, 0)
+        eng.submit(_req(key, 1, 0, lambda: None)).result(timeout=5)
+        eng.task_end(1)
+        assert eng.drain(timeout=5) is True
+        with pytest.raises(RuntimeError, match="draining"):
+            eng.task_begin(2, key, 0)
+
+
+def test_wallclock_engine_usage_guards():
+    eng = WallClockEngine(Mode.FIKIT)
+    with pytest.raises(RuntimeError, match="before WallClockEngine.start"):
+        eng.submit(_req(TaskKey("x"), 1, 0, lambda: None))
+    eng.start()
+    eng.stop()
+    eng.stop()                                   # idempotent
+    with pytest.raises(RuntimeError, match="after WallClockEngine.stop"):
+        eng.task_begin(1, TaskKey("x"), 0)
+    with pytest.raises(RuntimeError, match="cannot restart"):
+        eng.start()
+
+
+def test_wallclock_stop_with_inflight_flushes_online_once():
+    """Satellite stress: stop() racing in-flight kernels must not
+    deadlock, and must flush the pending online epoch EXACTLY once
+    (a second stop() is a no-op). Watchdog-guarded."""
+    from repro.core.online import OnlineConfig
+    cfg = OnlineConfig(epoch_observations=10**9, epoch_seconds=10**9)
+    key = TaskKey("svc")
+    eng = WallClockEngine(Mode.FIKIT, online=cfg).start()
+    eng.task_begin(1, key, 0)
+    first = eng.submit(_req(key, 1, 0, lambda: time.sleep(0.002)))
+    for i in range(1, 6):                        # keep the device busy
+        eng.submit(_req(key, 1, i, lambda: time.sleep(0.002)))
+    first.result(timeout=5)                      # >= 1 observation banked
+
+    done = threading.Event()
+
+    def stopper():
+        eng.stop()
+        eng.stop()                               # idempotent second stop
+        done.set()
+    t = threading.Thread(target=stopper, daemon=True)
+    t.start()
+    t.join(timeout=10)
+    assert done.is_set(), "stop() deadlocked with in-flight kernels"
+    stats = eng.online.stats()
+    assert stats["observations"] >= 1
+    assert stats["commits"] == 1                 # flushed exactly once
+
+
+# ---------------------------------------------------------------------------
+# serving system: usage guards (satellite regressions)
+# ---------------------------------------------------------------------------
+class _FakeSvc:
+    """Duck-typed InferenceService: fake payloads, no models, no JAX."""
+
+    class _Seg:
+        def __init__(self, name):
+            self.name = name
+            self.fn = lambda state: state
+            self.host_work = None
+
+        def kernel_id(self, state):
+            return KernelID(self.name)
+
+    class _Svc:
+        def __init__(self, segs):
+            self.segments = segs
+
+        def make_input(self):
+            return 0
+
+    def __init__(self, name="fake", priority=0, n=3):
+        self.key = TaskKey(name)
+        self.priority = priority
+        self.svc = self._Svc([self._Seg(f"{name}/s{i}") for i in range(n)])
+
+    def client(self, engine, identify=True):
+        from repro.core.client import HookClient
+        return HookClient(engine, self.key, self.priority,
+                          self.svc.segments, identify=identify)
+
+
+def test_serving_invoke_before_start_raises():
+    sys_ = ServingSystem(Mode.FIKIT)
+    with pytest.raises(RuntimeError, match="before start"):
+        sys_.invoke(_FakeSvc())
+    with pytest.raises(RuntimeError, match="outside"):
+        sys_.invoke_concurrent([("x", _FakeSvc(), 1, 0.0, 0.0)])
+
+
+def test_serving_invoke_after_stop_raises_and_stop_is_idempotent():
+    sys_ = ServingSystem(Mode.FIKIT)
+    sys_.start()
+    assert sys_.invoke(_FakeSvc(), n=2) is not None
+    sys_.stop()
+    sys_.stop()                                  # idempotent, no error
+    with pytest.raises(RuntimeError, match="after stop"):
+        sys_.invoke(_FakeSvc())
+    with pytest.raises(RuntimeError, match="outside"):
+        sys_.invoke_concurrent([("x", _FakeSvc(), 1, 0.0, 0.0)])
+    # a fresh start serves again after the stopped interlude
+    sys_.start()
+    try:
+        assert len(sys_.invoke(_FakeSvc(), n=1)) == 1
+    finally:
+        sys_.stop()
+
+
+def test_serving_ops_plane_end_to_end_with_store():
+    """Invoke under a store: job rows reach DONE with full watermarks;
+    cancel through the system unblocks and counts the invocation."""
+    svc = _FakeSvc(n=4)
+    with JobStore.memory() as store:
+        with ServingSystem(Mode.FIKIT, jobstore=store) as sys_:
+            jcts = sys_.invoke(svc, n=2)
+            assert len(jcts) == 2
+            jobs = store.jobs(states=(DONE,))
+            assert len(jobs) == 2
+            for j in jobs:
+                assert store.completions(j.job_id) == list(range(4))
+            st = sys_.status()
+            assert st["by_state"] == {DONE: 2}

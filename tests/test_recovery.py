@@ -1,0 +1,197 @@
+"""Crash-recovery sweeps and the wired-but-disabled differential.
+
+Three layers of proof for the durable ops plane:
+
+1. **In-process soft-crash sweep** — for EVERY global kernel boundary in
+   three scenarios x {FIKIT, PREEMPT}, inject ``InjectedCrash`` against a
+   file store, re-open the store COLD, ``SimScheduler.recover``, run to
+   completion, and assert conservation: zero requests lost, zero
+   duplicated, stream order contiguous per job.
+2. **Subprocess kill-and-restart** — sampled boundaries hard-crash a real
+   child process via ``os._exit(86)`` (no handlers, no flush — the
+   SIGKILL stand-in), then a fresh process recovers from the store file.
+3. **Differential contract** — randomized scenarios run store-absent
+   vs store-attached + inert ``FaultPlan``: decision traces, timelines,
+   and fill counts must be BIT-IDENTICAL (the store only observes).
+"""
+import json
+import random
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from faultutils import (ONLINE, SCENARIOS, SWEEP_MODES, assert_conserved,
+                        build_sim, crash_then_recover, profiles,
+                        total_kernels)
+from repro.core.faults import CRASH_EXIT, FaultPlan, InjectedCrash
+from repro.core.jobstore import DONE, JobStore
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode, SimScheduler
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+
+pytestmark = pytest.mark.fast
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# 1. every-boundary soft-crash sweep (in-process, cold store reopen)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", SWEEP_MODES)
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_crash_at_every_kernel_boundary_recovers(scenario, mode, tmp_path):
+    specs = SCENARIOS[scenario]()
+    n = total_kernels(specs)
+    for boundary in range(n):
+        path = str(tmp_path / f"{scenario}_{mode.value}_{boundary}.db")
+        store, rec = crash_then_recover(scenario, mode, boundary, path)
+        with store:
+            assert_conserved(store, specs)
+        # the recovered run resumed the suffix, not the whole stream:
+        # kernels it re-executed + kernels committed pre-crash == total
+        resumed = sum(len(t.kernels) for t in rec.tasks)
+        assert resumed == n - (boundary + 1)
+
+
+def test_crash_before_any_boundary_recovers_full_run(tmp_path):
+    """Crash at boundary 0: exactly one completion is durable (the
+    write-ahead record precedes the crash at its own boundary)."""
+    specs = SCENARIOS["pair"]()
+    store, _ = crash_then_recover("pair", Mode.FIKIT, 0,
+                                  str(tmp_path / "b0.db"))
+    with store:
+        assert_conserved(store, specs)
+
+
+def test_recovered_run_retains_online_learned_sksg(tmp_path):
+    """The profile snapshot rides the online epoch commits, so a crash
+    after the first commit recovers with refined SK/SG — not the offline
+    profile, not a cold start."""
+    path = str(tmp_path / "skg.db")
+    specs = SCENARIOS["churn"]()
+    with JobStore(path) as store:
+        sim = build_sim(specs, Mode.FIKIT, store=store,
+                        fault_plan=FaultPlan(crash_at=12))
+        with pytest.raises(InjectedCrash):
+            sim.run()
+        assert sim.online.commits > 0
+    with JobStore(path) as store:
+        snap = store.load_profiles()
+        assert snap is not None
+        learned = sum(p.online_observations
+                      for p in (snap.get(s.key) for s in specs)
+                      if p is not None)
+        assert learned > 0
+        rec = SimScheduler.recover(store, Mode.FIKIT, online=ONLINE)
+        carried = sum(p.online_observations
+                      for p in (rec.profiled.get(s.key) for s in specs)
+                      if p is not None)
+        assert carried == learned      # resumed WITH the learned state
+        rec.run()
+        assert_conserved(store, specs)
+
+
+def test_recover_after_clean_run_is_a_noop(tmp_path):
+    path = str(tmp_path / "clean.db")
+    specs = SCENARIOS["pair"]()
+    with JobStore(path) as store:
+        build_sim(specs, Mode.FIKIT, store=store).run()
+    with JobStore(path) as store:
+        assert_conserved(store, specs)
+        rec = SimScheduler.recover(store, Mode.FIKIT)
+        assert rec.tasks == []         # nothing incomplete
+        rec.run()
+        assert_conserved(store, specs)
+
+
+# ---------------------------------------------------------------------------
+# 2. subprocess kill-and-restart (hard crash: os._exit, cold process)
+# ---------------------------------------------------------------------------
+def _child(args, tmp_path):
+    return subprocess.run(
+        [sys.executable, str(REPO / "tests" / "faultutils.py"), *args],
+        cwd=str(REPO), capture_output=True, text=True, timeout=120,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": str(tmp_path)})
+
+
+@pytest.mark.parametrize("mode", SWEEP_MODES)
+@pytest.mark.parametrize("scenario", ["pair", "tiers"])
+def test_kill_and_restart_subprocess(scenario, mode, tmp_path):
+    specs = SCENARIOS[scenario]()
+    n = total_kernels(specs)
+    for boundary in (1, n // 2, n - 2):
+        db = str(tmp_path / f"kill_{scenario}_{mode.value}_{boundary}.db")
+        dead = _child(["run", scenario, mode.value, db,
+                       "--crash-at", str(boundary)], tmp_path)
+        assert dead.returncode == CRASH_EXIT, dead.stderr
+        back = _child(["recover", scenario, mode.value, db], tmp_path)
+        assert back.returncode == 0, back.stderr
+        summary = json.loads(back.stdout)
+        assert len(summary["done"]) == len(specs)
+        with JobStore(db) as store:
+            assert_conserved(store, specs)
+
+
+def test_subprocess_clean_run_then_recover_noop(tmp_path):
+    db = str(tmp_path / "clean.db")
+    first = _child(["run", "pair", "fikit", db], tmp_path)
+    assert first.returncode == 0, first.stderr
+    again = _child(["recover", "pair", "fikit", db], tmp_path)
+    assert again.returncode == 0, again.stderr
+    with JobStore(db) as store:
+        assert_conserved(store, SCENARIOS["pair"]())
+
+
+# ---------------------------------------------------------------------------
+# 3. wired-but-disabled differential: the store only OBSERVES
+# ---------------------------------------------------------------------------
+_DUR = [0.0005, 0.001, 0.0015, 0.002, 0.003, 0.004]
+_GAP = [0.0, 0.0003, 0.001, 0.0025, 0.005]
+
+
+def _random_tasks(rng):
+    specs = []
+    for t in range(rng.randint(2, 5)):
+        kid = KernelID(f"svc{t}/k")
+        kernels = [TraceKernel(kid, rng.choice(_DUR), rng.choice(_GAP))
+                   for _ in range(rng.randint(2, 10))]
+        specs.append(TaskSpec(
+            TaskKey(f"svc{t}"), rng.randint(0, 9), kernels,
+            arrival=rng.choice([0.0, 0.0005, 0.002, 0.008]),
+            max_inflight=rng.choice([1, 1, 1, 4])))
+    return specs
+
+
+@pytest.mark.parametrize("mode", SWEEP_MODES)
+@pytest.mark.parametrize("seed", range(20))
+def test_store_attached_runs_trace_identical(seed, mode):
+    """No faults + attached store (+ inert FaultPlan) vs no store at all:
+    decision traces, device timelines, and fill counts are bit-identical
+    — recording never changes a scheduling decision."""
+    rng = random.Random(seed * 6151 + (0 if mode is Mode.FIKIT else 1))
+    tasks = _random_tasks(rng)
+    online = seed % 2 == 0             # alternate the online loop too
+    # fresh ProfiledData per run: the online loop mutates it in place
+    kw = lambda: dict(profiled=profiles(tasks),  # noqa: E731
+                      online=ONLINE if online else None)
+
+    plain = SimScheduler(tasks, mode, **kw())
+    rep_plain = plain.run()
+
+    with JobStore.memory() as store:
+        wired = SimScheduler(tasks, mode, jobstore=store,
+                             fault_plan=FaultPlan(), **kw())
+        rep_wired = wired.run()
+        assert wired.fault_plan.inert
+        # and the observing store is a complete conservation record
+        assert_conserved(store, tasks)
+        assert len(store.jobs(states=(DONE,))) == len(tasks)
+
+    assert plain.policy.trace == wired.policy.trace
+    assert rep_plain.timeline == rep_wired.timeline
+    assert plain.policy.fill_count == wired.policy.fill_count
+    assert [r.jct for r in rep_plain.results] == \
+        [r.jct for r in rep_wired.results]
