@@ -1,0 +1,284 @@
+"""Serving-under-load: open-loop Poisson + diurnal replay through the
+admission plane, per-QoS-class latency and goodput under 2x overload.
+
+Three QoS classes (gold/silver/bronze -> FIKIT Q0/Q2/Q5) front one
+wall-clock engine running sleep-payload services. The load is OPEN-LOOP
+(arrivals never wait on completions — the regime the closed-loop
+``invoke_concurrent`` path cannot produce), replayed from pre-drawn
+schedules:
+
+1. **calibrate** — closed-loop exclusive invocations measure the group
+   service time; rates below are derived from it so the bench self-tunes
+   to the machine, and the measured JCT primes the plane's EMA so SLO
+   shedding is informed from the first request.
+2. **underload** (0.5x capacity, Poisson, batch-1 accounting) — the
+   per-class latency baseline.
+3. **overload** (2x capacity even with full continuous batching;
+   Poisson gold/silver + diurnal bronze) — where admission control
+   earns its keep: gold stays fast and in-SLO, silver sheds what its
+   deadline can't meet, bronze absorbs rejects via backpressure.
+
+Reported per phase: per-class offered/admitted/rejected/shed counts,
+p50/p99/mean latency, goodput; plus the feeder's worst lag (so a slow
+feeder can't masquerade as a fast plane). Derived gate inputs:
+
+- ``hi_p99_overload_ratio`` — gold p99 under overload vs underload; the
+  whole point of QoS classes is that this stays bounded while total
+  offered load quadruples.
+- ``hi_goodput_overload`` — fraction of offered gold requests that
+  completed within their SLO under overload.
+- ``shed_ordering_ok`` — priority_inversions == 0 AND every admit
+  happened with zero requests queued in any higher class.
+- ``conservation_ok`` — per class, offered == admitted + rejected +
+  shed + requeued in every phase.
+- ``admission_off_trace_identical`` — the wired-but-disabled plane
+  produced a policy decision trace bit-identical (after instance-id
+  normalization) to the no-plane direct ``invoke`` path.
+
+Gates (tracked in BENCH_serving_load.json, enforced by
+``scripts/check_bench_gates.py``): ``max_hi_p99_overload_ratio``,
+``min_hi_goodput``, ``require_shed_ordering``,
+``require_admission_off_trace_identical``, ``require_conservation``.
+
+Set BENCH_SMOKE=1 (CI) for a few-thousand-request replay; the full run
+(nightly) replays >= 10^5 requests.
+"""
+from __future__ import annotations
+
+import os
+import random
+import statistics
+import time
+
+from benchmarks.common import Csv
+from repro.core.client import HookClient
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode
+from repro.core.task import TaskKey
+from repro.serving import QoSClass, ServingSystem
+from repro.serving.loadgen import (diurnal_arrivals, merge_schedules,
+                                   poisson_arrivals, replay)
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+KERNEL_S = 0.0005          # per-kernel sleep payload
+SEGMENTS = 2               # kernels per invocation
+N_UNDER = 600 if SMOKE else 5_000
+N_OVER = 3_000 if SMOKE else 100_000
+UNDER_FACTOR = 0.5         # of batch-1 capacity
+OVERLOAD_FACTOR = 2.0      # of full-batch capacity
+SPLIT = {"gold": 0.10, "silver": 0.30, "bronze": 0.60}
+MAX_INFLIGHT = 4
+SEED = 7
+
+
+class _SleepSvc:
+    """Duck-typed InferenceService: each segment sleeps KERNEL_S."""
+
+    class _Seg:
+        def __init__(self, name, dur):
+            self.name = name
+            self.dur = dur
+            self.host_work = None
+
+        def fn(self, state):
+            time.sleep(self.dur)
+            return state
+
+        def kernel_id(self, state):
+            return KernelID(self.name)
+
+    class _Svc:
+        def __init__(self, segs):
+            self.segments = segs
+
+        def make_input(self):
+            return 0
+
+    def __init__(self, name, priority, dur=KERNEL_S, n=SEGMENTS):
+        self.key = TaskKey(name)
+        self.priority = priority
+        self.svc = self._Svc([self._Seg(f"{name}/s{i}", dur)
+                              for i in range(n)])
+
+    def client(self, engine, identify=True):
+        return HookClient(engine, self.key, self.priority,
+                          self.svc.segments, identify=identify)
+
+
+def _calibrate(svcs) -> float:
+    """Median closed-loop group service time, exclusive occupancy."""
+    jcts = []
+    with ServingSystem(Mode.FIKIT) as sys_:
+        for svc in svcs.values():
+            jcts.extend(sys_.invoke(svc, n=10 if SMOKE else 20))
+    return statistics.median(jcts)
+
+
+def _classes(group_time: float):
+    gold_dl = max(0.25, 150 * group_time)
+    silver_dl = max(0.10, 50 * group_time)
+    return (QoSClass("gold", priority=0, queue_limit=64,
+                     deadline=gold_dl, max_batch=4),
+            QoSClass("silver", priority=2, queue_limit=256,
+                     deadline=silver_dl, max_batch=8),
+            QoSClass("bronze", priority=5, queue_limit=1024,
+                     deadline=None, max_batch=16))
+
+
+def _run_phase(svcs, classes, group_time, schedule, record_events):
+    """Replay one schedule open-loop against a fresh system; returns
+    (admission stats, replay report, events)."""
+    with ServingSystem(Mode.FIKIT,
+                       admission={"classes": classes,
+                                  "max_inflight": MAX_INFLIGHT,
+                                  "record_events": record_events}) as sys_:
+        for svc in svcs.values():
+            sys_.admission.note_latency(svc, group_time)
+        rep = replay(sys_.admission, schedule, keep_tickets=False)
+        sys_.admission.drain(timeout=120)
+        stats = sys_.admission.stats()
+        events = list(sys_.admission.events)
+    return stats, rep, events
+
+
+def _normalized(trace):
+    mapping = {}
+    out = []
+    for ev in trace:
+        ev = tuple(ev)
+        if len(ev) > 1 and isinstance(ev[1], int):
+            ev = (ev[0], mapping.setdefault(ev[1], len(mapping))) + ev[2:]
+        out.append(ev)
+    return out
+
+
+def _trace_differential() -> bool:
+    """Admission OFF must be bit-identical to direct invoke (the
+    contract the admission plane ships under)."""
+    pattern = ["a", "b", "a", "a", "b"]
+
+    def direct():
+        svcs = {"a": _SleepSvc("a", 0, dur=0.0), "b": _SleepSvc("b", 5,
+                                                                dur=0.0)}
+        with ServingSystem(Mode.FIKIT) as sys_:
+            for name in pattern:
+                sys_.invoke(svcs[name], n=1)
+            return _normalized(list(sys_.engine.policy.trace))
+
+    def disabled_plane():
+        svcs = {"a": _SleepSvc("a", 0, dur=0.0), "b": _SleepSvc("b", 5,
+                                                                dur=0.0)}
+        qos = {"a": "gold", "b": "bronze"}
+        with ServingSystem(Mode.FIKIT,
+                           admission={"enabled": False}) as sys_:
+            for name in pattern:
+                sys_.submit_async(svcs[name], qos[name])
+            return _normalized(list(sys_.engine.policy.trace))
+
+    return direct() == disabled_plane()
+
+
+def _conservation_ok(stats) -> bool:
+    return all(s["offered"] == (s["admitted"] + s["rejected"]
+                                + s["shed"] + s["requeued"])
+               for s in stats["classes"].values())
+
+
+def main():
+    rng = random.Random(SEED)
+    svcs = {"gold": _SleepSvc("interactive", 0),
+            "silver": _SleepSvc("standard", 2),
+            "bronze": _SleepSvc("batch", 5)}
+    group_time = _calibrate(svcs)
+    classes = _classes(group_time)
+
+    # full-batch group demand per offered request: sum over classes of
+    # share/max_batch — the stability accounting that makes 2x a REAL
+    # overload even after continuous batching does its best
+    batch_weight = sum(SPLIT[c.name] / c.max_batch for c in classes)
+    r_under = UNDER_FACTOR / group_time                 # batch-1 capacity
+    r_over = OVERLOAD_FACTOR / (batch_weight * group_time)
+    d_under = N_UNDER / r_under
+    d_over = N_OVER / r_over
+
+    under_sched = merge_schedules(*[
+        poisson_arrivals(r_under * SPLIT[name], d_under, svcs[name], name,
+                         rng)
+        for name in SPLIT])
+    over_sched = merge_schedules(
+        poisson_arrivals(r_over * SPLIT["gold"], d_over, svcs["gold"],
+                         "gold", rng),
+        poisson_arrivals(r_over * SPLIT["silver"], d_over, svcs["silver"],
+                         "silver", rng),
+        diurnal_arrivals(r_over * SPLIT["bronze"], d_over, svcs["bronze"],
+                         "bronze", rng, depth=0.5))
+
+    under, under_rep, _ = _run_phase(svcs, classes, group_time,
+                                     under_sched, record_events=False)
+    over, over_rep, over_events = _run_phase(svcs, classes, group_time,
+                                             over_sched,
+                                             record_events=True)
+
+    eps = 1e-9
+    hi_ratio = (over["classes"]["gold"]["p99_ms"]
+                / max(under["classes"]["gold"]["p99_ms"], eps))
+    admits = [e for e in over_events if e[1] == "admit"]
+    shed_ordering_ok = (over["priority_inversions"] == 0
+                        and all(e[4] == 0 for e in admits))
+    trace_identical = _trace_differential()
+
+    csv = Csv(("name", "value", "derived"))
+    csv.add("group_time_ms", round(1e3 * group_time, 4))
+    csv.add("offered_under", under_rep.offered,
+            f"{r_under:.0f} rps over {d_under:.1f}s")
+    csv.add("offered_over", over_rep.offered,
+            f"{r_over:.0f} rps over {d_over:.1f}s")
+    for phase, stats in (("under", under), ("over", over)):
+        for cname, s in stats["classes"].items():
+            csv.add(f"{phase}_{cname}_p99_ms", round(s["p99_ms"], 3),
+                    f"p50 {s['p50_ms']:.3f}ms goodput {s['goodput']:.3f} "
+                    f"shed {s['shed']} rejected {s['rejected']}")
+    csv.add("hi_p99_overload_ratio", round(hi_ratio, 3))
+    csv.add("hi_goodput_overload",
+            round(over["classes"]["gold"]["goodput"], 4))
+    csv.add("shed_ordering_ok", shed_ordering_ok,
+            f"priority_inversions {over['priority_inversions']}")
+    csv.add("admission_off_trace_identical", trace_identical)
+    csv.add("feeder_lag_max_ms",
+            round(1e3 * max(under_rep.lag_max_s, over_rep.lag_max_s), 2))
+    csv.emit("serving load (open-loop, admission plane)")
+
+    csv.json_payload = {
+        "smoke": SMOKE,
+        "group_time_ms": 1e3 * group_time,
+        "max_inflight": MAX_INFLIGHT,
+        "overload_factor": OVERLOAD_FACTOR,
+        "class_spec": {c.name: {"priority": c.priority,
+                                "queue_limit": c.queue_limit,
+                                "deadline_s": c.deadline,
+                                "max_batch": c.max_batch}
+                       for c in classes},
+        "underload": {"offered": under_rep.offered,
+                      "rate_rps": r_under,
+                      "wall_s": under_rep.wall_s,
+                      "lag_max_s": under_rep.lag_max_s,
+                      "classes": under["classes"]},
+        "overload": {"offered": over_rep.offered,
+                     "rate_rps": r_over,
+                     "wall_s": over_rep.wall_s,
+                     "lag_max_s": over_rep.lag_max_s,
+                     "priority_inversions": over["priority_inversions"],
+                     "classes": over["classes"]},
+        "hi_p99_overload_ratio": hi_ratio,
+        "hi_goodput_overload": over["classes"]["gold"]["goodput"],
+        "shed_ordering_ok": shed_ordering_ok,
+        "conservation_ok": (_conservation_ok(under)
+                            and _conservation_ok(over)),
+        "admission_off_trace_identical": trace_identical,
+    }
+    return csv
+
+
+if __name__ == "__main__":
+    main()

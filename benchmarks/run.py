@@ -27,6 +27,7 @@ BENCHES = [
     ("preemption", "benchmarks.bench_preemption"),            # Fig 19/20
     ("stability", "benchmarks.bench_stability"),              # Fig 21/T3
     ("roofline", "benchmarks.bench_roofline"),                # deliverable g
+    ("serving_load", "benchmarks.bench_serving_load"),        # admission
     ("overheads", "benchmarks.bench_overheads"),              # Fig 13/14/15
 ]
 

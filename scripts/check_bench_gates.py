@@ -37,6 +37,14 @@ Gate semantics per benchmark (tolerances in benchmarks/bench_gates.json):
   roughly flat as the store grows (no super-linear reload), and a
   cancel storm against low-priority tasks disturbs the high-priority
   JCT by at most the ratio ceiling.
+- serving_load — the admission plane holds its QoS contract under 2x
+  open-loop overload: gold p99 stays within a bounded multiple of its
+  underload baseline, gold goodput (in-SLO completions / offered) stays
+  above the floor, no request is shed or admitted while a higher class
+  has queued work (priority_inversions == 0), per-class conservation
+  holds (offered == admitted + rejected + shed + requeued), and the
+  wired-but-disabled plane's policy decision trace is bit-identical to
+  the no-plane direct invoke path.
 - overheads (nightly; wall clock) — the online measurement loop's
   marginal cost over the offline FIKIT sharing stage (median across
   archs of on-vs-off JCT delta) stays inside the paper's Fig-14 +/-5%
@@ -62,7 +70,7 @@ TOLERANCES = REPO / "benchmarks" / "bench_gates.json"
 
 #: the smoke benches every PR runs; "overheads" joins in the nightly run
 DEFAULT_REQUIRED = ("scheduler_micro", "placement", "disciplines",
-                    "interference", "recovery")
+                    "interference", "recovery", "serving_load")
 ALL_GATED = DEFAULT_REQUIRED + ("overheads",)
 
 Check = Tuple[str, bool, str]          # (gate name, ok, detail)
@@ -170,6 +178,32 @@ def _check_recovery(p: dict, tol: dict) -> List[Check]:
     ]
 
 
+def _check_serving_load(p: dict, tol: dict) -> List[Check]:
+    ratio = p["hi_p99_overload_ratio"]
+    goodput = p["hi_goodput_overload"]
+    return [
+        ("hi-class p99 bounded under overload",
+         ratio <= tol["max_hi_p99_overload_ratio"],
+         f"{ratio:.2f}x <= {tol['max_hi_p99_overload_ratio']}x "
+         f"(gold p99 overload vs underload)"),
+        ("hi-class goodput floor under overload",
+         goodput >= tol["min_hi_goodput"],
+         f"{goodput} >= {tol['min_hi_goodput']}"),
+        ("shed ordering invariant",
+         bool(p["shed_ordering_ok"]) or not tol["require_shed_ordering"],
+         f"priority_inversions "
+         f"{p['overload']['priority_inversions']}, every admit saw "
+         f"empty higher queues"),
+        ("per-class conservation",
+         bool(p["conservation_ok"]) or not tol["require_conservation"],
+         "offered == admitted + rejected + shed + requeued"),
+        ("admission OFF bit-identical to direct invoke",
+         bool(p["admission_off_trace_identical"])
+         or not tol["require_admission_off_trace_identical"],
+         "normalized policy decision traces equal"),
+    ]
+
+
 CHECKERS = {
     "scheduler_micro": _check_scheduler_micro,
     "placement": _check_placement,
@@ -177,6 +211,7 @@ CHECKERS = {
     "interference": _check_interference,
     "overheads": _check_overheads,
     "recovery": _check_recovery,
+    "serving_load": _check_serving_load,
 }
 
 

@@ -101,6 +101,64 @@ class HookClient:
             self.engine.task_end(inst)
         return state, time.perf_counter() - t_begin
 
+    # -------------------------------------------------------------- async
+    def run_async(self, state, on_done, deadline: Optional[float] = None,
+                  instance: Optional[int] = None) -> int:
+        """Non-blocking counterpart of ``run``: execute one task (all
+        segments) by chaining the engine's completion callbacks instead
+        of parking this thread on a Future per kernel. Returns the task
+        instance id immediately; ``on_done(final_state, jct, error)``
+        fires exactly once from a device thread (no engine lock held)
+        when the task retires — ``error`` is the first exception
+        (``JobCancelled`` for an ops-plane cancel, the payload's own
+        exception otherwise) and ``final_state`` is None on error.
+
+        This is the admission plane's submit path: one dispatcher thread
+        can keep hundreds of invocations in flight because nothing here
+        ever blocks (EXCLUSIVE mode is the exception — its ``task_begin``
+        admission wait still parks the caller)."""
+        inst = next(_instances) if instance is None else instance
+        t_begin = time.perf_counter()
+        abs_deadline = None if deadline is None else t_begin + deadline
+        segments = self.segments
+        self.engine.task_begin(inst, self.key, self.priority)
+
+        def finish(result, error) -> None:
+            self.engine.task_end(inst)
+            on_done(result, time.perf_counter() - t_begin, error)
+
+        def step(i: int, state) -> None:
+            seg = segments[i]
+            kid = (seg.kernel_id(state) if self.identify
+                   else KernelID(seg.name))
+            req = KernelRequest(task_key=self.key, kernel_id=kid,
+                                priority=self.priority,
+                                task_instance=inst, seq_index=i,
+                                payload=_bind(seg.fn, state),
+                                deadline=abs_deadline)
+
+            def completed(req, out, t0, t1, err) -> None:
+                if err is not None:
+                    finish(None, err)
+                    return
+                try:
+                    if seg.host_work is not None:
+                        out = seg.host_work(out)
+                    if i + 1 < len(segments):
+                        step(i + 1, out)
+                    else:
+                        finish(out, None)
+                except BaseException as e:   # host_work / next-submit fail
+                    finish(None, e)
+
+            self.engine.submit(req, on_complete=completed)
+
+        try:
+            step(0, state)
+        except BaseException as e:     # first submit failed synchronously
+            finish(None, e)
+        return inst
+
     # ----------------------------------------------------------- measurement
     def measure_run(self, state, profiler: Profiler) -> Tuple[object, float]:
         """One exclusive measured run (paper Fig 6): per-kernel duration via

@@ -138,6 +138,7 @@ class WallClockEngine:
                                                for _ in range(devices)]
         self._records: List[ExecRecord] = []
         self._futures: Dict[int, Future] = {}      # req.uid -> Future
+        self._done_cbs: Dict[int, object] = {}     # req.uid -> on_complete
         self._admit_cond = threading.Condition(self._lock)
         self._admitted: set = set()
         self._stop = False
@@ -203,12 +204,14 @@ class WallClockEngine:
                 break
             req, fut, filler = item
             t0 = time.perf_counter()
+            out = err = None
             try:
                 out = req.payload()
                 t1 = time.perf_counter()
                 fut.set_result((out, t0, t1))
             except BaseException as e:  # pragma: no cover
                 t1 = time.perf_counter()
+                err = e
                 fut.set_exception(e)
             with self._lock:
                 if self._on_kernel_complete is not None:
@@ -221,6 +224,13 @@ class WallClockEngine:
                     self.placement.fill_complete(device)
                 self.placement.kernel_end(req.task_instance, req.kernel_id,
                                           start=t0, end=t1)
+                cb = self._done_cbs.pop(req.uid, None)
+            if cb is not None:
+                # completion callback AFTER the boundary's scheduling
+                # side-effects, OUTSIDE the lock: the callee may submit
+                # the stream's next request or retire the task without
+                # parking a thread on the Future (admission-plane seam)
+                cb(req, out, t0, t1, err)
 
     # ----------------------------------------------------------- task control
     def task_begin(self, instance: int, key: TaskKey, priority: int) -> None:
@@ -246,21 +256,36 @@ class WallClockEngine:
                 self._admit_cond.notify_all()
 
     # --------------------------------------------------------------- routing
-    def submit(self, req: KernelRequest) -> Future:
+    def submit(self, req: KernelRequest, on_complete=None) -> Future:
         """Hook-client -> scheduler message. Returns a Future of
-        (output, start, end)."""
+        (output, start, end).
+
+        ``on_complete`` (``fn(req, out, start, end, err)`` or None) is
+        the non-blocking completion seam: the device thread calls it
+        AFTER the kernel's ``kernel_end`` scheduling side-effects, with
+        no engine lock held, so the callee can chain the stream's next
+        submit (or ``task_end``) without a thread ever parking on the
+        Future. A request purged by an ops-plane ``cancel`` (or
+        submitted after one) gets its callback invoked with
+        ``err=JobCancelled`` instead."""
         self._check_running(f"submit({req.task_instance}:{req.seq_index})")
         fut: Future = Future()
         req.submit_time = time.perf_counter()
+        cancelled = None
         with self._lock:
             if req.task_instance in self._cancelled_insts:
                 # the task was cancelled under this client's feet:
                 # fail fast instead of queueing work that can never run
-                fut.set_exception(JobCancelled(
-                    f"task {req.task_instance} was cancelled"))
-                return fut
-            self._futures[req.uid] = fut
-            self.placement.submit(req)
+                cancelled = JobCancelled(
+                    f"task {req.task_instance} was cancelled")
+                fut.set_exception(cancelled)
+            else:
+                self._futures[req.uid] = fut
+                if on_complete is not None:
+                    self._done_cbs[req.uid] = on_complete
+                self.placement.submit(req)
+        if cancelled is not None and on_complete is not None:
+            on_complete(req, None, None, None, cancelled)
         return fut
 
     # ------------------------------------------------------- lifecycle verbs
@@ -268,19 +293,26 @@ class WallClockEngine:
         """Cancel a task: purge its queued requests (their Futures fail
         with ``JobCancelled`` so blocked clients unblock), let in-flight
         kernels finish. Returns the number of purged requests."""
+        cbs = []
         with self._lock:
             purged, admitted = self.placement.cancel(instance)
             self._cancelled_insts.add(instance)
             for r in purged:
+                err = JobCancelled(
+                    f"task {instance} cancelled: kernel "
+                    f"{r.seq_index} purged before launch")
                 fut = self._futures.pop(r.uid, None)
                 if fut is not None:
-                    fut.set_exception(JobCancelled(
-                        f"task {instance} cancelled: kernel "
-                        f"{r.seq_index} purged before launch"))
+                    fut.set_exception(err)
+                cb = self._done_cbs.pop(r.uid, None)
+                if cb is not None:
+                    cbs.append((cb, r, err))
             if admitted:                       # EXCLUSIVE: next waiter
                 self._admitted.update(admitted)
                 self._admit_cond.notify_all()
-            return len(purged)
+        for cb, r, err in cbs:   # outside the lock, like every completion
+            cb(r, None, None, None, err)
+        return len(purged)
 
     def pause(self, instance: int) -> bool:
         """Pause a task at its next kernel boundary (True if it took

@@ -19,10 +19,17 @@ plane's operator CLI.
     ... serve pause  3 --jobstore /tmp/fikit.db
     ... serve resume 3 --jobstore /tmp/fikit.db --device 1
     ... serve drain    --jobstore /tmp/fikit.db
+
+    # open-loop traffic through the admission plane (Poisson arrivals,
+    # optionally diurnal-modulated low-priority; per-QoS-class latency,
+    # goodput, shed/reject counts):
+    ... serve load --high qwen3-4b --low mamba2-2.7b \
+        --rate 30 --duration 2 --deadline 0.5 --diurnal
 """
 from __future__ import annotations
 
 import argparse
+import random
 import statistics as st
 import sys as _sys
 
@@ -30,7 +37,9 @@ from repro.config import get_config
 from repro.core.jobstore import JobStore
 from repro.core.queues import QUEUE_DISCIPLINES
 from repro.core.scheduler import Mode
-from repro.serving import InferenceService, ServingSystem
+from repro.serving import InferenceService, QoSClass, ServingSystem
+from repro.serving.loadgen import (diurnal_arrivals, merge_schedules,
+                                   poisson_arrivals, replay)
 
 
 def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
@@ -116,9 +125,71 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
     return out
 
 
+def serve_load(high: str, low: str, mode: str = "fikit",
+               rate: float = 20.0, duration: float = 2.0,
+               hi_share: float = 0.3, deadline: float = None,
+               diurnal: bool = False, speed: float = 1.0,
+               measure_runs: int = 3, devices: int = 1, seed: int = 0,
+               verbose: bool = True):
+    """Open-loop traffic through the admission plane: the high service
+    maps to the ``gold`` QoS class (FIKIT Q0), the low service to
+    ``bronze`` (Q5). Arrivals are drawn up front (Poisson at ``rate``
+    req/s total, split by ``hi_share``; ``diurnal=True`` modulates the
+    bronze rate sinusoidally) and replayed without ever waiting on
+    completions — offered load is independent of service capacity, so
+    pushing ``rate`` past capacity exercises backpressure (rejects) and,
+    with ``deadline`` set, SLO shedding. The measurement phase's JCTs
+    prime the plane's service-time EMA, so shedding is informed from the
+    first request."""
+    hi = InferenceService(get_config(high).reduced(), priority=0,
+                          batch=1, seq=32)
+    lo = InferenceService(get_config(low).reduced(), priority=5,
+                          batch=2, seq=32)
+    classes = (QoSClass("gold", priority=0, queue_limit=64,
+                        deadline=deadline, max_batch=4),
+               QoSClass("bronze", priority=5, queue_limit=256,
+                        deadline=None, max_batch=8))
+    rng = random.Random(seed)
+    with ServingSystem(Mode(mode), measure_runs=measure_runs,
+                       devices=devices,
+                       admission={"classes": classes}) as sys_:
+        meas_hi = sys_.onboard(hi)
+        meas_lo = sys_.onboard(lo)
+        sys_.admission.note_latency(hi, st.mean(meas_hi))
+        sys_.admission.note_latency(lo, st.mean(meas_lo))
+        gen_lo = diurnal_arrivals if diurnal else poisson_arrivals
+        sched = merge_schedules(
+            poisson_arrivals(rate * hi_share, duration, hi, "gold", rng),
+            gen_lo(rate * (1 - hi_share), duration, lo, "bronze", rng))
+        rep = replay(sys_.admission, sched, speed=speed,
+                     keep_tickets=False)
+        sys_.admission.drain(timeout=120)
+        stats = sys_.admission.stats()
+    out = {
+        "mode": mode,
+        "offered": rep.offered,
+        "rate_rps": rate,
+        "wall_s": round(rep.wall_s, 3),
+        "feeder_lag_max_ms": round(1e3 * rep.lag_max_s, 2),
+        "priority_inversions": stats["priority_inversions"],
+    }
+    for cname, s in stats["classes"].items():
+        out[f"{cname}_offered"] = s["offered"]
+        out[f"{cname}_completed"] = s["completed"]
+        out[f"{cname}_rejected"] = s["rejected"]
+        out[f"{cname}_shed"] = s["shed"]
+        out[f"{cname}_p50_ms"] = round(s["p50_ms"], 2)
+        out[f"{cname}_p99_ms"] = round(s["p99_ms"], 2)
+        out[f"{cname}_goodput"] = round(s["goodput"], 4)
+    if verbose:
+        for k, v in out.items():
+            print(f"  {k}: {v}")
+    return out
+
+
 #: CLI verbs; anything else as the first argv token means the legacy
 #: flat form, which is rewritten to ``submit`` for back-compat
-VERBS = ("submit", "status", "cancel", "pause", "resume", "drain")
+VERBS = ("submit", "load", "status", "cancel", "pause", "resume", "drain")
 
 
 def _cmd_submit(args) -> None:
@@ -193,6 +264,28 @@ def main(argv=None):
                     help="first re-run invocations a previous run left "
                          "incomplete in the jobstore")
 
+    lp = sub.add_parser("load", help="open-loop Poisson/diurnal traffic "
+                                     "through the admission plane")
+    lp.add_argument("--high", default="qwen3-4b")
+    lp.add_argument("--low", default="mamba2-2.7b")
+    lp.add_argument("--mode", default="fikit",
+                    choices=[m.value for m in Mode])
+    lp.add_argument("--rate", type=float, default=20.0,
+                    help="total offered request rate (req/s)")
+    lp.add_argument("--duration", type=float, default=2.0,
+                    help="schedule length (s)")
+    lp.add_argument("--hi-share", type=float, default=0.3,
+                    help="fraction of offered load in the gold class")
+    lp.add_argument("--deadline", type=float, default=None,
+                    help="gold-class SLO budget (s); enables SLO-aware "
+                         "shedding")
+    lp.add_argument("--diurnal", action="store_true",
+                    help="modulate the bronze rate sinusoidally")
+    lp.add_argument("--speed", type=float, default=1.0,
+                    help="replay speedup (2.0 = twice as fast)")
+    lp.add_argument("--devices", type=int, default=1)
+    lp.add_argument("--seed", type=int, default=0)
+
     st_ = sub.add_parser("status", help="print the store's job table")
     _add_store_arg(st_)
     for verb, jobbed in (("cancel", True), ("pause", True),
@@ -209,6 +302,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.verb == "submit":
         _cmd_submit(args)
+    elif args.verb == "load":
+        serve_load(args.high, args.low, args.mode, rate=args.rate,
+                   duration=args.duration, hi_share=args.hi_share,
+                   deadline=args.deadline, diurnal=args.diurnal,
+                   speed=args.speed, devices=args.devices, seed=args.seed)
     elif args.verb == "status":
         _cmd_status(args)
     else:

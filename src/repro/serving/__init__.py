@@ -1,1 +1,3 @@
 from repro.serving.engine import InferenceService, ServingSystem  # noqa: F401
+from repro.serving.admission import (  # noqa: F401
+    AdmissionPlane, AdmissionTicket, QoSClass, DEFAULT_CLASSES)

@@ -21,6 +21,7 @@ anywhere.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from typing import Dict, List, Optional
@@ -37,6 +38,9 @@ from repro.core.scheduler import Mode
 from repro.core.task import TaskKey
 from repro.models import api
 from repro.models.segmentation import SegmentedService
+from repro.serving.admission import AdmissionPlane, coerce_admission
+
+logger = logging.getLogger(__name__)
 
 
 class InferenceService:
@@ -71,7 +75,7 @@ class ServingSystem:
     def __init__(self, mode: Mode = Mode.FIKIT, measure_runs: int = 5,
                  devices: int = 1, discipline: str = "least_loaded",
                  queue_discipline: str = "fifo", online_measure=False,
-                 interference=None, jobstore=None):
+                 interference=None, jobstore=None, admission=None):
         """``online_measure`` (False / True / ``repro.core.online.
         OnlineConfig``) enables live SK/SG refinement during the sharing
         phase: every dispatched segment's device-time bracket feeds
@@ -97,7 +101,16 @@ class ServingSystem:
         one. Wall-clock recovery is invocation-level: ``recover()``
         re-runs each incomplete invocation from its service definition
         (payloads are live callables, not replayable records), unlike
-        the simulator's kernel-exact ``SimScheduler.recover``."""
+        the simulator's kernel-exact ``SimScheduler.recover``.
+
+        ``admission`` (None / True / ``QoSClass`` sequence / dict of
+        ``repro.serving.admission.AdmissionPlane`` kwargs) attaches the
+        async admission plane: per-tenant QoS classes mapped onto FIKIT
+        priorities, bounded queues with backpressure, SLO-aware
+        shedding, and continuous batching, served by one dispatcher
+        thread over the non-blocking submit path (``submit_async``).
+        None (default) leaves the direct ``invoke`` path — and the
+        engine's decision traces — exactly as before."""
         self.profiles = ProfiledData()
         self.mode = mode
         self.measure_runs = measure_runs
@@ -120,6 +133,12 @@ class ServingSystem:
         self._snap_commits = 0
         self._poll_stop: Optional[threading.Event] = None
         self._poller: Optional[threading.Thread] = None
+        self._poll_join_timeout = 5.0
+        self.rejected_controls = 0     # unapplicable operator verbs consumed
+        self.poller_deaths = 0         # unexpected poller-killing errors
+        # admission plane (built per start(); None = direct-invoke only)
+        self._admission_spec = coerce_admission(admission)
+        self.admission: Optional[AdmissionPlane] = None
 
     def start(self) -> "ServingSystem":
         """Build + start a fresh engine. Clears any final-stats snapshot a
@@ -148,30 +167,52 @@ class ServingSystem:
         if self.jobstore is not None:
             self._poll_stop = threading.Event()
             self._poller = threading.Thread(target=self._poll_controls,
+                                            args=(self._poll_stop,),
                                             daemon=True,
                                             name="fikit-ops-poller")
             self._poller.start()
+        if self._admission_spec is not None:
+            self.admission = AdmissionPlane(self,
+                                            **self._admission_spec).start()
         return self
 
     def stop(self) -> None:
         """Stop the engine (idempotent; a no-op before ``start()``). With
         a jobstore attached, also stops the control poller and writes a
-        final profile snapshot + WAL checkpoint."""
+        final profile snapshot + WAL checkpoint — UNLESS the poller
+        failed to join in time: a wedged verb handler could still be
+        writing ``snapshot_profiles`` against the store mid-checkpoint,
+        so the final snapshot is skipped with a warning instead of
+        racing it."""
         if self._stopped or self.engine is None:
             self._stopped = True
             return
         self._stopped = True
+        if self.admission is not None:
+            # drain the plane first: queued work resolves (REQUEUED) and
+            # in-flight groups finish while the device threads still run
+            self.admission.drain(timeout=5)
+            self.admission.stop()
+        poller_wedged = False
         if self._poll_stop is not None:
             self._poll_stop.set()
-            self._poller.join(timeout=5)
+            self._poller.join(timeout=self._poll_join_timeout)
+            poller_wedged = self._poller.is_alive()
             self._poll_stop = None
             self._poller = None
         self.engine.stop()
         if self.engine.online is not None and self.engine.online.config.enabled:
             self._final_online_stats = self.engine.online.stats()  # post-flush
         if self.jobstore is not None:
-            self.jobstore.snapshot_profiles(self.profiles)
-            self.jobstore.checkpoint()
+            if poller_wedged:
+                logger.warning(
+                    "ops poller did not exit within %.1fs — skipping the "
+                    "final profile snapshot/checkpoint so a wedged verb "
+                    "handler cannot race the store shutdown",
+                    self._poll_join_timeout)
+            else:
+                self.jobstore.snapshot_profiles(self.profiles)
+                self.jobstore.checkpoint()
 
     def __enter__(self):
         return self.start()
@@ -275,22 +316,97 @@ class ServingSystem:
                     self.deadline_misses += 1
         return jct
 
+    # ------------------------------------------------------ async admission
+    def _invoke_async(self, service: InferenceService, on_done,
+                      deadline: Optional[float] = None,
+                      job_id: Optional[int] = None) -> int:
+        """Non-blocking ``_invoke_one``: submits through
+        ``HookClient.run_async`` and returns the instance id at once.
+        ``on_done(jct, error)`` fires from a device thread when the
+        invocation retires — ``(jct, None)`` on success, ``(None, None)``
+        when an ops-plane cancel hit it (counted like the sync path),
+        ``(None, error)`` when a payload failed. Shares the jobstore and
+        deadline-stat bookkeeping with the blocking path."""
+        if self.engine is None:
+            raise RuntimeError("ServingSystem._invoke_async() before "
+                               "start() — the engine does not exist yet")
+        if self._stopped:
+            raise RuntimeError("ServingSystem._invoke_async() after stop()")
+        inst = new_instance()
+        if self.jobstore is not None:
+            job_id = self.jobstore.record_submit(
+                job_id, service.key, service.priority,
+                n_kernels=len(service.svc.segments),
+                deadline=deadline, state=_js.RUNNING)
+            with self._stats_lock:
+                self._job_of_inst[inst] = job_id
+                self._inst_of_job[job_id] = inst
+        cl = service.client(self.engine)
+        state = service.svc.make_input()
+
+        def done(result, jct, error) -> None:
+            if self.jobstore is not None:
+                with self._stats_lock:
+                    self._job_of_inst.pop(inst, None)
+                    self._inst_of_job.pop(job_id, None)
+            if isinstance(error, JobCancelled):
+                with self._stats_lock:
+                    self.cancelled_invocations += 1
+                on_done(None, None)
+                return
+            if error is not None:
+                on_done(None, error)
+                return
+            if self.jobstore is not None:
+                self.jobstore.record_state(job_id, _js.DONE)
+            if deadline is not None:
+                with self._stats_lock:
+                    self.deadlines_tagged += 1
+                    if jct > deadline:
+                        self.deadline_misses += 1
+            on_done(jct, None)
+
+        cl.run_async(state, done, deadline=deadline, instance=inst)
+        return inst
+
+    def submit_async(self, service: InferenceService, qos: str,
+                     deadline=...):
+        """Offer one invocation to the admission plane (see
+        ``repro.serving.admission``); returns its ``AdmissionTicket``
+        immediately. Requires ``admission=`` at construction."""
+        if self.admission is None:
+            raise RuntimeError(
+                "ServingSystem.submit_async() needs the admission plane — "
+                "construct with admission=True (or QoS classes)")
+        if deadline is ...:
+            return self.admission.submit(service, qos)
+        return self.admission.submit(service, qos, deadline=deadline)
+
     def invoke_concurrent(self, plans) -> Dict[str, List[float]]:
         """plans: list of (name, service, n, interval, start_delay) tuples,
         optionally extended with a 6th ``deadline`` element (relative
         seconds per invocation). Runs each plan in its own client thread;
-        returns JCTs per name."""
+        returns JCTs per name.
+
+        A runner thread that raises (a failing payload propagates out of
+        ``invoke``) no longer dies silently leaving its name missing
+        from the result — every plan's exception is captured and the
+        first one (in plan order) re-raised after all threads joined."""
         if self.engine is None or self._stopped:
             raise RuntimeError("ServingSystem.invoke_concurrent() outside "
                                "a start()/stop() window")
         out: Dict[str, List[float]] = {}
+        errors: Dict[str, BaseException] = {}
         threads = []
 
         def runner(name, service, n, interval, delay, deadline=None):
             if delay > 0:
                 time.sleep(delay)
-            out[name] = self.invoke(service, n=n, interval=interval,
-                                    deadline=deadline)
+            try:
+                out[name] = self.invoke(service, n=n, interval=interval,
+                                        deadline=deadline)
+            except BaseException as e:
+                errors[name] = e
 
         for plan in plans:
             threads.append(threading.Thread(target=runner, args=plan))
@@ -298,6 +414,10 @@ class ServingSystem:
             t.start()
         for t in threads:
             t.join()
+        if errors:
+            for plan in plans:           # re-raise the FIRST, plan order
+                if plan[0] in errors:
+                    raise errors[plan[0]]
         return out
 
     # ------------------------------------------------------------ ops plane
@@ -310,32 +430,49 @@ class ServingSystem:
         if job is not None:
             self.jobstore.record_completion(job, req.seq_index)
 
-    def _poll_controls(self) -> None:
+    def _poll_controls(self, stop_ev: threading.Event) -> None:
         """Poller thread: consume operator verbs from the store's control
         queue (written by the serve CLI against the same store file) and
-        checkpoint profiles whenever an online epoch committed."""
-        while not self._poll_stop.wait(0.05):
-            for verb, job_id, arg in self.jobstore.pop_controls():
-                try:
-                    if verb == "cancel":
-                        self.cancel(job_id)
-                    elif verb == "pause":
-                        self.pause(job_id)
-                    elif verb == "resume":
-                        self.resume(job_id,
-                                    int(arg) if arg is not None else None)
-                    elif verb == "drain":
-                        self.drain()
-                except Exception:
-                    # an unapplicable operator verb (unknown/finished job)
-                    # must not kill the poller; the store row stays
-                    # consumed and status shows the job's actual state
-                    pass
-            eng = self.engine
-            if (eng is not None and eng.online is not None
-                    and eng.online.commits != self._snap_commits):
-                self._snap_commits = eng.online.commits
-                self.jobstore.snapshot_profiles(self.profiles)
+        checkpoint profiles whenever an online epoch committed.
+
+        Only the EXPECTED unapplicable-verb errors (``ValueError`` for an
+        unknown/finished job, ``KeyError`` for a vanished instance) are
+        absorbed — counted in ``rejected_controls`` and surfaced via
+        ``status()``. Anything else is a real bug (e.g. a store error
+        mid-``cancel``): it is logged with traceback, counted in
+        ``poller_deaths``, and kills the poller rather than vanishing."""
+        try:
+            while not stop_ev.wait(0.05):
+                for verb, job_id, arg in self.jobstore.pop_controls():
+                    try:
+                        if verb == "cancel":
+                            self.cancel(job_id)
+                        elif verb == "pause":
+                            self.pause(job_id)
+                        elif verb == "resume":
+                            self.resume(job_id,
+                                        int(arg) if arg is not None else None)
+                        elif verb == "drain":
+                            self.drain()
+                        else:
+                            raise ValueError(f"unknown control verb {verb!r}")
+                    except (ValueError, KeyError):
+                        # unapplicable operator verb (unknown/finished
+                        # job): the row stays consumed, status() shows
+                        # the rejection count + the job's actual state
+                        with self._stats_lock:
+                            self.rejected_controls += 1
+                eng = self.engine
+                if (eng is not None and eng.online is not None
+                        and eng.online.commits != self._snap_commits):
+                    self._snap_commits = eng.online.commits
+                    self.jobstore.snapshot_profiles(self.profiles)
+        except Exception:
+            with self._stats_lock:
+                self.poller_deaths += 1
+            logger.exception("ops-control poller died on an unexpected "
+                             "error; operator verbs will no longer apply "
+                             "to this serving process")
 
     def _live_instance(self, job_id: int) -> int:
         with self._stats_lock:
@@ -385,10 +522,17 @@ class ServingSystem:
         return drained
 
     def status(self) -> dict:
-        """Operator summary: job rows by state + engine counters."""
+        """Operator summary: job rows by state + engine counters +
+        control-poller health + per-QoS-class admission stats."""
         out = {"mode": self.mode.value,
                "devices": self.devices,
-               "cancelled_invocations": self.cancelled_invocations}
+               "cancelled_invocations": self.cancelled_invocations,
+               "rejected_controls": self.rejected_controls,
+               "poller_deaths": self.poller_deaths,
+               "poller_alive": (self._poller is not None
+                                and self._poller.is_alive())}
+        if self.admission is not None:
+            out["admission"] = self.admission.stats()
         if self.jobstore is not None:
             jobs = self.jobstore.jobs()
             out["jobs"] = [{"job_id": j.job_id, "process": j.key.process,

@@ -1,0 +1,462 @@
+"""Admission plane: QoS classes, backpressure, SLO shedding, continuous
+batching, the non-blocking submit path, and the admission-OFF trace
+differential (the bit-identity contract for this PR).
+
+Deterministic tests drive ``AdmissionPlane`` in manual-pump mode
+(``dispatcher=False``) against a stub system with a controllable clock;
+integration tests run the real ``ServingSystem``/``WallClockEngine``
+with fake (no-JAX) services.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.client import HookClient
+from repro.core.executor import WallClockEngine
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode
+from repro.core.task import TaskKey
+from repro.serving import (AdmissionPlane, QoSClass, ServingSystem)
+from repro.serving.admission import (
+    CANCELLED, COMPLETED, FAILED, REJECTED, REQUEUED, SHED,
+    coerce_admission)
+from repro.serving.loadgen import (
+    diurnal_arrivals, merge_schedules, poisson_arrivals, replay)
+
+pytestmark = pytest.mark.fast
+
+
+# ---------------------------------------------------------------------------
+# fixtures: fake services, stub system, fake clock
+# ---------------------------------------------------------------------------
+class _FakeSvc:
+    """Duck-typed InferenceService: fake payloads, no models, no JAX."""
+
+    class _Seg:
+        def __init__(self, name, fn=None):
+            self.name = name
+            self.fn = fn or (lambda state: state)
+            self.host_work = None
+
+        def kernel_id(self, state):
+            return KernelID(self.name)
+
+    class _Svc:
+        def __init__(self, segs):
+            self.segments = segs
+
+        def make_input(self):
+            return 0
+
+    def __init__(self, name="fake", priority=0, n=3, fns=None):
+        self.key = TaskKey(name)
+        self.priority = priority
+        fns = fns or [None] * n
+        self.svc = self._Svc([self._Seg(f"{name}/s{i}", fns[i])
+                              for i in range(n)])
+
+    def client(self, engine, identify=True):
+        return HookClient(engine, self.key, self.priority,
+                          self.svc.segments, identify=identify)
+
+
+class _FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class _StubSystem:
+    """Synchronous engine stand-in: every group completes immediately
+    with a scripted JCT (or error), so plane dispatch is deterministic."""
+
+    def __init__(self, jct=1.0, error=None, clock=None):
+        self.jct = jct
+        self.error = error
+        self.clock = clock
+        self.groups = []          # (service, rel_deadline) per admit
+
+    def _invoke_async(self, service, on_done, deadline=None):
+        self.groups.append((service, deadline))
+        if self.clock is not None and self.jct is not None:
+            self.clock.t += self.jct           # time passes while serving
+        if self.error is not None:
+            on_done(None, self.error)
+        else:
+            on_done(self.jct, None)
+        return 0
+
+
+def make_plane(system=None, classes=None, clock=None, **kw):
+    classes = classes or (QoSClass("gold", 0, queue_limit=4, max_batch=2),
+                          QoSClass("bronze", 5, queue_limit=4, max_batch=4))
+    clock = clock or _FakeClock()
+    system = system or _StubSystem(clock=clock)
+    kw.setdefault("dispatcher", False)
+    kw.setdefault("record_events", True)
+    return AdmissionPlane(system, classes, clock=clock, **kw), system, clock
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+def test_qos_class_validation():
+    with pytest.raises(ValueError, match="Q0..Q9"):
+        QoSClass("x", priority=10)
+    with pytest.raises(ValueError, match="queue_limit"):
+        QoSClass("x", priority=0, queue_limit=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        QoSClass("x", priority=0, max_batch=0)
+    with pytest.raises(ValueError, match="duplicate"):
+        AdmissionPlane(_StubSystem(), (QoSClass("a", 0), QoSClass("a", 1)))
+    with pytest.raises(ValueError, match="at least one"):
+        AdmissionPlane(_StubSystem(), ())
+    with pytest.raises(ValueError, match="max_inflight"):
+        AdmissionPlane(_StubSystem(), (QoSClass("a", 0),), max_inflight=0)
+
+
+def test_unknown_qos_name_raises():
+    plane, _, _ = make_plane()
+    with pytest.raises(ValueError, match="unknown QoS class"):
+        plane.submit(_FakeSvc(), "platinum")
+
+
+def test_coerce_admission_specs():
+    assert coerce_admission(None) is None
+    assert coerce_admission(True) == {}
+    c = QoSClass("solo", 1)
+    assert coerce_admission(c) == {"classes": (c,)}
+    assert coerce_admission([c]) == {"classes": (c,)}
+    assert coerce_admission({"max_inflight": 2}) == {"max_inflight": 2}
+    with pytest.raises(TypeError, match="admission="):
+        coerce_admission(42)
+
+
+# ---------------------------------------------------------------------------
+# backpressure + requeue signals
+# ---------------------------------------------------------------------------
+def test_bounded_queue_rejects_with_retry_after():
+    plane, system, clock = make_plane()
+    svc = _FakeSvc()
+    plane.note_latency(svc, 2.0)              # EMA known -> hint available
+    tickets = [plane.submit(svc, "gold") for _ in range(6)]
+    # queue_limit=4: the 5th and 6th submit trip backpressure immediately
+    assert [t.outcome for t in tickets[:4]] == [None] * 4
+    for t in tickets[4:]:
+        assert t.outcome == REJECTED
+        assert not t.requeue                  # overload, not a drain signal
+        assert t.retry_after is not None and t.retry_after > 0
+    plane.pump()
+    assert all(t.outcome == COMPLETED for t in tickets[:4])
+    s = plane.stats()["classes"]["gold"]
+    assert (s["offered"], s["admitted"], s["rejected"]) == (6, 4, 2)
+
+
+def test_stop_requeues_leftover_tickets():
+    plane, system, clock = make_plane()
+    svc = _FakeSvc()
+    tickets = [plane.submit(svc, "bronze") for _ in range(3)]
+    plane.stop()                              # never pumped: still queued
+    assert all(t.outcome == REQUEUED and t.requeue for t in tickets)
+    late = plane.submit(svc, "bronze")        # post-stop: reject + requeue
+    assert late.outcome == REJECTED and late.requeue
+    s = plane.stats()["classes"]["bronze"]
+    assert (s["offered"], s["requeued"], s["rejected"]) == (4, 3, 1)
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware shedding
+# ---------------------------------------------------------------------------
+def test_hopeless_deadline_is_shed_cold_service_is_not():
+    plane, system, clock = make_plane()
+    hot, cold = _FakeSvc("hot"), _FakeSvc("cold")
+    plane.note_latency(hot, 5.0)              # known service time: 5s
+    t_hopeless = plane.submit(hot, "gold", deadline=1.0)   # 1s budget
+    t_fine = plane.submit(hot, "gold", deadline=10.0)
+    t_cold = plane.submit(cold, "gold", deadline=0.001)    # never observed
+    plane.pump()
+    assert t_hopeless.outcome == SHED
+    assert t_fine.outcome == COMPLETED
+    assert t_cold.outcome == COMPLETED        # cold is never shed
+    s = plane.stats()["classes"]["gold"]
+    assert (s["offered"], s["admitted"], s["shed"]) == (3, 2, 1)
+    assert s["offered"] == s["admitted"] + s["shed"] + s["rejected"]
+
+
+def test_goodput_counts_only_in_deadline_completions():
+    clock = _FakeClock()
+    system = _StubSystem(jct=2.0, clock=clock)
+    plane, _, _ = make_plane(system=system, clock=clock)
+    svc = _FakeSvc()
+    t_miss = plane.submit(svc, "gold", deadline=1.0)   # completes at 2.0
+    t_hit = plane.submit(svc, "gold", deadline=50.0)
+    plane.pump()
+    assert t_miss.outcome == COMPLETED and t_hit.outcome == COMPLETED
+    s = plane.stats()["classes"]["gold"]
+    assert s["completed"] == 2
+    assert s["goodput"] == pytest.approx(0.5)   # 1 of 2 offered in-SLO
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+def test_consecutive_same_service_coalesce_into_one_stream():
+    plane, system, clock = make_plane()
+    a, b = _FakeSvc("a"), _FakeSvc("b")
+    ts = [plane.submit(a, "bronze") for _ in range(3)]
+    ts += [plane.submit(b, "bronze")]
+    plane.pump()
+    # 3 a-invocations coalesced into ONE engine task stream, b alone
+    assert [svc.key.process for svc, _ in system.groups] == ["a", "b"]
+    assert [t.batch_size for t in ts] == [3, 3, 3, 1]
+    assert all(t.outcome == COMPLETED for t in ts)
+    s = plane.stats()["classes"]["bronze"]
+    assert s["admitted"] == 4 and s["completed"] == 4
+
+
+def test_batch_respects_max_batch_and_service_boundary():
+    plane, system, clock = make_plane(
+        classes=(QoSClass("only", 0, queue_limit=16, max_batch=2),))
+    a, b = _FakeSvc("a"), _FakeSvc("b")
+    for svc in (a, a, a, b, a):
+        plane.submit(svc, "only")
+    plane.pump()
+    # a,a | a | b | a — max_batch=2 splits the head run; b breaks the run
+    assert [svc.key.process for svc, _ in system.groups] == \
+        ["a", "a", "b", "a"]
+
+
+def test_batch_deadline_is_earliest_member_deadline():
+    plane, system, clock = make_plane()
+    svc = _FakeSvc()
+    plane.submit(svc, "gold", deadline=9.0)
+    plane.submit(svc, "gold", deadline=3.0)
+    plane.pump()
+    assert len(system.groups) == 1
+    _, rel = system.groups[0]
+    assert rel == pytest.approx(3.0)          # min member budget governs
+
+
+# ---------------------------------------------------------------------------
+# strict-priority dispatch / shed ordering
+# ---------------------------------------------------------------------------
+def test_strict_priority_no_inversion_and_event_log_proves_it():
+    plane, system, clock = make_plane(max_inflight=1)
+    hi, lo = _FakeSvc("hi"), _FakeSvc("lo")
+    for _ in range(3):
+        plane.submit(lo, "bronze")
+    for _ in range(3):
+        plane.submit(hi, "gold")
+    plane.pump()
+    assert plane.priority_inversions == 0
+    admits = [e for e in plane.events if e[1] == "admit"]
+    # every admit recorded zero queued requests in any higher class
+    assert all(e[4] == 0 for e in admits)
+    # and gold drained before the first bronze admit
+    first_bronze = next(i for i, e in enumerate(admits) if e[2] == "bronze")
+    assert all(e[2] == "gold" for e in admits[:first_bronze])
+
+
+def test_failed_group_resolves_failed():
+    clock = _FakeClock()
+    system = _StubSystem(error=RuntimeError("boom"), clock=clock)
+    plane, _, _ = make_plane(system=system, clock=clock)
+    t = plane.submit(_FakeSvc(), "gold")
+    plane.pump()
+    assert t.outcome == FAILED
+    assert isinstance(t.error, RuntimeError)
+    assert plane.stats()["classes"]["gold"]["failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the non-blocking client path (run_async / _invoke_async)
+# ---------------------------------------------------------------------------
+def test_run_async_matches_blocking_run():
+    svc = _FakeSvc(n=4)
+    done = threading.Event()
+    got = {}
+    with WallClockEngine(Mode.FIKIT) as eng:
+        cl = svc.client(eng)
+        state, jct = cl.run(0)
+        def on_done(result, ajct, error):
+            got.update(result=result, jct=ajct, error=error)
+            done.set()
+        cl.run_async(0, on_done)
+        assert done.wait(5)
+    assert got["error"] is None
+    assert got["result"] == state
+    assert got["jct"] > 0
+
+
+def test_run_async_propagates_payload_error():
+    def boom(state):
+        raise ValueError("payload dead")
+    svc = _FakeSvc(n=3, fns=[None, boom, None])
+    done = threading.Event()
+    got = {}
+    with WallClockEngine(Mode.FIKIT) as eng:
+        def on_done(result, jct, error):
+            got.update(result=result, error=error)
+            done.set()
+        svc.client(eng).run_async(0, on_done)
+        assert done.wait(5)
+    assert got["result"] is None
+    assert isinstance(got["error"], ValueError)
+
+
+def test_invoke_async_counts_deadline_misses():
+    slow = _FakeSvc(n=2, fns=[lambda s: (time.sleep(0.02), s)[1], None])
+    done = threading.Event()
+    with ServingSystem(Mode.FIKIT) as sys_:
+        sys_._invoke_async(slow, lambda jct, err: done.set(),
+                           deadline=0.001)
+        assert done.wait(5)
+        assert sys_.deadlines_tagged == 1
+        assert sys_.deadline_misses == 1
+
+
+def test_ops_cancel_resolves_ticket_cancelled():
+    """An ops-plane cancel mid-flight surfaces as a CANCELLED ticket,
+    not a hang or a failure."""
+    gate = threading.Event()
+    release = threading.Event()
+
+    def block(state):
+        gate.set()
+        release.wait(5)
+        return state
+
+    svc = _FakeSvc(n=3, fns=[block, None, None])
+    with ServingSystem(Mode.FIKIT,
+                       admission={"max_inflight": 1}) as sys_:
+        t = sys_.submit_async(svc, "gold")
+        assert gate.wait(5)               # first kernel is on the device
+        # the in-flight instance is the newest one the engine tracks
+        insts = list(sys_.engine.placement._device_of)
+        assert len(insts) == 1
+        sys_.engine.cancel(insts[0])
+        release.set()
+        assert t.result(timeout=5) == CANCELLED
+        assert sys_.cancelled_invocations == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over the real engine
+# ---------------------------------------------------------------------------
+def test_end_to_end_dispatcher_thread_serves_all_classes():
+    hi, lo = _FakeSvc("hi", 0), _FakeSvc("lo", 5)
+    with ServingSystem(Mode.FIKIT, admission=True) as sys_:
+        ts = [sys_.submit_async(hi, "gold") for _ in range(5)]
+        ts += [sys_.submit_async(lo, "bronze") for _ in range(5)]
+        for t in ts:
+            assert t.result(timeout=10) == COMPLETED
+        st = sys_.status()["admission"]
+        assert st["priority_inversions"] == 0
+        g, b = st["classes"]["gold"], st["classes"]["bronze"]
+        assert g["completed"] == 5 and b["completed"] == 5
+        for s in (g, b):
+            assert s["offered"] == (s["admitted"] + s["rejected"]
+                                    + s["shed"] + s["requeued"])
+
+
+def test_drain_completes_inflight_then_rejects_new():
+    svc = _FakeSvc()
+    with ServingSystem(Mode.FIKIT, admission=True) as sys_:
+        ts = [sys_.submit_async(svc, "silver") for _ in range(4)]
+        assert sys_.admission.drain(timeout=5)
+        late = sys_.submit_async(svc, "silver")
+        assert late.outcome == REJECTED and late.requeue
+        assert all(t.result(timeout=5) in (COMPLETED,) for t in ts)
+
+
+# ---------------------------------------------------------------------------
+# the contract: admission OFF is bit-identical to direct invoke
+# ---------------------------------------------------------------------------
+def _normalized(trace):
+    """Policy decision trace with instance ids renumbered by first
+    appearance — instance ids are global counters, so two runs of the
+    same scenario differ only in that offset."""
+    mapping = {}
+    out = []
+    for ev in trace:
+        ev = tuple(ev)
+        if len(ev) > 1 and isinstance(ev[1], int):
+            ev = (ev[0], mapping.setdefault(ev[1], len(mapping))) + ev[2:]
+        out.append(ev)
+    return out
+
+
+def test_admission_off_trace_identical_to_direct_invoke():
+    """The wired-but-disabled differential: a ServingSystem with the
+    admission plane attached but ``enabled=False`` must hand the engine
+    EXACTLY the call sequence of the no-plane direct ``invoke`` path —
+    the policy decision traces are bit-identical after instance-id
+    normalization."""
+    pattern = ["a", "b", "a", "a", "b"]
+
+    def direct():
+        svcs = {"a": _FakeSvc("a", 0), "b": _FakeSvc("b", 5)}
+        with ServingSystem(Mode.FIKIT) as sys_:
+            for name in pattern:
+                assert sys_.invoke(svcs[name], n=1)
+            return _normalized(list(sys_.engine.policy.trace))
+
+    def through_disabled_plane():
+        svcs = {"a": _FakeSvc("a", 0), "b": _FakeSvc("b", 5)}
+        qos = {"a": "gold", "b": "bronze"}
+        with ServingSystem(Mode.FIKIT,
+                           admission={"enabled": False}) as sys_:
+            for name in pattern:
+                t = sys_.submit_async(svcs[name], qos[name])
+                assert t.outcome == COMPLETED     # resolves synchronously
+                assert t.jct is not None
+            assert sys_.admission is not None     # wired, just disabled
+            assert not sys_.admission.enabled
+            return _normalized(list(sys_.engine.policy.trace))
+
+    a, b = direct(), through_disabled_plane()
+    assert a == b
+    assert any(ev[0] == "launch" for ev in a)     # non-trivial scenario
+
+
+# ---------------------------------------------------------------------------
+# loadgen: arrival synthesis + open-loop replay
+# ---------------------------------------------------------------------------
+def test_poisson_and_diurnal_arrival_synthesis():
+    import random
+    rng = random.Random(7)
+    svc = _FakeSvc()
+    p = poisson_arrivals(1000.0, 1.0, svc, "gold", rng)
+    assert 800 < len(p) < 1200                 # ~1000 +/- noise
+    assert all(0 <= a.t < 1.0 for a in p)
+    d = diurnal_arrivals(1000.0, 1.0, svc, "bronze", rng, depth=0.9)
+    assert 700 < len(d) < 1300
+    # first-half vs second-half asymmetry: sin modulation is visible
+    first = sum(1 for a in d if a.t < 0.5)
+    assert first > len(d) - first
+    with pytest.raises(ValueError, match="depth"):
+        diurnal_arrivals(1.0, 1.0, svc, "x", rng, depth=1.5)
+    merged = merge_schedules(p, d)
+    assert len(merged) == len(p) + len(d)
+    assert all(merged[i].t <= merged[i + 1].t
+               for i in range(len(merged) - 1))
+
+
+def test_open_loop_replay_against_real_system():
+    import random
+    rng = random.Random(3)
+    svc = _FakeSvc()
+    sched = poisson_arrivals(2000.0, 0.05, svc, "silver", rng)
+    assert sched, "seeded schedule must not be empty"
+    with ServingSystem(Mode.FIKIT, admission=True) as sys_:
+        rep = replay(sys_.admission, sched, speed=1.0)
+        assert rep.offered == len(sched)
+        for t in rep.tickets:
+            assert t.result(timeout=10) is not None
+        st = sys_.status()["admission"]["classes"]["silver"]
+        assert st["offered"] == len(sched)
+        assert st["offered"] == (st["admitted"] + st["rejected"]
+                                 + st["shed"] + st["requeued"])

@@ -85,6 +85,60 @@ def test_regressing_payload_fails_gate(tmp_path, capsys):
     assert "FAIL recovery" in out and "disturbance" in out
 
 
+GOOD_SERVING = {
+    "smoke": True,
+    "overload": {"priority_inversions": 0},
+    "hi_p99_overload_ratio": 4.2,
+    "hi_goodput_overload": 0.97,
+    "shed_ordering_ok": True,
+    "conservation_ok": True,
+    "admission_off_trace_identical": True,
+}
+
+SERVING_TOL = {"serving_load": {"max_hi_p99_overload_ratio": 15.0,
+                                "min_hi_goodput": 0.9,
+                                "require_shed_ordering": True,
+                                "require_conservation": True,
+                                "require_admission_off_trace_identical":
+                                    True}}
+
+
+def _setup_serving(tmp_path, payload):
+    tol = tmp_path / "gates.json"
+    tol.write_text(json.dumps(SERVING_TOL))
+    (tmp_path / "BENCH_serving_load.json").write_text(json.dumps(payload))
+    return tol
+
+
+def test_serving_load_passing_payload(tmp_path, capsys):
+    tol = _setup_serving(tmp_path, GOOD_SERVING)
+    assert run_gates({"serving_load"}, repo=tmp_path,
+                     tolerances_path=tol) == 0
+    assert "ok   serving_load" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("field,value,needle", [
+    ("hi_p99_overload_ratio", 40.0, "p99 bounded"),
+    ("hi_goodput_overload", 0.5, "goodput floor"),
+    ("shed_ordering_ok", False, "shed ordering"),
+    ("conservation_ok", False, "conservation"),
+    ("admission_off_trace_identical", False, "bit-identical"),
+])
+def test_serving_load_regressions_fail_their_gate(tmp_path, capsys,
+                                                  field, value, needle):
+    bad = json.loads(json.dumps(GOOD_SERVING))
+    bad[field] = value
+    tol = _setup_serving(tmp_path, bad)
+    assert run_gates({"serving_load"}, repo=tmp_path,
+                     tolerances_path=tol) == 1
+    out = capsys.readouterr().out
+    assert "FAIL serving_load" in out and needle in out
+
+
+def test_serving_load_is_gated_by_default():
+    assert "serving_load" in DEFAULT_REQUIRED
+
+
 def test_main_rejects_unknown_required_name(capsys):
     assert main(["--require", "no_such_bench"]) == 2
     assert "unknown benchmark" in capsys.readouterr().out

@@ -335,3 +335,100 @@ def test_serving_ops_plane_end_to_end_with_store():
                 assert store.completions(j.job_id) == list(range(4))
             st = sys_.status()
             assert st["by_state"] == {DONE: 2}
+
+
+# ---------------------------------------------------------------------------
+# serving system: concurrency-bug sweep regressions (this PR's satellites)
+# ---------------------------------------------------------------------------
+class _FaultySvc(_FakeSvc):
+    """A fake service whose middle segment always raises."""
+
+    def __init__(self):
+        super().__init__(name="faulty", n=3)
+
+        def boom(state):
+            raise RuntimeError("injected payload fault")
+        self.svc.segments[1].fn = boom
+
+
+def test_invoke_concurrent_reraises_runner_exception():
+    """Regression: a failing plan used to die silently in its runner
+    thread — its name simply missing from the result dict, so callers
+    crashed later on a bare KeyError. The first plan-order exception
+    must propagate out of invoke_concurrent itself."""
+    with ServingSystem(Mode.FIKIT) as sys_:
+        with pytest.raises(RuntimeError, match="injected payload fault"):
+            sys_.invoke_concurrent([
+                ("ok", _FakeSvc(), 1, 0.0, 0.0),
+                ("bad", _FaultySvc(), 1, 0.0, 0.0),
+            ])
+
+
+def test_poller_counts_rejected_controls_and_stays_alive():
+    """Regression: unapplicable operator verbs were swallowed by a bare
+    except/pass. They must now be counted (rejected_controls in
+    status()) while the poller keeps serving later valid verbs."""
+    with JobStore.memory() as store:
+        with ServingSystem(Mode.FIKIT, jobstore=store) as sys_:
+            store.request_control("cancel", 99999)      # unknown job
+            deadline = time.monotonic() + 5
+            while (sys_.rejected_controls == 0
+                   and time.monotonic() < deadline):
+                time.sleep(0.01)
+            st = sys_.status()
+            assert st["rejected_controls"] == 1
+            assert st["poller_deaths"] == 0
+            assert st["poller_alive"]
+
+
+def test_poller_death_is_counted_and_logged(caplog):
+    """Regression: a REAL bug in a verb handler (not an unapplicable
+    verb) used to vanish into the bare except. It must now log, count
+    into poller_deaths, and surface via status()."""
+    with JobStore.memory() as store:
+        with ServingSystem(Mode.FIKIT, jobstore=store) as sys_:
+            def broken_cancel(job_id):
+                raise OSError("store exploded mid-cancel")
+            sys_.cancel = broken_cancel
+            with caplog.at_level("ERROR", logger="repro.serving.engine"):
+                store.request_control("cancel", 1)
+                deadline = time.monotonic() + 5
+                while (sys_.poller_deaths == 0
+                       and time.monotonic() < deadline):
+                    time.sleep(0.01)
+                st = sys_.status()
+            assert st["poller_deaths"] == 1
+            assert not st["poller_alive"]
+            assert any("poller died" in r.message for r in caplog.records)
+
+
+def test_wedged_poller_cannot_race_final_checkpoint(caplog):
+    """Regression: stop() joined the poller with a timeout and then
+    checkpointed the store ANYWAY — a wedged verb handler could still be
+    writing snapshot_profiles against a store mid-checkpoint. A timed-out
+    join must now skip the final snapshot with a warning."""
+    release = threading.Event()
+    entered = threading.Event()
+    with JobStore.memory() as store:
+        sys_ = ServingSystem(Mode.FIKIT, jobstore=store)
+        sys_.start()
+        try:
+            def slow_cancel(job_id):
+                entered.set()
+                release.wait(10)          # deliberately-wedged handler
+                raise ValueError("late")
+            sys_.cancel = slow_cancel
+            sys_._poll_join_timeout = 0.05
+            snaps = []
+            real_snap = store.snapshot_profiles
+            store.snapshot_profiles = \
+                lambda p: (snaps.append(1), real_snap(p))[1]
+            store.request_control("cancel", 1)
+            assert entered.wait(5), "poller never consumed the verb"
+            with caplog.at_level("WARNING", logger="repro.serving.engine"):
+                sys_.stop()               # join times out: poller wedged
+            assert snaps == [], "final snapshot raced a wedged poller"
+            assert any("skipping the final profile snapshot" in r.message
+                       for r in caplog.records)
+        finally:
+            release.set()

@@ -15,6 +15,7 @@ from repro.core.profiler import ProfiledData, TaskProfile
 from repro.core.queues import PriorityQueues
 from repro.core.scheduler import Mode, SimScheduler, profile_tasks
 from repro.core.task import KernelRequest, TaskKey, TaskSpec, TraceKernel
+from repro.serving.admission import AdmissionPlane, QoSClass
 
 
 # ---------------------------------------------------------------------------
@@ -553,3 +554,107 @@ def test_cancellation_conservation(case, mode):
         tl = sorted(rep.timeline, key=lambda k: k.start)
         for a, b in zip(tl, tl[1:]):
             assert b.start >= a.end - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# admission plane invariants (the serving front door)
+# ---------------------------------------------------------------------------
+class _PlaneClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class _PlaneStub:
+    """Synchronous engine stand-in: each admitted group completes at
+    once with a fixed JCT, advancing the plane's fake clock — dispatch
+    is fully deterministic, no threads."""
+
+    def __init__(self, clock, jct=0.5):
+        self.clock = clock
+        self.jct = jct
+
+    def _invoke_async(self, service, on_done, deadline=None):
+        self.clock.t += self.jct
+        on_done(self.jct, None)
+        return 0
+
+
+class _PlaneSvc:
+    def __init__(self, name):
+        self.key = TaskKey(name)
+        self.priority = 0
+
+
+_PLANE_SVCS = ("s0", "s1", "s2")
+
+
+@st.composite
+def admission_scenarios(draw):
+    n_classes = draw(st.integers(1, 4))
+    classes = tuple(
+        QoSClass(f"c{i}", priority=draw(st.integers(0, 9)),
+                 queue_limit=draw(st.integers(1, 6)),
+                 max_batch=draw(st.integers(1, 4)))
+        for i in range(n_classes))
+    max_inflight = draw(st.integers(1, 4))
+    primed = {s: draw(st.one_of(st.none(), st.floats(0.1, 4.0)))
+              for s in _PLANE_SVCS}
+    ops = draw(st.lists(st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, n_classes - 1),
+                  st.sampled_from(_PLANE_SVCS),
+                  st.one_of(st.none(),
+                            st.floats(0.01, 3.0, allow_nan=False))),
+        st.just(("pump",))), min_size=1, max_size=60))
+    return classes, max_inflight, primed, ops
+
+
+@given(admission_scenarios())
+@settings(max_examples=150, deadline=None)
+def test_admission_conservation_and_shed_ordering(scenario):
+    """Under any interleaving of submits (random class/service/deadline)
+    and dispatch passes: per-class conservation holds (offered ==
+    admitted + rejected + shed + requeued; admitted == completed +
+    failed + cancelled), every ticket resolves exactly once, and the
+    shed-ordering invariant is structural — no request is shed or
+    admitted while any strictly-higher class has queued work, and the
+    plane's priority_inversions counter stays 0."""
+    classes, max_inflight, primed, ops = scenario
+    clock = _PlaneClock()
+    plane = AdmissionPlane(_PlaneStub(clock), classes,
+                           max_inflight=max_inflight, clock=clock,
+                           dispatcher=False, record_events=True)
+    svcs = {n: _PlaneSvc(n) for n in _PLANE_SVCS}
+    for name, jct in primed.items():
+        if jct is not None:
+            plane.note_latency(svcs[name], jct)
+    tickets = []
+    for op in ops:
+        if op[0] == "submit":
+            _, ci, sname, dl = op
+            tickets.append(plane.submit(svcs[sname], classes[ci].name,
+                                        deadline=dl))
+        else:
+            plane.pump()
+    plane.stop()                        # leftovers resolve REQUEUED
+
+    stats = plane.stats()
+    assert all(t.done for t in tickets)           # resolved exactly once
+    for s in stats["classes"].values():
+        assert s["offered"] == (s["admitted"] + s["rejected"]
+                                + s["shed"] + s["requeued"])
+        assert s["admitted"] == (s["completed"] + s["failed"]
+                                 + s["cancelled"])
+        assert s["queued"] == 0
+    assert len(tickets) == sum(s["offered"]
+                               for s in stats["classes"].values())
+    # shed ordering: strict-priority dispatch means every admit AND
+    # every shed happened with zero requests queued in any higher class
+    assert stats["priority_inversions"] == 0
+    for e in plane.events:
+        if e[1] == "admit":
+            assert e[4] == 0          # (seq, "admit", cls, n, higher_queued)
+        elif e[1] == "shed":
+            assert e[4] == 0          # (seq, "shed", cls, why, higher_queued)
