@@ -1,0 +1,254 @@
+"""Cluster-scale fleet benchmark: throughput of the fast event core and
+FIKIT's hi-priority protection at fleet scale.
+
+Four measurements, all driven by ``repro.sim`` (workload generator +
+sharded fleet runner + analytics):
+
+1. **scale** — the headline scenario: a Poisson-merged three-class
+   tenant mix over a large fleet (full: 1000 devices, 10^6 kernel
+   requests; smoke: 50 devices, 5*10^4), simulated with traces and
+   timelines off. Reports events/sec (gated floor) and wall seconds
+   (gated budget — the nightly CI wall-clock assertion).
+2. **fast_vs_reference** — the same monolithic scenario through the
+   fast event core and the per-event reference core
+   (``SimScheduler(reference_core=True)``): decision traces must be
+   bit-identical (gated) and the speedup is tracked.
+3. **protection** — an overloaded smaller fleet run under FIKIT vs
+   default SHARING: the hi-class p99 JCT ratio (FIKIT / SHARING) must
+   stay under the gated ceiling < 1 — priority protection must not
+   evaporate at fleet scale.
+4. **load_curve** — deadline-miss-rate-vs-load points from UUNIFAST
+   periodic task sets swept over total utilization, per tenant class,
+   plus the per-device utilization histogram of the scale run. Curve
+   points are reported (not gated) except the FIKIT ordering property
+   that the hi class's miss rate stays <= the lo class's at every load
+   point (gated) — zero hi misses is NOT attainable with implicit
+   (deadline = period) task sets under co-location, but priority
+   ordering of misses is exactly what the scheduler sells.
+
+Sharded-vs-monolithic equivalence also re-checks here on a small fleet
+(gated) so the bench itself cannot drift off the contract pinned by
+``tests/test_sim_fastcore.py``.
+
+Set BENCH_SMOKE=1 (CI) for the reduced sizes; the full run (nightly)
+executes the 1000-device / 10^6-request scenario.
+"""
+from __future__ import annotations
+
+import os
+import random
+import time
+
+from benchmarks.common import Csv
+from repro.core.policy import Mode
+from repro.core.scheduler import SimScheduler
+from repro.core.task import TaskKey, TaskSpec
+from repro.serving.loadgen import merge_schedules, poisson_arrivals
+from repro.sim.analytics import (fleet_summary, per_class_jct, percentile,
+                                 utilization_histogram)
+from repro.sim.fleet import simulate_fleet
+from repro.sim.workload import (KernelShape, periodic_taskset, release_jobs,
+                                specs_from_arrivals)
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+SEED = 11
+
+DEVICES = 50 if SMOKE else 1000
+REQUESTS = 5_000 if SMOKE else 100_000
+KERNELS_PER_REQ = 10
+SCALE_UTIL = 0.6          # per-device offered load of the scale scenario
+WALL_BUDGET_S = 120.0 if SMOKE else 600.0
+
+PROTECT_DEVICES = 8 if SMOKE else 32
+PROTECT_REQUESTS = 2_000 if SMOKE else 16_000
+PROTECT_UTIL = 1.3        # overloaded: where protection matters
+
+CURVE_UTILS = (0.5, 1.2) if SMOKE else (0.4, 0.7, 1.0, 1.3)
+CURVE_DEVICES = 4
+CURVE_TASKS_PER_DEVICE = 6
+
+#: three tenant classes; shares mirror the serving bench's gold/silver/
+#: bronze mix. 10-kernel shapes => REQUESTS * 10 kernel requests total.
+CLASSES = (
+    ("hi", 0, 0.10, KernelShape("hi", n_kernels=KERNELS_PER_REQ,
+                                gap_fraction=0.15, spread=0.4,
+                                max_inflight=1,
+                                kclass_cycle=("compute",))),
+    ("mid", 4, 0.30, KernelShape("mid", n_kernels=KERNELS_PER_REQ,
+                                 gap_fraction=0.10, spread=0.5,
+                                 max_inflight=2,
+                                 kclass_cycle=("compute", "memory"))),
+    ("lo", 8, 0.60, KernelShape("lo", n_kernels=KERNELS_PER_REQ,
+                                gap_fraction=0.05, spread=0.6,
+                                max_inflight=4,
+                                kclass_cycle=("memory", "compute"))),
+)
+
+KERNEL_MS = 1.0           # mean kernel duration of every class
+
+
+def _templates():
+    """One TaskSpec template per tenant class (kernels shared across all
+    of its requests)."""
+    rng = random.Random(SEED)
+    out = {}
+    for name, prio, share, shape in CLASSES:
+        wcet = KERNEL_MS * 1e-3 * shape.n_kernels
+        out[name] = (share, TaskSpec(
+            key=TaskKey(f"fleet_{name}"), priority=prio,
+            kernels=shape.synthesize(wcet, rng),
+            max_inflight=shape.max_inflight))
+    return out
+
+
+def _class_mix(requests: int, devices: int, util: float, seed: int):
+    """Merged Poisson trace of ``requests`` jobs across the tenant
+    classes, rate-tuned so fleet offered load ~= ``util`` per device."""
+    tpls = _templates()
+    mean_solo = sum(share * t.solo_jct for share, t in tpls.values())
+    total_rate = util * devices / mean_solo
+    duration = requests / total_rate
+    rng = random.Random(seed)
+    scheds = [poisson_arrivals(total_rate * share, duration, tpl, name, rng)
+              for name, (share, tpl) in tpls.items()]
+    return specs_from_arrivals(merge_schedules(*scheds))
+
+
+def _class_of(spec: TaskSpec):
+    return spec.key.process.rsplit("_", 1)[-1]
+
+
+def _run_scale():
+    jobs = _class_mix(REQUESTS, DEVICES, SCALE_UTIL, SEED)
+    t0 = time.perf_counter()
+    fl = simulate_fleet(jobs, Mode.FIKIT, devices=DEVICES,
+                        discipline="round_robin")
+    wall = time.perf_counter() - t0
+    summary = fleet_summary(jobs, fl.report, class_of=_class_of)
+    return jobs, fl, wall, summary
+
+
+def _run_fast_vs_reference():
+    """Monolithic single-device head-to-head, trace identity + speedup."""
+    n = 500 if SMOKE else 5_000
+    jobs = _class_mix(n, 1, SCALE_UTIL, SEED + 1)
+    walls = {}
+    traces = {}
+    for label, kw in (("fast", {}), ("reference", {"reference_core": True})):
+        t0 = time.perf_counter()
+        sim = SimScheduler(jobs, Mode.FIKIT, trace="list",
+                           record_timeline=False, **kw)
+        sim.run()
+        walls[label] = time.perf_counter() - t0
+        traces[label] = list(sim.placement.policies[0].trace)
+    identical = traces["fast"] == traces["reference"]
+    speedup = walls["reference"] / max(walls["fast"], 1e-9)
+    return identical, speedup, walls
+
+
+def _run_protection():
+    """FIKIT vs SHARING on an overloaded fleet: hi-class p99 ratio."""
+    jobs = _class_mix(PROTECT_REQUESTS, PROTECT_DEVICES, PROTECT_UTIL,
+                      SEED + 2)
+    p99 = {}
+    for mode in (Mode.FIKIT, Mode.SHARING):
+        fl = simulate_fleet(jobs, mode, devices=PROTECT_DEVICES,
+                            discipline="round_robin")
+        stats = per_class_jct(jobs, fl.report, class_of=_class_of)
+        p99[mode.name] = {c: s["p99"] for c, s in stats.items()}
+    ratio = p99["FIKIT"]["hi"] / p99["SHARING"]["hi"]
+    return ratio, p99
+
+
+def _run_load_curve():
+    """Deadline-miss-rate-vs-load from UUNIFAST periodic task sets."""
+    curve = []
+    for u in CURVE_UTILS:
+        ts = periodic_taskset(CURVE_DEVICES * CURVE_TASKS_PER_DEVICE,
+                              u * CURVE_DEVICES, seed=SEED + 3,
+                              phase_jitter=1.0)
+        jobs = release_jobs(ts, cycles=1)
+        fl = simulate_fleet(jobs, Mode.FIKIT, devices=CURVE_DEVICES,
+                            discipline="round_robin")
+        summary = fleet_summary(jobs, fl.report,
+                                class_of=lambda s: s.priority)
+        curve.append({"util_per_device": u, "jobs": len(jobs),
+                      "miss_rate": fl.report.deadline_miss_rate,
+                      "miss_by_class": summary["miss_by_class"]})
+    return curve
+
+
+def _run_fleet_mono_check():
+    """Small sharded-vs-monolithic re-check of the equivalence contract."""
+    jobs = _class_mix(300, 4, 0.9, SEED + 4)
+    mono = SimScheduler(jobs, Mode.FIKIT, devices=4,
+                        discipline="round_robin", steal=False, trace="list")
+    mono.run()
+    fl = simulate_fleet(jobs, Mode.FIKIT, devices=4,
+                        discipline="round_robin", trace="list")
+    return fl.traces == [list(p.trace) for p in mono.placement.policies]
+
+
+def main():
+    jobs, fl, wall, scale_summary = _run_scale()
+    events_per_sec = fl.report.events / max(wall, 1e-9)
+    fast_ref_ok, speedup, walls = _run_fast_vs_reference()
+    protect_ratio, protect_p99 = _run_protection()
+    curve = _run_load_curve()
+    fleet_mono_ok = _run_fleet_mono_check()
+    miss_ordering_ok = True
+    for pt in curve:
+        by = pt["miss_by_class"]
+        if by:
+            hi_c = min(by, key=int)
+            lo_c = max(by, key=int)
+            if by[hi_c]["miss_rate"] > by[lo_c]["miss_rate"]:
+                miss_ordering_ok = False
+
+    csv = Csv(("name", "value", "derived"))
+    csv.add("devices", DEVICES, f"{len(jobs)} jobs x {KERNELS_PER_REQ} "
+            f"kernels (smoke {SMOKE})")
+    csv.add("scale_wall_s", round(wall, 2),
+            f"budget {WALL_BUDGET_S:g}s")
+    csv.add("events_per_sec", round(events_per_sec),
+            f"{fl.report.events} events")
+    csv.add("fast_ref_trace_identical", fast_ref_ok,
+            f"speedup {speedup:.2f}x "
+            f"(ref {walls['reference']:.2f}s fast {walls['fast']:.2f}s)")
+    csv.add("fleet_mono_trace_identical", fleet_mono_ok)
+    csv.add("hi_p99_protect_ratio", round(protect_ratio, 3),
+            f"FIKIT {1e3 * protect_p99['FIKIT']['hi']:.2f}ms vs SHARING "
+            f"{1e3 * protect_p99['SHARING']['hi']:.2f}ms at "
+            f"{PROTECT_UTIL}x load")
+    for pt in curve:
+        csv.add(f"miss_rate@{pt['util_per_device']:g}",
+                round(pt["miss_rate"], 4), f"{pt['jobs']} jobs")
+    csv.add("miss_ordering_ok", miss_ordering_ok,
+            "hi miss rate <= lo miss rate at every load point")
+    csv.emit("fleet (cluster-scale sharded simulation)")
+
+    csv.json_payload = {
+        "smoke": SMOKE,
+        "devices": DEVICES,
+        "requests": len(jobs),
+        "kernels_per_request": KERNELS_PER_REQ,
+        "scale": {"wall_s": wall, "budget_s": WALL_BUDGET_S,
+                  "events": fl.report.events,
+                  "events_per_sec": events_per_sec,
+                  "summary": scale_summary},
+        "fast_vs_reference": {"trace_identical": fast_ref_ok,
+                              "speedup": speedup, "walls_s": walls},
+        "fleet_mono_trace_identical": fleet_mono_ok,
+        "protection": {"hi_p99_protect_ratio": protect_ratio,
+                       "p99_by_mode": protect_p99,
+                       "devices": PROTECT_DEVICES,
+                       "util_per_device": PROTECT_UTIL},
+        "load_curve": curve,
+        "miss_ordering_ok": miss_ordering_ok,
+        "util_histogram": utilization_histogram(fl.report),
+    }
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ BENCHES = [
     ("stability", "benchmarks.bench_stability"),              # Fig 21/T3
     ("roofline", "benchmarks.bench_roofline"),                # deliverable g
     ("serving_load", "benchmarks.bench_serving_load"),        # admission
+    ("fleet", "benchmarks.bench_fleet"),                      # cluster scale
     ("overheads", "benchmarks.bench_overheads"),              # Fig 13/14/15
 ]
 

@@ -70,7 +70,7 @@ TOLERANCES = REPO / "benchmarks" / "bench_gates.json"
 
 #: the smoke benches every PR runs; "overheads" joins in the nightly run
 DEFAULT_REQUIRED = ("scheduler_micro", "placement", "disciplines",
-                    "interference", "recovery", "serving_load")
+                    "interference", "recovery", "serving_load", "fleet")
 ALL_GATED = DEFAULT_REQUIRED + ("overheads",)
 
 Check = Tuple[str, bool, str]          # (gate name, ok, detail)
@@ -204,6 +204,38 @@ def _check_serving_load(p: dict, tol: dict) -> List[Check]:
     ]
 
 
+def _check_fleet(p: dict, tol: dict) -> List[Check]:
+    scale = p["scale"]
+    eps = scale["events_per_sec"]
+    budget = (tol["max_wall_s_smoke"] if p.get("smoke")
+              else tol["max_wall_s_full"])
+    ratio = p["protection"]["hi_p99_protect_ratio"]
+    return [
+        ("events/sec floor", eps >= tol["min_events_per_sec"],
+         f"{eps:.0f} >= {tol['min_events_per_sec']} "
+         f"({scale['events']} events over {p['devices']} devices)"),
+        ("scale wall-clock budget", scale["wall_s"] <= budget,
+         f"{scale['wall_s']:.1f}s <= {budget:g}s "
+         f"({'smoke' if p.get('smoke') else 'full nightly'} scenario)"),
+        ("fast core bit-identical to reference core",
+         bool(p["fast_vs_reference"]["trace_identical"])
+         or not tol["require_fast_ref_trace_identical"],
+         f"speedup {p['fast_vs_reference']['speedup']:.2f}x"),
+        ("sharded fleet bit-identical to monolithic",
+         bool(p["fleet_mono_trace_identical"])
+         or not tol["require_fleet_mono_trace_identical"],
+         "remapped per-device decision traces equal"),
+        ("hi-priority p99 protection at fleet scale",
+         ratio <= tol["max_hi_p99_protect_ratio"],
+         f"FIKIT/SHARING hi p99 {ratio:.3f} <= "
+         f"{tol['max_hi_p99_protect_ratio']} at "
+         f"{p['protection']['util_per_device']}x load"),
+        ("deadline-miss priority ordering",
+         bool(p["miss_ordering_ok"]) or not tol["require_miss_ordering"],
+         "hi-class miss rate <= lo-class at every load point"),
+    ]
+
+
 CHECKERS = {
     "scheduler_micro": _check_scheduler_micro,
     "placement": _check_placement,
@@ -212,6 +244,7 @@ CHECKERS = {
     "overheads": _check_overheads,
     "recovery": _check_recovery,
     "serving_load": _check_serving_load,
+    "fleet": _check_fleet,
 }
 
 

@@ -79,7 +79,8 @@ def check_document(doc: Path):
 
 def main(argv=None) -> int:
     docs = [REPO / d for d in DOCS]
-    docs += [Path(p) for p in (argv or sys.argv[1:])]
+    # argv=[] must mean "no extra documents", not "fall back to CLI args"
+    docs += [Path(p) for p in (sys.argv[1:] if argv is None else argv)]
     failures = 0
     for doc in docs:
         if not doc.exists():

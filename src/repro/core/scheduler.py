@@ -88,6 +88,13 @@ class SimReport:
     #: ``OnlineMeasurement.stats()`` snapshot (observation/commit/drift
     #: counters) when the run had the online loop enabled; None otherwise
     online_stats: Optional[dict] = None
+    #: total simulator events processed (arrival/issue/kernel_end) — the
+    #: numerator of the fleet benchmark's events/sec throughput metric
+    events: int = 0
+    #: per-device busy-time accumulators, kept even when the per-kernel
+    #: ``timeline`` is not recorded (``SimScheduler(record_timeline=
+    #: False)``) so utilization analytics survive fleet-scale runs
+    busy: Optional[List[float]] = None
 
     def jct(self, i: int) -> float:
         return self.results[i].jct
@@ -104,6 +111,10 @@ class SimReport:
         return max((r.completion for r in self.results), default=0.0)
 
     def device_busy(self, device: Optional[int] = None) -> float:
+        if not self.timeline and self.busy is not None:
+            # timeline-off run: the accumulators are the only record
+            return (sum(self.busy) if device is None
+                    else self.busy[device])
         return sum(k.end - k.start for k in self.timeline
                    if device is None or k.device == device)
 
@@ -137,7 +148,9 @@ class SimScheduler:
                  jobstore=None,
                  fault_plan=None,
                  job_ids=None,
-                 seq_base=None):
+                 seq_base=None,
+                 reference_core: bool = False,
+                 record_timeline: bool = True):
         """measurement_overhead: multiplier on kernel durations (the paper's
         20-80% measuring-stage slowdown), used to simulate the measurement
         phase. jitter: multiplicative gaussian noise on true durations/gaps
@@ -169,6 +182,23 @@ class SimScheduler:
         independent of what the scheduler believes, so a wrong model
         visibly hurts JCT.
 
+        reference_core=True keeps the original per-event loop (string-
+        dispatched events, one method call per event) as the driver —
+        the O(n)-style reference the fast-core differential suite
+        (tests/test_sim_fastcore.py) pins the default core against. The
+        default fast core processes the SAME events in the SAME order
+        through the SAME placement/policy stack — only the event
+        representation changes (integer-coded flat heap entries,
+        slot-indexed per-task kernel records, hoisted feature flags) —
+        so decision traces and timelines are bit-identical by
+        construction AND by test. An attached jobstore or fault_plan
+        automatically selects the reference core (the ops plane hooks
+        live only there; both are I/O-bound anyway).
+        record_timeline=False skips building the per-kernel
+        ``KernelExec`` timeline (hundreds of MB at fleet scale) while
+        keeping per-device busy-time accumulators, so
+        ``SimReport.utilization``/``per_device_utilization`` still work.
+
         jobstore (None / path / repro.core.jobstore.JobStore) attaches
         the durable ops plane: submissions, per-kernel completion
         watermarks (written at each kernel boundary BEFORE the boundary
@@ -189,12 +219,15 @@ class SimScheduler:
         self.jitter = jitter
         self._rng = _random.Random(seed)
 
-        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._heap: List[tuple] = []
         self._seq = itertools.count()
         self.now = 0.0
         self.devices = devices
         self.device_free = [0.0] * devices
+        self.record_timeline = record_timeline
         self.timeline: List[KernelExec] = []
+        self._busy = [0.0] * devices
+        self.events = 0
         self.results = [TaskResult(arrival=t.arrival) for t in tasks]
         n = len(tasks)
         self._next_k = [0] * n          # next kernel index to issue
@@ -212,6 +245,11 @@ class SimScheduler:
         self.paused_tasks: set = set()
         self._begun = [False] * n
         self._snap_commits = 0
+        # the fast core has no ops-plane hooks: a durable store or a
+        # scripted fault plan pins the run to the reference loop
+        self.reference_core = bool(reference_core)
+        self._use_fast = (not reference_core and self.jobstore is None
+                          and fault_plan is None)
         self.interference = InterferenceModel.coerce(interference)
         if self.interference is not None and self.interference.enabled:
             # expose on the shared profile so checkpointing can persist
@@ -257,6 +295,17 @@ class SimScheduler:
         heapq.heappush(self._heap, (time, next(self._seq), kind, payload))
 
     def run(self) -> SimReport:
+        if self._use_fast:
+            self._run_fast_loop()
+        else:
+            self._run_reference_loop()
+        return self._report()
+
+    def _run_reference_loop(self) -> None:
+        """The original per-event loop: one string-dispatched method call
+        per event. Survives as the fast core's differential oracle and as
+        the only core with ops-plane hooks (jobstore writes, fault-plan
+        boundaries)."""
         if self.jobstore is not None:
             # write-ahead the whole workload before the clock starts: a
             # crash BEFORE a task's arrival event must not lose the task
@@ -272,9 +321,14 @@ class SimScheduler:
                     state=state, at=self.now)
         for i, t in enumerate(self.tasks):
             self._push(t.arrival, "arrival", (i,))
+        events = 0
         while self._heap:
             self.now, _, kind, payload = heapq.heappop(self._heap)
+            events += 1
             getattr(self, "_on_" + kind)(*payload)
+        self.events = events
+
+    def _report(self) -> SimReport:
         online_stats = None
         if self.online is not None and self.online.config.enabled:
             self.online.commit()       # flush the partial final epoch
@@ -294,7 +348,152 @@ class SimScheduler:
                          deadline_misses=sum(1 for t, r in tagged
                                              if r.completion > t.deadline),
                          deadlines_tagged=len(tagged),
-                         online_stats=online_stats)
+                         online_stats=online_stats,
+                         events=self.events,
+                         busy=list(self._busy))
+
+    # ------------------------------------------------------------- fast core
+    #: integer event codes of the fast core's flat heap entries
+    #: ``(time, seq, code, task, ...)`` — ordering semantics identical to
+    #: the reference core's ``(time, seq, kind, payload)`` entries (ties
+    #: resolve by insertion order via the shared seq counter)
+    _EV_ARRIVAL, _EV_ISSUE, _EV_KERNEL_END = 0, 1, 2
+
+    def _run_fast_loop(self) -> None:
+        """The fleet-scale event core: the same client/device event model
+        as ``_run_reference_loop``, restructured for throughput —
+        integer-coded flat heap tuples (no nested payload allocation, no
+        string dispatch), slot-indexed per-task kernel records (kid/
+        duration/gap lists replace per-event dataclass attribute chains),
+        locally-bound hot callables, and feature flags (jitter) hoisted
+        out of the loop. Every event is processed in the same order with
+        the same placement/policy calls, so decision traces, timelines,
+        results, and RNG draw sequences are bit-identical to the
+        reference core — pinned by ``tests/test_sim_fastcore.py``."""
+        tasks = self.tasks
+        placement = self.placement
+        p_task_begin = placement.task_begin
+        p_task_end = placement.task_end
+        p_kernel_end = placement.kernel_end
+        p_fill_complete = placement.fill_complete
+        p_submit = placement.submit
+        results = self.results
+        issued = self._issued
+        done_k = self._done_k
+        next_k = self._next_k
+        pending = self._pending_issue
+        cancelled = self.cancelled
+        begun = self._begun
+        heap = self._heap
+        push = heapq.heappush
+        pop = heapq.heappop
+        tick = self._seq.__next__
+        jit = self.jitter > 0
+        noisy = self._noisy
+        _KR = KernelRequest
+
+        # slot-indexed task/kernel records: one flat list per field,
+        # indexed by (task, kernel) — the hot loop never walks a
+        # TaskSpec/TraceKernel attribute chain
+        nk: List[int] = []
+        kkid: List[list] = []
+        kdur: List[list] = []
+        kgap: List[list] = []
+        keys: List = []
+        prios: List[int] = []
+        maxin: List[int] = []
+        dls: List = []
+        arrs: List[float] = []
+        for t in tasks:
+            ks = t.kernels
+            nk.append(len(ks))
+            kkid.append([k.kid for k in ks])
+            kdur.append([k.duration for k in ks])
+            kgap.append([k.gap_after for k in ks])
+            keys.append(t.key)
+            prios.append(t.priority)
+            maxin.append(t.max_inflight)
+            dls.append(t.deadline)
+            arrs.append(t.arrival)
+
+        def emit_kernel_end(ti, ki, filler, device, start, end):
+            push(heap, (end, tick(), 2, ti, ki, filler, device, start, end))
+
+        self._emit_kernel_end = emit_kernel_end
+
+        def issue(ti, ki):
+            issued[ti] += 1
+            next_k[ti] = ki + 1
+            now = self.now
+            req = _KR(task_key=keys[ti], kernel_id=kkid[ti][ki],
+                      priority=prios[ti], task_instance=ti, seq_index=ki,
+                      submit_time=now, payload=kdur[ti][ki],
+                      deadline=dls[ti])
+            # async clients schedule the next host-side issue now
+            if maxin[ti] > 1 and ki + 1 < nk[ti]:
+                g = kgap[ti][ki]
+                push(heap, (now + (noisy(g) if jit else g),
+                            tick(), 1, ti, ki + 1))
+            p_submit(req)
+
+        def try_issue(ti, ki):
+            if ti in cancelled or ki >= nk[ti]:
+                return
+            if issued[ti] - done_k[ti] >= maxin[ti]:
+                pending[ti] = ki          # wait for a flight slot
+                return
+            issue(ti, ki)
+
+        for i in range(len(tasks)):
+            push(heap, (arrs[i], tick(), 0, i))
+        events = 0
+        while heap:
+            ev = pop(heap)
+            self.now = ev[0]
+            code = ev[2]
+            ti = ev[3]
+            events += 1
+            if code == 2:                              # kernel_end
+                ki = ev[4]
+                done_k[ti] = ki + 1
+                if ev[5]:                              # filler completion
+                    p_fill_complete(ev[6])
+                kid = kkid[ti][ki]
+                if ti in cancelled:
+                    # a cancelled task's in-flight kernel ran to
+                    # completion (non-preemptible); observe, issue nothing
+                    p_kernel_end(ti, kid, last=True,
+                                 actual_gap=kgap[ti][ki],
+                                 start=ev[7], end=ev[8])
+                    continue
+                last = ki == nk[ti] - 1
+                if last:
+                    results[ti].completion = self.now
+                    for nxt in p_task_end(ti):         # EXCLUSIVE admission
+                        try_issue(nxt, 0)
+                elif maxin[ti] == 1:
+                    # synchronous client: consume result, issue next
+                    g = kgap[ti][ki]
+                    push(heap, (self.now + (noisy(g) if jit else g),
+                                tick(), 1, ti, ki + 1))
+                else:
+                    pi = pending[ti]
+                    if pi is not None:
+                        pending[ti] = None
+                        issue(ti, pi)                  # flight slot freed
+                p_kernel_end(ti, kid, last=last,
+                             actual_gap=kgap[ti][ki],
+                             start=ev[7], end=ev[8])
+            elif code == 1:                            # host issue
+                try_issue(ti, ev[4])
+            else:                                      # arrival
+                if ti in cancelled:
+                    continue
+                begun[ti] = True
+                if p_task_begin(ti, keys[ti], prios[ti],
+                                arrival=arrs[ti]):
+                    try_issue(ti, 0)
+        self.events = events
 
     # --------------------------------------------------------------- clients
     def _on_arrival(self, ti: int) -> None:
@@ -361,13 +560,21 @@ class SimScheduler:
         start = max(self.now, self.device_free[device])
         end = start + dur
         self.device_free[device] = end
+        self._busy[device] += dur
         ti = req.task_instance
         if self.results[ti].start < 0:
             self.results[ti].start = start
-        self.timeline.append(KernelExec(ti, req.seq_index, start, end,
-                                        filler=filler, device=device))
-        self._push(end, "kernel_end",
-                   (ti, req.seq_index, filler, device, start, end))
+        if self.record_timeline:
+            self.timeline.append(KernelExec(ti, req.seq_index, start, end,
+                                            filler=filler, device=device))
+        self._emit_kernel_end(ti, req.seq_index, filler, device, start, end)
+
+    def _emit_kernel_end(self, ti: int, ki: int, filler: bool, device: int,
+                         start: float, end: float) -> None:
+        """Schedule the completion event for a launched kernel. The fast
+        core shadows this with its flat-tuple emitter at loop start; the
+        ordering key (time, seq) is identical either way."""
+        self._push(end, "kernel_end", (ti, ki, filler, device, start, end))
 
     def _on_kernel_end(self, ti: int, ki: int, filler: bool, device: int,
                        start: float, end: float) -> None:

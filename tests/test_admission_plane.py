@@ -21,8 +21,6 @@ from repro.serving import (AdmissionPlane, QoSClass, ServingSystem)
 from repro.serving.admission import (
     CANCELLED, COMPLETED, FAILED, REJECTED, REQUEUED, SHED,
     coerce_admission)
-from repro.serving.loadgen import (
-    diurnal_arrivals, merge_schedules, poisson_arrivals, replay)
 
 pytestmark = pytest.mark.fast
 
@@ -421,42 +419,3 @@ def test_admission_off_trace_identical_to_direct_invoke():
     assert a == b
     assert any(ev[0] == "launch" for ev in a)     # non-trivial scenario
 
-
-# ---------------------------------------------------------------------------
-# loadgen: arrival synthesis + open-loop replay
-# ---------------------------------------------------------------------------
-def test_poisson_and_diurnal_arrival_synthesis():
-    import random
-    rng = random.Random(7)
-    svc = _FakeSvc()
-    p = poisson_arrivals(1000.0, 1.0, svc, "gold", rng)
-    assert 800 < len(p) < 1200                 # ~1000 +/- noise
-    assert all(0 <= a.t < 1.0 for a in p)
-    d = diurnal_arrivals(1000.0, 1.0, svc, "bronze", rng, depth=0.9)
-    assert 700 < len(d) < 1300
-    # first-half vs second-half asymmetry: sin modulation is visible
-    first = sum(1 for a in d if a.t < 0.5)
-    assert first > len(d) - first
-    with pytest.raises(ValueError, match="depth"):
-        diurnal_arrivals(1.0, 1.0, svc, "x", rng, depth=1.5)
-    merged = merge_schedules(p, d)
-    assert len(merged) == len(p) + len(d)
-    assert all(merged[i].t <= merged[i + 1].t
-               for i in range(len(merged) - 1))
-
-
-def test_open_loop_replay_against_real_system():
-    import random
-    rng = random.Random(3)
-    svc = _FakeSvc()
-    sched = poisson_arrivals(2000.0, 0.05, svc, "silver", rng)
-    assert sched, "seeded schedule must not be empty"
-    with ServingSystem(Mode.FIKIT, admission=True) as sys_:
-        rep = replay(sys_.admission, sched, speed=1.0)
-        assert rep.offered == len(sched)
-        for t in rep.tickets:
-            assert t.result(timeout=10) is not None
-        st = sys_.status()["admission"]["classes"]["silver"]
-        assert st["offered"] == len(sched)
-        assert st["offered"] == (st["admitted"] + st["rejected"]
-                                 + st["shed"] + st["requeued"])

@@ -1,0 +1,142 @@
+"""Unit tests for scripts/check_doc_refs.py — the docs-integrity CI gate.
+
+The script was the only gate script without its own test file (unlike
+``check_bench_gates.py``): a regex regression could silently stop
+catching dangling links and the docs job would go green forever. Pinned
+here: link-target extraction (scheme/anchor skipping, relative
+resolution), the path-shaped-code-span heuristic (what is and is NOT a
+checked path), ``check_document``'s missing list, and ``main``'s exit
+codes and failure messaging, against synthetic repos in tmp_path.
+"""
+from __future__ import annotations
+
+import pytest
+
+import scripts.check_doc_refs as cdr
+
+pytestmark = pytest.mark.fast
+
+
+def _fake_repo(tmp_path, monkeypatch, docs=("README.md",)):
+    """Point the module at a synthetic repo rooted in tmp_path."""
+    monkeypatch.setattr(cdr, "REPO", tmp_path)
+    monkeypatch.setattr(cdr, "DOCS", tuple(docs))
+    return tmp_path
+
+
+# ---------------------------------------------------------------------------
+# extraction
+# ---------------------------------------------------------------------------
+
+def test_link_targets_skip_schemes_and_anchors():
+    text = ("[a](docs/x.md) [b](http://x.y/z) [c](https://x.y) "
+            "[d](mailto:a@b.c) [e](#section) [f](src/mod.py#L10)")
+    got = dict(cdr._iter_link_targets(text))
+    assert set(got.values()) == {"docs/x.md", "src/mod.py"}  # anchor cut
+
+
+def test_code_spans_match_only_path_shaped_spans():
+    text = " ".join(f"`{s}`" for s in (
+        "src/repro/core/policy.py",           # yes: ext + top dir
+        "tests/test_x.py::test_name",         # yes: ::Symbol stripped
+        "benchmarks/bench_gates.json",        # yes
+        ".github/workflows/ci.yml",           # yes: known top dir
+        "docs/missing",                       # yes: top dir, no ext
+        "repro.core.policy",                  # no: dotted module, no /
+        "python -m scripts.check_doc_refs",   # no: spaces
+        "src/<name>.py",                      # no: placeholder chars
+        "a/b(c).py",                          # no: call syntax
+        "src/*.py",                           # no: glob
+        "just_a_word",                        # no: no /
+        "vendor/thing.py",                    # no: unknown top dir, but
+    ))                                        #     .py ext -> still yes
+    got = [p for _, p in cdr._iter_code_paths(text)]
+    assert got == ["src/repro/core/policy.py", "tests/test_x.py",
+                   "benchmarks/bench_gates.json",
+                   ".github/workflows/ci.yml", "docs/missing",
+                   "vendor/thing.py"]
+
+
+def test_code_span_ref_preserves_symbol_qualifier():
+    refs = list(cdr._iter_code_paths("`src/m.py::Klass`"))
+    assert refs == [("`src/m.py::Klass`", "src/m.py")]
+
+
+# ---------------------------------------------------------------------------
+# check_document
+# ---------------------------------------------------------------------------
+
+def test_check_document_resolves_links_relative_to_doc(tmp_path,
+                                                       monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "other.md").write_text("x")
+    (tmp_path / "README.md").write_text("hello")
+    doc = tmp_path / "docs" / "GUIDE.md"
+    # sibling link resolves against docs/, parent link against repo root
+    doc.write_text("[sib](other.md) [up](../README.md) [gone](nope.md)")
+    missing = cdr.check_document(doc)
+    assert missing == [("[gone](nope.md)", "nope.md")]
+
+
+def test_check_document_checks_code_paths_against_repo_root(tmp_path,
+                                                            monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "real.py").write_text("pass")
+    doc = tmp_path / "README.md"
+    doc.write_text("see `src/real.py` and `src/fake.py::Sym` here")
+    missing = cdr.check_document(doc)
+    assert missing == [("`src/fake.py::Sym`", "src/fake.py")]
+
+
+def test_check_document_clean_doc_returns_empty(tmp_path, monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    doc = tmp_path / "README.md"
+    doc.write_text("plain prose, a [link](#anchor), `repro.core.policy` "
+                   "and `python -m benchmarks.run` — nothing checkable")
+    assert cdr.check_document(doc) == []
+
+
+# ---------------------------------------------------------------------------
+# main: exit codes + messaging
+# ---------------------------------------------------------------------------
+
+def test_main_green_path(tmp_path, monkeypatch, capsys):
+    _fake_repo(tmp_path, monkeypatch)
+    (tmp_path / "README.md").write_text("all good")
+    assert cdr.main([]) == 0
+    assert "README.md: OK" in capsys.readouterr().out
+
+
+def test_main_reports_each_dangling_reference(tmp_path, monkeypatch,
+                                              capsys):
+    _fake_repo(tmp_path, monkeypatch)
+    (tmp_path / "README.md").write_text("[a](gone.md) and `src/gone.py`")
+    assert cdr.main([]) == 1
+    out = capsys.readouterr().out
+    assert "dangling reference [a](gone.md) -> gone.md" in out
+    assert "dangling reference `src/gone.py` -> src/gone.py" in out
+    assert "2 dangling reference(s)" in out
+
+
+def test_main_missing_document_fails(tmp_path, monkeypatch, capsys):
+    _fake_repo(tmp_path, monkeypatch, docs=("README.md", "docs/ARCH.md"))
+    (tmp_path / "README.md").write_text("fine")
+    assert cdr.main([]) == 1
+    assert "MISSING DOCUMENT" in capsys.readouterr().out
+
+
+def test_main_checks_extra_argv_documents(tmp_path, monkeypatch, capsys):
+    _fake_repo(tmp_path, monkeypatch)
+    (tmp_path / "README.md").write_text("fine")
+    extra = tmp_path / "EXTRA.md"
+    extra.write_text("[broken](nowhere.md)")
+    assert cdr.main([str(extra)]) == 1
+    assert "nowhere.md" in capsys.readouterr().out
+
+
+def test_repo_docs_are_currently_clean():
+    """The real README/ARCHITECTURE must pass — the same invariant the
+    CI docs job enforces, kept runnable from the unit suite."""
+    assert cdr.main([]) == 0

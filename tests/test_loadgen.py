@@ -1,0 +1,130 @@
+"""Load generator (``repro.serving.loadgen``): arrival synthesis and
+open-loop replay.
+
+Extracted from ``test_admission_plane.py`` (where the two original
+tests rode along with the plane tests) plus edge cases the original
+coverage skipped: zero-rate windows, empty schedules, diurnal thinning
+bounds, ``merge_schedules`` stability on ties, and seed determinism —
+the contract ``repro.sim.workload`` builds its fleet traces on.
+"""
+import random
+
+import pytest
+
+from repro.core.scheduler import Mode
+from repro.serving import ServingSystem
+from repro.serving.loadgen import (Arrival, diurnal_arrivals,
+                                   merge_schedules, poisson_arrivals,
+                                   replay)
+from test_admission_plane import _FakeSvc
+
+pytestmark = pytest.mark.fast
+
+
+# ---------------------------------------------------------------------------
+# synthesis (moved from test_admission_plane.py)
+# ---------------------------------------------------------------------------
+def test_poisson_and_diurnal_arrival_synthesis():
+    rng = random.Random(7)
+    svc = _FakeSvc()
+    p = poisson_arrivals(1000.0, 1.0, svc, "gold", rng)
+    assert 800 < len(p) < 1200                 # ~1000 +/- noise
+    assert all(0 <= a.t < 1.0 for a in p)
+    d = diurnal_arrivals(1000.0, 1.0, svc, "bronze", rng, depth=0.9)
+    assert 700 < len(d) < 1300
+    # first-half vs second-half asymmetry: sin modulation is visible
+    first = sum(1 for a in d if a.t < 0.5)
+    assert first > len(d) - first
+    with pytest.raises(ValueError, match="depth"):
+        diurnal_arrivals(1.0, 1.0, svc, "x", rng, depth=1.5)
+    merged = merge_schedules(p, d)
+    assert len(merged) == len(p) + len(d)
+    assert all(merged[i].t <= merged[i + 1].t
+               for i in range(len(merged) - 1))
+
+
+def test_open_loop_replay_against_real_system():
+    rng = random.Random(3)
+    svc = _FakeSvc()
+    sched = poisson_arrivals(2000.0, 0.05, svc, "silver", rng)
+    assert sched, "seeded schedule must not be empty"
+    with ServingSystem(Mode.FIKIT, admission=True) as sys_:
+        rep = replay(sys_.admission, sched, speed=1.0)
+        assert rep.offered == len(sched)
+        for t in rep.tickets:
+            assert t.result(timeout=10) is not None
+        st = sys_.status()["admission"]["classes"]["silver"]
+        assert st["offered"] == len(sched)
+        assert st["offered"] == (st["admitted"] + st["rejected"]
+                                 + st["shed"] + st["requeued"])
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+def test_zero_rate_windows_yield_empty_schedules():
+    rng = random.Random(1)
+    assert poisson_arrivals(0.0, 10.0, "svc", "q", rng) == []
+    assert diurnal_arrivals(0.0, 10.0, "svc", "q", rng) == []
+    # zero-length window likewise
+    assert poisson_arrivals(100.0, 0.0, "svc", "q", rng) == []
+    assert diurnal_arrivals(100.0, 0.0, "svc", "q", rng) == []
+
+
+def test_empty_schedule_merge_and_replay():
+    assert merge_schedules() == []
+    assert merge_schedules([], []) == []
+    one = [Arrival(0.5, "svc", "q")]
+    assert merge_schedules([], one, []) == one
+    with ServingSystem(Mode.FIKIT, admission=True) as sys_:
+        rep = replay(sys_.admission, [], speed=10.0)
+        assert rep.offered == 0 and rep.tickets == []
+
+
+def test_diurnal_thinning_bounds():
+    """Thinning can only REMOVE arrivals from the peak-rate stream: every
+    arrival stays inside the window, the count is bounded by a generous
+    peak-rate envelope, and invalid depths are rejected either side."""
+    rng = random.Random(11)
+    base, duration, depth = 500.0, 2.0, 0.75
+    d = diurnal_arrivals(base, duration, "svc", "q", rng, depth=depth)
+    assert all(0.0 <= a.t < duration for a in d)
+    assert [a.t for a in d] == sorted(a.t for a in d)
+    peak_expected = base * (1.0 + depth) * duration
+    assert len(d) < peak_expected * 1.5
+    # average intensity is base, so the thinned count sits near base *
+    # duration, well under the un-thinned peak stream
+    assert len(d) < base * (1.0 + depth) * duration * 0.9
+    for bad in (-0.1, 1.0, 2.0):
+        with pytest.raises(ValueError, match="depth"):
+            diurnal_arrivals(base, duration, "svc", "q", rng, depth=bad)
+    # depth=0 degenerates to homogeneous Poisson at base rate
+    flat = diurnal_arrivals(base, duration, "svc", "q",
+                            random.Random(2), depth=0.0)
+    assert 0.7 * base * duration < len(flat) < 1.3 * base * duration
+
+
+def test_merge_schedules_is_stable_on_ties():
+    """Equal-time arrivals keep schedule order, then within-schedule
+    order (list.sort stability over concatenation) — replay tapes with
+    simultaneous arrivals stay deterministic."""
+    a = [Arrival(0.0, "a0", "qa"), Arrival(1.0, "a1", "qa"),
+         Arrival(1.0, "a2", "qa")]
+    b = [Arrival(0.0, "b0", "qb"), Arrival(1.0, "b1", "qb")]
+    merged = merge_schedules(a, b)
+    assert [x.service for x in merged] == ["a0", "b0", "a1", "a2", "b1"]
+    # merging is input-order sensitive only for ties
+    swapped = merge_schedules(b, a)
+    assert [x.service for x in swapped] == ["b0", "a0", "b1", "a1", "a2"]
+
+
+def test_schedules_are_seed_deterministic():
+    p1 = poisson_arrivals(300.0, 1.0, "svc", "q", random.Random(42))
+    p2 = poisson_arrivals(300.0, 1.0, "svc", "q", random.Random(42))
+    assert p1 == p2
+    d1 = diurnal_arrivals(300.0, 1.0, "svc", "q", random.Random(42),
+                          depth=0.5)
+    d2 = diurnal_arrivals(300.0, 1.0, "svc", "q", random.Random(42),
+                          depth=0.5)
+    assert d1 == d2
+    assert [a.t for a in p1] != [a.t for a in d1]  # distinct draws

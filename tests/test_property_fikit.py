@@ -658,3 +658,85 @@ def test_admission_conservation_and_shed_ordering(scenario):
             assert e[4] == 0          # (seq, "admit", cls, n, higher_queued)
         elif e[1] == "shed":
             assert e[4] == 0          # (seq, "shed", cls, why, higher_queued)
+
+
+# ---------------------------------------------------------------------------
+# workload generator (repro.sim.workload)
+# ---------------------------------------------------------------------------
+from repro.sim.workload import (hyperperiod_ms, periodic_taskset,  # noqa: E402
+                                poisson_trace, release_jobs,
+                                uunifast_discard)
+
+
+@given(st.integers(1, 40), st.floats(0.1, 0.95), st.integers(0, 2**31))
+@settings(max_examples=100, deadline=None)
+def test_uunifast_sums_to_target_each_share_valid(n, frac, seed):
+    total = frac * n                    # always feasible (< n)
+    utils = uunifast_discard(n, total, seed)
+    assert len(utils) == n
+    assert math.isclose(sum(utils), total, rel_tol=0, abs_tol=1e-9)
+    assert all(0.0 < u <= 1.0 for u in utils)
+    # seed-deterministic
+    assert uunifast_discard(n, total, seed) == utils
+
+
+@given(st.integers(2, 25), st.floats(0.2, 0.9), st.integers(0, 2**31),
+       st.booleans())
+@settings(max_examples=50, deadline=None)
+def test_taskset_schedules_sorted_and_seed_deterministic(n, frac, seed,
+                                                         sporadic):
+    ts = periodic_taskset(n, frac * n, seed=seed)
+    assert ts == periodic_taskset(n, frac * n, seed=seed)
+    jobs = release_jobs(ts, sporadic=sporadic)
+    assert [j.arrival for j in jobs] == sorted(j.arrival for j in jobs)
+    jobs2 = release_jobs(ts, sporadic=sporadic)
+    assert [(j.key, j.arrival, j.deadline) for j in jobs] \
+        == [(j.key, j.arrival, j.deadline) for j in jobs2]
+    # every job's kernels are the task's own (shared, not re-synthesized)
+    by_key = {t.key: t for t in ts.tasks}
+    for j in jobs:
+        assert tuple(j.kernels) == by_key[j.key].kernels
+
+
+@given(st.integers(2, 25), st.floats(0.2, 0.9), st.integers(0, 2**31))
+@settings(max_examples=50, deadline=None)
+def test_hyperperiod_divisible_by_every_period(n, frac, seed):
+    ts = periodic_taskset(n, frac * n, seed=seed)
+    h = ts.hyperperiod_ms
+    assert h == hyperperiod_ms([t.period_ms for t in ts.tasks]) > 0
+    for t in ts.tasks:
+        assert h % t.period_ms == 0
+
+
+@given(st.integers(2, 15), st.floats(0.2, 0.8), st.integers(0, 2**31),
+       st.floats(0.1, 2.0))
+@settings(max_examples=50, deadline=None)
+def test_sporadic_interarrivals_respect_minimum_separation(n, frac, seed,
+                                                           slack):
+    ts = periodic_taskset(n, frac * n, seed=seed)
+    jobs = release_jobs(ts, cycles=2, sporadic=True, sporadic_slack=slack)
+    arrivals = {}
+    for j in jobs:
+        arrivals.setdefault(j.key, []).append(j.arrival)
+    for t in ts.tasks:
+        arr = arrivals.get(t.key, [])
+        for a, b in zip(arr, arr[1:]):
+            assert b - a >= t.period_s - 1e-12
+
+
+@given(st.floats(1.0, 200.0), st.integers(0, 2**31),
+       st.floats(1e-3, 0.1))
+@settings(max_examples=50, deadline=None)
+def test_arrival_trace_sorted_deterministic_deadlines_absolute(rate, seed,
+                                                               rel_dl):
+    tpl = TaskSpec(TaskKey("svc"), 0,
+                   [TraceKernel(KernelID("svc_k"), 1e-3, 1e-4)])
+    jobs = poisson_trace(tpl, rate, duration=1.0, seed=seed,
+                         deadline=rel_dl)
+    assert [j.arrival for j in jobs] == sorted(j.arrival for j in jobs)
+    assert jobs == poisson_trace(tpl, rate, duration=1.0, seed=seed,
+                                 deadline=rel_dl)
+    for j in jobs:
+        assert 0.0 <= j.arrival < 1.0
+        assert math.isclose(j.deadline, j.arrival + rel_dl)
+        assert j.kernels is tpl.kernels

@@ -1,0 +1,249 @@
+"""Fast event core vs reference core: randomized differential suite.
+
+The repo's differential-testing contract — every fast path keeps an O(n)
+reference oracle — extended to the simulator's event loop itself.
+``SimScheduler`` runs a slot-indexed, integer-coded fast event core by
+default; ``SimScheduler(reference_core=True)`` runs the original
+per-event string-dispatch loop. The two must be **bit-identical** in
+every observable: per-device decision traces, task results, kernel
+timeline, fill/steal/deadline counters and the processed-event count —
+across randomized scenarios x {FIKIT, PREEMPT} x {fifo, sjf, edf} x
+K in {1, 2, 4}, with the online measurement loop and the interference
+model both on and off.
+
+Also pinned here: the sharded fleet runner (``repro.sim.fleet``) against
+the monolithic K-device scheduler — same traces after remapping shard-
+local instance ids to global ones — and the timeline-off accounting
+(``record_timeline=False`` busy accumulators vs the full timeline).
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core.interference import (COMPUTE_BOUND, MEMORY_BOUND,
+                                     InterferenceModel)
+from repro.core.kernel_id import KernelID
+from repro.core.online import OnlineConfig
+from repro.core.policy import Mode
+from repro.core.scheduler import SimScheduler, profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+from repro.sim.fleet import elect_devices, simulate_fleet
+from repro.sim.workload import periodic_taskset, release_jobs
+
+pytestmark = pytest.mark.fast
+
+ENV = {(MEMORY_BOUND, MEMORY_BOUND): 1.5,
+       (COMPUTE_BOUND, COMPUTE_BOUND): 1.1,
+       (COMPUTE_BOUND, MEMORY_BOUND): 1.2,
+       (MEMORY_BOUND, COMPUTE_BOUND): 1.05}
+
+
+def _scenario(seed: int, n: int = 14):
+    """A randomized task mix: mixed priorities, sync and async clients,
+    partial deadline tagging, mixed kernel resource classes."""
+    rng = random.Random(seed)
+    kclasses = (None, COMPUTE_BOUND, MEMORY_BOUND)
+    tasks = []
+    for i in range(n):
+        kernels = [TraceKernel(KernelID(f"s{seed}t{i}k{j}", (i,), (j,)),
+                               duration=rng.uniform(1e-4, 5e-3),
+                               gap_after=rng.uniform(0.0, 1e-3),
+                               kclass=rng.choice(kclasses))
+                   for j in range(rng.randint(1, 6))]
+        arrival = rng.uniform(0.0, 0.02)
+        deadline = (arrival + rng.uniform(5e-3, 5e-2)
+                    if rng.random() < 0.5 else None)
+        tasks.append(TaskSpec(TaskKey(f"svc{i % 5}", (i,)),
+                              rng.randrange(10), kernels, arrival=arrival,
+                              max_inflight=rng.choice((1, 1, 2, 4)),
+                              deadline=deadline))
+    return tasks
+
+
+def _observables(sim: SimScheduler, report):
+    return {
+        "traces": [list(p.trace) for p in sim.placement.policies],
+        "results": [(r.arrival, r.start, r.completion)
+                    for r in report.results],
+        "timeline": [(k.task, k.seq, k.start, k.end, k.filler, k.device)
+                     for k in report.timeline],
+        "fills": report.fills,
+        "steals": report.steals,
+        "overshoot": report.overshoot_time,
+        "misses": (report.deadline_misses, report.deadlines_tagged),
+        "events": report.events,
+        "busy": report.busy,
+    }
+
+
+def _run(tasks, mode, *, reference, qd="fifo", K=1, profiled=None,
+         jitter=0.0, seed=0, online=None, interference=None, env=None,
+         steal=True):
+    sim = SimScheduler(tasks, mode, profiled, jitter=jitter, seed=seed,
+                       trace="list", devices=K, queue_discipline=qd,
+                       steal=steal, online=online,
+                       interference=interference, interference_env=env,
+                       reference_core=reference)
+    return _observables(sim, sim.run())
+
+
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+@pytest.mark.parametrize("qd", ["fifo", "sjf", "edf"])
+@pytest.mark.parametrize("K", [1, 2, 4])
+def test_fast_core_bit_identical(mode, qd, K):
+    for seed in (0, 1):
+        tasks = _scenario(100 * seed + K)
+        pd = profile_tasks(tasks, T=2, jitter=0.0,
+                           measurement_overhead=0.0)
+        kw = dict(qd=qd, K=K, profiled=pd, jitter=0.02, seed=seed)
+        fast = _run(tasks, mode, reference=False, **kw)
+        ref = _run(tasks, mode, reference=True, **kw)
+        assert fast == ref, f"divergence: mode={mode} qd={qd} K={K}"
+
+
+@pytest.mark.parametrize("K", [1, 2])
+@pytest.mark.parametrize("feature", ["online", "interference", "both"])
+def test_fast_core_bit_identical_with_feature_loops(K, feature):
+    """The online SK/SG refinement loop and the interference model (and
+    its physical environment) run inside the fast loop too — same
+    observables as the reference core with each enabled."""
+    for seed in (2, 3):
+        tasks = _scenario(7 * seed + K, n=12)
+        runs = {}
+        for reference in (False, True):
+            # fresh profiled data + collaborators per run: the online
+            # loop COMMITS refinements into them, so sharing across the
+            # two runs would hand the second one a different model
+            kw = dict(K=K, seed=seed,
+                      profiled=profile_tasks(tasks, T=2, jitter=0.0,
+                                             measurement_overhead=0.0))
+            if feature in ("online", "both"):
+                kw["online"] = OnlineConfig(epoch_observations=4)
+            if feature in ("interference", "both"):
+                kw["interference"] = InterferenceModel(ENV)
+                kw["env"] = ENV
+            runs[reference] = _run(tasks, Mode.FIKIT,
+                                   reference=reference, **kw)
+        assert runs[False] == runs[True], \
+            f"divergence: K={K} feature={feature}"
+
+
+def test_reference_core_flag_is_the_original_loop():
+    """Both cores count the same events and produce a report that says
+    how many were processed (the fleet bench throughput numerator)."""
+    tasks = _scenario(9)
+    fast = _run(tasks, Mode.FIKIT, reference=False)
+    ref = _run(tasks, Mode.FIKIT, reference=True)
+    assert fast["events"] == ref["events"] > len(tasks)
+
+
+def test_timeline_off_keeps_busy_accounting():
+    """record_timeline=False drops per-kernel KernelExec rows but the
+    per-device busy accumulators must equal the timeline's sums, and
+    every other observable is unchanged."""
+    tasks = _scenario(11)
+    full_sim = SimScheduler(tasks, Mode.FIKIT, trace="list", devices=2,
+                            record_timeline=True)
+    full = full_sim.run()
+    off_sim = SimScheduler(tasks, Mode.FIKIT, trace="list", devices=2,
+                           record_timeline=False)
+    off = off_sim.run()
+    assert off.timeline == []
+    for d in range(2):
+        assert off.device_busy(d) == pytest.approx(full.device_busy(d))
+    assert off.device_busy() == pytest.approx(full.device_busy())
+    assert [list(p.trace) for p in off_sim.placement.policies] \
+        == [list(p.trace) for p in full_sim.placement.policies]
+    assert [(r.start, r.completion) for r in off.results] \
+        == [(r.start, r.completion) for r in full.results]
+    assert off.utilization() == pytest.approx(full.utilization())
+
+
+def test_jobstore_pins_reference_core(tmp_path):
+    """Ops-plane hooks only exist in the reference loop; wiring a
+    jobstore must transparently select it (not crash the fast core) and
+    not change scheduling decisions."""
+    from repro.core.jobstore import JobStore
+    tasks = _scenario(13, n=6)
+    with JobStore(str(tmp_path / "jobs.db")) as store:
+        sim = SimScheduler(tasks, Mode.FIKIT, trace="list",
+                           jobstore=store)
+        rep_store = sim.run()
+    plain = SimScheduler(tasks, Mode.FIKIT, trace="list")
+    rep_plain = plain.run()
+    assert [(r.start, r.completion) for r in rep_store.results] \
+        == [(r.start, r.completion) for r in rep_plain.results]
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet vs monolithic K-device scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("discipline", ["round_robin", "priority_affinity"])
+@pytest.mark.parametrize("mode", [Mode.FIKIT, Mode.PREEMPT])
+def test_fleet_shards_bit_identical_to_monolithic(discipline, mode):
+    for seed in (0, 4):
+        ts = periodic_taskset(20, 5.0, seed=seed)
+        jobs = release_jobs(ts)
+        K = 4
+        mono = SimScheduler(jobs, mode, devices=K, discipline=discipline,
+                            steal=False, trace="list")
+        mrep = mono.run()
+        fl = simulate_fleet(jobs, mode, devices=K, discipline=discipline,
+                            trace="list", record_timeline=True)
+        assert fl.traces == [list(p.trace) for p in
+                             mono.placement.policies]
+        assert [(r.arrival, r.start, r.completion)
+                for r in fl.report.results] \
+            == [(r.arrival, r.start, r.completion) for r in mrep.results]
+        assert sorted((k.task, k.seq, k.start, k.end, k.filler, k.device)
+                      for k in fl.report.timeline) \
+            == sorted((k.task, k.seq, k.start, k.end, k.filler, k.device)
+                      for k in mrep.timeline)
+        assert (fl.report.fills, fl.report.deadline_misses,
+                fl.report.deadlines_tagged) \
+            == (mrep.fills, mrep.deadline_misses, mrep.deadlines_tagged)
+        assert fl.report.device_busy() == pytest.approx(mrep.device_busy())
+
+
+def test_fleet_process_pool_matches_inline():
+    ts = periodic_taskset(16, 4.0, seed=6)
+    jobs = release_jobs(ts)
+    a = simulate_fleet(jobs, Mode.FIKIT, devices=4, workers=1,
+                       trace="list", record_timeline=True)
+    b = simulate_fleet(jobs, Mode.FIKIT, devices=4, workers=2,
+                       trace="list", record_timeline=True)
+    assert a.traces == b.traces
+    assert [(r.start, r.completion) for r in a.report.results] \
+        == [(r.start, r.completion) for r in b.report.results]
+
+
+def test_static_election_matches_placement_layer():
+    """elect_devices reproduces the layer's election: every instance's
+    ("begin", i) trace entry lands on the device elect_devices chose."""
+    ts = periodic_taskset(18, 4.0, seed=8)
+    jobs = release_jobs(ts)
+    for disc in ("round_robin", "priority_affinity"):
+        chosen = elect_devices(jobs, 3, disc)
+        mono = SimScheduler(jobs, Mode.FIKIT, devices=3, discipline=disc,
+                            steal=False, trace="list")
+        mono.run()
+        for d, pol in enumerate(mono.placement.policies):
+            for ev in pol.trace:
+                if ev[0] == "begin":
+                    assert chosen[ev[1]] == d
+
+
+def test_fleet_rejects_dynamic_disciplines_and_coupling_kwargs():
+    jobs = release_jobs(periodic_taskset(6, 2.0, seed=1))
+    with pytest.raises(ValueError):
+        simulate_fleet(jobs, Mode.FIKIT, devices=2,
+                       discipline="least_loaded")
+    with pytest.raises(ValueError):
+        simulate_fleet(jobs, Mode.FIKIT, devices=2, jitter=0.1)
+    with pytest.raises(ValueError):
+        simulate_fleet(jobs, Mode.FIKIT, devices=2, steal=True)
+    with pytest.raises(ValueError):
+        elect_devices(jobs, 2, "no_such_discipline")
