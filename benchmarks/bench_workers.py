@@ -1,0 +1,145 @@
+"""Multi-process worker fleet: aggregate goodput scaling 1 -> 2 workers.
+
+FIKIT's cloud framing ("always more task requests than the number of
+GPU available") makes the single engine process the bottleneck; this
+bench proves the worker plane actually buys throughput. An identical
+store of wall-paced jobs (every kernel completion sleeps ``PACE_S`` —
+the stand-in for real device work, large against the ~50us SQLite
+write) is drained by a 1-worker and then a 2-worker fleet via
+``WorkerSupervisor``. Measured from the supervisor's go-gate (workers
+register first, so interpreter start-up is excluded):
+
+- **aggregate goodput** (kernels/s across the fleet) must scale
+  >= 1.6x from 1 to 2 workers (``min_goodput_scaling_2w``);
+- **gold p99 protection**: claims are strict-priority, so the gold
+  class's p99 completion latency at 2 workers must not regress past
+  ``max_gold_p99_ratio_2w_vs_1w`` of the 1-worker fleet's;
+- **zero lease churn**: a healthy fleet never lets a heartbeat lapse
+  (``max_lease_churn``).
+
+Gates tracked in BENCH_workers.json, enforced by
+``scripts/check_bench_gates.py``. Set BENCH_SMOKE=1 (CI) for a smaller
+job count.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import Csv
+from repro.core.jobstore import DONE, JobStore
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import profile_tasks
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+from repro.serving.workers import (WorkerSupervisor, enqueue_specs,
+                                   fleet_status)
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+JOBS = 24 if SMOKE else 48
+KERNELS_PER_JOB = 8
+PACE_S = 0.003
+GOLD_SHARE = 0.25
+BATCH = 4
+
+
+def _specs():
+    out = []
+    for i in range(JOBS):
+        gold = i % int(1 / GOLD_SHARE) == 0
+        kid = KernelID(f"{'gold' if gold else 'bronze'}{i}/k")
+        out.append(TaskSpec(TaskKey(f"svc{i}", ()), 0 if gold else 5,
+                            [TraceKernel(kid, 0.002, 0.0005)]
+                            * KERNELS_PER_JOB))
+    return out
+
+
+def _populate(path: str) -> None:
+    specs = _specs()
+    with JobStore(path) as store:
+        enqueue_specs(store, specs,
+                      qos=lambda s: "gold" if s.priority == 0
+                      else "bronze")
+        store.snapshot_profiles(profile_tasks(specs, T=2, jitter=0.0,
+                                              measurement_overhead=0.0))
+        store.checkpoint()
+
+
+def _run_fleet(n: int, tmp: str) -> dict:
+    """Drain a fresh identical store with an n-worker fleet; returns
+    wall/goodput/gold-latency stats measured from the go-gate."""
+    path = os.path.join(tmp, f"fleet_{n}.db")
+    _populate(path)
+    sup = WorkerSupervisor(path, n=n, pace_s=PACE_S, batch=BATCH,
+                           lease_s=10.0, heartbeat_s=0.5)
+    sup.start()
+    try:
+        summaries = sup.wait(timeout=600.0)
+    finally:
+        sup.kill()
+    with JobStore(path) as store:
+        recs = store.jobs()
+        fs = fleet_status(store)
+    done = [r for r in recs if r.state == DONE]
+    assert len(done) == JOBS, f"{len(done)}/{JOBS} jobs done"
+    wall = max(r.updated_at for r in done) - sup.t_go
+    gold_lat = sorted(r.updated_at - sup.t_go for r in done
+                      if r.qos == "gold")
+    p99 = gold_lat[min(len(gold_lat) - 1,
+                       int(round(0.99 * (len(gold_lat) - 1))))]
+    kernels = sum(s["kernels_done"] for s in summaries)
+    return {"workers": n, "wall_s": round(wall, 4),
+            "kernels": kernels,
+            "goodput_kps": round(kernels / wall, 2),
+            "gold_jobs": len(gold_lat),
+            "gold_p99_s": round(p99, 4),
+            "lease_churn": fs["lease_churn"]}
+
+
+def main() -> Csv:
+    csvout = Csv(header=("name", "value", "derived"))
+    tmp = tempfile.mkdtemp(prefix="fikit_bench_workers_")
+    fleets = {}
+    try:
+        for n in (1, 2):
+            t0 = time.perf_counter()
+            fleets[str(n)] = _run_fleet(n, tmp)
+            fleets[str(n)]["bench_wall_s"] = round(
+                time.perf_counter() - t0, 2)
+    finally:
+        import shutil
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    f1, f2 = fleets["1"], fleets["2"]
+    scaling = round(f2["goodput_kps"] / f1["goodput_kps"], 3)
+    gold_ratio = round(f2["gold_p99_s"] / f1["gold_p99_s"], 3)
+    churn = f1["lease_churn"] + f2["lease_churn"]
+    for key, f in fleets.items():
+        csvout.add(f"goodput_kps_{key}w", f["goodput_kps"],
+                   f"{f['kernels']}k in {f['wall_s']}s")
+        csvout.add(f"gold_p99_s_{key}w", f["gold_p99_s"],
+                   f"{f['gold_jobs']} gold jobs")
+    csvout.add("goodput_scaling_2w_vs_1w", scaling, "gate >= 1.6")
+    csvout.add("gold_p99_ratio_2w_vs_1w", gold_ratio, "gate <= 1.15")
+    csvout.add("lease_churn_total", churn, "gate == 0")
+    csvout.emit("Worker fleet: aggregate goodput scaling with gold p99 "
+                "protection")
+    csvout.json_payload = {
+        "smoke": SMOKE,
+        "jobs": JOBS,
+        "kernels_per_job": KERNELS_PER_JOB,
+        "pace_ms": 1e3 * PACE_S,
+        "gold_share": GOLD_SHARE,
+        "fleets": fleets,
+        "scaling": {
+            "goodput_scaling_2w_vs_1w": scaling,
+            "gold_p99_ratio_2w_vs_1w": gold_ratio,
+            "lease_churn_total": churn,
+        },
+    }
+    return csvout
+
+
+if __name__ == "__main__":
+    main()

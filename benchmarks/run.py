@@ -29,6 +29,7 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),                # deliverable g
     ("serving_load", "benchmarks.bench_serving_load"),        # admission
     ("fleet", "benchmarks.bench_fleet"),                      # cluster scale
+    ("workers", "benchmarks.bench_workers"),                  # worker fleet
     ("overheads", "benchmarks.bench_overheads"),              # Fig 13/14/15
 ]
 

@@ -45,6 +45,11 @@ Gate semantics per benchmark (tolerances in benchmarks/bench_gates.json):
   holds (offered == admitted + rejected + shed + requeued), and the
   wired-but-disabled plane's policy decision trace is bit-identical to
   the no-plane direct invoke path.
+- workers — the multi-process worker plane actually buys throughput:
+  aggregate goodput scales >= the floor from 1 to 2 workers draining
+  one store, the gold class's p99 completion latency does not regress
+  past its ratio ceiling across the fan-out (strict-priority claims),
+  and a healthy fleet reclaims zero leases.
 - overheads (nightly; wall clock) — the online measurement loop's
   marginal cost over the offline FIKIT sharing stage (median across
   archs of on-vs-off JCT delta) stays inside the paper's Fig-14 +/-5%
@@ -70,7 +75,8 @@ TOLERANCES = REPO / "benchmarks" / "bench_gates.json"
 
 #: the smoke benches every PR runs; "overheads" joins in the nightly run
 DEFAULT_REQUIRED = ("scheduler_micro", "placement", "disciplines",
-                    "interference", "recovery", "serving_load", "fleet")
+                    "interference", "recovery", "serving_load", "fleet",
+                    "workers")
 ALL_GATED = DEFAULT_REQUIRED + ("overheads",)
 
 Check = Tuple[str, bool, str]          # (gate name, ok, detail)
@@ -236,6 +242,27 @@ def _check_fleet(p: dict, tol: dict) -> List[Check]:
     ]
 
 
+def _check_workers(p: dict, tol: dict) -> List[Check]:
+    s = p["scaling"]
+    return [
+        ("aggregate goodput scaling 1 -> 2 workers",
+         s["goodput_scaling_2w_vs_1w"] >= tol["min_goodput_scaling_2w"],
+         f"{s['goodput_scaling_2w_vs_1w']}x >= "
+         f"{tol['min_goodput_scaling_2w']}x "
+         f"({p['fleets']['1']['goodput_kps']} -> "
+         f"{p['fleets']['2']['goodput_kps']} kernels/s)"),
+        ("gold p99 protection across the fan-out",
+         s["gold_p99_ratio_2w_vs_1w"]
+         <= tol["max_gold_p99_ratio_2w_vs_1w"],
+         f"gold p99 2w/1w {s['gold_p99_ratio_2w_vs_1w']} <= "
+         f"{tol['max_gold_p99_ratio_2w_vs_1w']}"),
+        ("zero lease churn in a healthy fleet",
+         s["lease_churn_total"] <= tol["max_lease_churn"],
+         f"{s['lease_churn_total']} reclaims <= "
+         f"{tol['max_lease_churn']}"),
+    ]
+
+
 CHECKERS = {
     "scheduler_micro": _check_scheduler_micro,
     "placement": _check_placement,
@@ -245,6 +272,7 @@ CHECKERS = {
     "recovery": _check_recovery,
     "serving_load": _check_serving_load,
     "fleet": _check_fleet,
+    "workers": _check_workers,
 }
 
 

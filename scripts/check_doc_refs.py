@@ -1,11 +1,11 @@
-"""Docs integrity check: every internal link and repo path referenced by
-the maintained docs must exist.
+"""Docs integrity check: every internal link, repo path, serve-CLI verb,
+and bench-json filename referenced by the maintained docs must exist.
 
     python -m scripts.check_doc_refs
 
-Checked documents: README.md, docs/ARCHITECTURE.md (plus any extra paths
-passed as argv). Two kinds of references are verified against the
-repository tree:
+Checked documents: README.md, docs/ARCHITECTURE.md, docs/OPERATIONS.md,
+docs/BENCHMARKS.md (plus any extra paths passed as argv). Four kinds of
+references are verified:
 
 - markdown link targets ``[text](target)`` — external schemes
   (http/https/mailto) and pure in-page anchors are skipped; relative
@@ -16,19 +16,32 @@ repository tree:
   spaces, globs, placeholders, or call syntax), and ends in a known text/
   code extension or lives under a known top-level directory. Module
   dotted names (``repro.core.policy``), CLI snippets, and ``<name>``
-  templates are deliberately not matched.
+  templates are deliberately not matched;
+- serve CLI verbs — a ``python -m repro.launch.serve <verb>`` invocation
+  (in a code block) or a ```serve <verb>``` inline span must name a verb
+  from the REAL argparse registry, read by AST-parsing the module-level
+  ``VERBS``/``WORKER_VERBS`` tuples out of ``src/repro/launch/serve.py``
+  (the docs CI job installs no dependencies, so nothing is imported);
+  ``serve workers <sub>`` additionally validates the sub-verb. The
+  legacy flat form (flags directly after the module) is skipped;
+- bench json filenames — every literal ``BENCH_<name>.json`` mention
+  must exist at the repo root (``<name>`` templates do not match the
+  literal pattern and are skipped).
 
 Exit status 1 with a per-reference listing when anything dangles, so CI
 fails the docs job instead of shipping broken links.
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-DOCS = ("README.md", "docs/ARCHITECTURE.md")
+DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/OPERATIONS.md",
+        "docs/BENCHMARKS.md")
+SERVE_SRC = REPO / "src" / "repro" / "launch" / "serve.py"
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _CODE = re.compile(r"`([^`\n]+)`")
@@ -38,6 +51,83 @@ _PATHISH = re.compile(r"^[A-Za-z0-9_.\-/]+$")
 _EXTS = (".py", ".md", ".json", ".toml", ".yml", ".yaml", ".txt", ".cfg")
 _TOP_DIRS = ("src", "tests", "benchmarks", "examples", "docs", "scripts",
              ".github")
+# `python -m repro.launch.serve <verb> [<sub>]`, tolerating one
+# backslash-newline continuation before each token. Tokens exclude
+# backticks/backslashes so span-final verbs don't swallow the closer.
+_SERVE_CLI = re.compile(
+    r"-m\s+repro\.launch\.serve"
+    r"(?:[ \t]*\\\n)?[ \t]+([^\s`\\]+)"
+    r"(?:(?:[ \t]*\\\n)?[ \t]+([^\s`\\]+))?")
+# inline spans like `serve drain` / `serve workers status --json`
+_SERVE_SPAN = re.compile(r"^serve\s+([a-z][\w|-]*)(?:\s+([a-z][\w-]*))?")
+_BENCH_JSON = re.compile(r"BENCH_\w+\.json")
+
+_REGISTRY = None
+
+
+def serve_verb_registry():
+    """(VERBS, WORKER_VERBS) from the serve CLI's argparse registry.
+
+    AST-parses the module-level tuple assignments out of
+    ``src/repro/launch/serve.py`` instead of importing it: the CI docs
+    job runs on a bare interpreter with no dependencies installed, and
+    serve.py's verb handlers pull in the whole serving stack.
+    ``tests/test_check_doc_refs.py`` asserts these tuples match the live
+    module, so the parse cannot silently drift from the real CLI.
+    """
+    global _REGISTRY
+    if _REGISTRY is None:
+        tree = ast.parse(SERVE_SRC.read_text(encoding="utf-8"))
+        found = {}
+        for node in tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id in ("VERBS", "WORKER_VERBS")):
+                found[node.targets[0].id] = tuple(
+                    ast.literal_eval(node.value))
+        if set(found) != {"VERBS", "WORKER_VERBS"}:
+            raise RuntimeError(
+                f"could not AST-parse VERBS/WORKER_VERBS from {SERVE_SRC}")
+        _REGISTRY = (found["VERBS"], found["WORKER_VERBS"])
+    return _REGISTRY
+
+
+def _verb_error(verb: str, sub, verbs, worker_verbs):
+    """-> error string for one doc-mentioned (verb, sub) pair, or None.
+
+    ``verb`` may be pipe-joined shorthand (``cancel|pause|resume``);
+    every alternative must be registered. A flag-shaped ``sub`` is not a
+    sub-verb and is ignored.
+    """
+    for v in verb.split("|"):
+        if v not in verbs:
+            return f"unknown serve verb '{v}' (known: {', '.join(verbs)})"
+    if verb == "workers" and sub and not sub.startswith("-"):
+        if sub not in worker_verbs:
+            return (f"unknown serve workers sub-verb '{sub}' "
+                    f"(known: {', '.join(worker_verbs)})")
+    return None
+
+
+def _iter_verb_errors(text: str):
+    verbs, worker_verbs = serve_verb_registry()
+    for m in _SERVE_CLI.finditer(text):
+        verb, sub = m.group(1), m.group(2)
+        if verb.startswith(("-", "<")):
+            continue  # flat form (flags first) or a <verb> placeholder
+        err = _verb_error(verb, sub, verbs, worker_verbs)
+        if err:
+            yield f"`-m repro.launch.serve {verb}`", err
+    for m in _CODE.finditer(text):
+        span = m.group(1)
+        if "repro.launch.serve" in span:
+            continue  # already covered by the CLI pattern above
+        sm = _SERVE_SPAN.match(span)
+        if not sm:
+            continue
+        err = _verb_error(sm.group(1), sm.group(2), verbs, worker_verbs)
+        if err:
+            yield f"`{span}`", err
 
 
 def _iter_link_targets(text: str):
@@ -74,6 +164,11 @@ def check_document(doc: Path):
     for ref, path in _iter_code_paths(text):
         if not (REPO / path).exists():
             missing.append((ref, path))
+    for ref, err in _iter_verb_errors(text):
+        missing.append((ref, err))
+    for name in sorted(set(_BENCH_JSON.findall(text))):
+        if not (REPO / name).exists():
+            missing.append((f"`{name}`", f"{name} not at repo root"))
     return missing
 
 

@@ -27,17 +27,46 @@ engines write THROUGH so a killed process can restart and resume:
 - **controls** — a queue of operator verbs (``cancel``/``pause``/
   ``resume``/``drain``) written by the CLI (``repro.launch.serve``) and
   consumed by a live serving process sharing the store file.
+- **workers** — one row per registered engine worker process (see
+  ``repro.serving.workers``): heartbeat timestamp, lifecycle state, and
+  drained-work counters, the raw material of the ``serve workers
+  status`` fleet view.
+
+**Leases** (the multi-process serving contract): a worker claims
+``submitted`` jobs by atomically stamping ``owner`` + ``lease_expires``
+inside one ``BEGIN IMMEDIATE`` transaction (``claim_jobs``), renews the
+lease while executing (``renew_leases``, the heartbeat), and any
+surviving worker may ``reap_expired`` a lease whose deadline passed —
+the job returns to ``submitted`` with its completion watermark intact,
+so the next claimant re-runs exactly the remaining kernel suffix (the
+same ``spec_from_record`` suffix logic crash recovery uses). The
+``completions`` primary key keeps reclamation honest: a duplicated
+kernel after a botched reclaim is a structural
+``DuplicateCompletion``, not silent double work.
 
 Backends: a file path opens SQLite in WAL mode with per-statement
 durability (autocommit); ``JobStore.memory()`` opens ``:memory:`` — same
 schema and API, nothing touches disk — for tests and for engines that
 want conservation checking without persistence. All methods are
-thread-safe (one internal lock; SQLite connection shared).
+thread-safe (one internal lock; SQLite connection shared); file stores
+are additionally safe to share across processes (WAL + SQLite's
+busy-wait, which is how N workers drain one queue).
 
 The standing contract: a store attached to an engine only OBSERVES —
 recording submissions and completions never changes a scheduling
 decision, pinned by randomized store-attached-vs-absent differential
 cases in ``tests/test_recovery.py``.
+
+Write-order contract (relied on by every recovery/reclaim path):
+
+1. ``record_submit`` happens BEFORE the submitting clock starts — a
+   crash before a late arrival cannot lose the job (submit-ahead);
+2. ``record_completion`` is durable BEFORE any scheduling side-effect
+   of that kernel boundary (write-ahead) — a crash at boundary ``b``
+   leaves exactly ``b + 1`` rows and recovery re-submits the suffix;
+3. terminal ``record_state`` (``done``/``cancelled``) comes LAST and
+   also releases any lease, so a job can never be simultaneously
+   finished and claimable.
 """
 from __future__ import annotations
 
@@ -78,7 +107,22 @@ CREATE TABLE IF NOT EXISTS jobs (
     spec         TEXT,
     state        TEXT NOT NULL,
     submitted_at REAL,
-    updated_at   REAL
+    updated_at   REAL,
+    qos          TEXT,
+    owner        TEXT,
+    lease_expires REAL,
+    reclaims     INTEGER NOT NULL DEFAULT 0
+);
+CREATE TABLE IF NOT EXISTS workers (
+    worker_id      TEXT PRIMARY KEY,
+    state          TEXT NOT NULL,
+    started_at     REAL,
+    last_heartbeat REAL,
+    jobs_done      INTEGER NOT NULL DEFAULT 0,
+    kernels_done   INTEGER NOT NULL DEFAULT 0,
+    steals         INTEGER NOT NULL DEFAULT 0,
+    reaped         INTEGER NOT NULL DEFAULT 0,
+    batches        INTEGER NOT NULL DEFAULT 0
 );
 CREATE TABLE IF NOT EXISTS completions (
     job_id       INTEGER NOT NULL,
@@ -130,7 +174,13 @@ class StreamOrderViolation(JobStoreError):
 @dataclass
 class JobRecord:
     """One job row, hydrated (``completed`` is the stream watermark: the
-    number of contiguously completed kernels)."""
+    number of contiguously completed kernels).
+
+    ``qos`` is the shard key stamped at submit time (a QoS class or
+    service name — see ``repro.serving.workers``); ``owner`` /
+    ``lease_expires`` describe the live lease when a worker holds the
+    job; ``reclaims`` counts how many times an expired lease was reaped
+    (the per-job share of fleet lease churn)."""
     job_id: int
     key: TaskKey
     priority: int
@@ -140,13 +190,20 @@ class JobRecord:
     deadline: Optional[float] = None
     spec: Optional[dict] = None
     submitted_at: float = 0.0
+    updated_at: float = 0.0
+    qos: Optional[str] = None
+    owner: Optional[str] = None
+    lease_expires: Optional[float] = None
+    reclaims: int = 0
 
     @property
     def remaining(self) -> int:
+        """Kernels not yet completed (``n_kernels`` minus watermark)."""
         return self.n_kernels - self.completed
 
     @property
     def incomplete(self) -> bool:
+        """True while the job can still make progress (not terminal)."""
         return self.state not in TERMINAL_STATES
 
 
@@ -190,6 +247,7 @@ class JobStore:
         self._db = sqlite3.connect(path, isolation_level=None,
                                    check_same_thread=False)
         self._db.executescript(_SCHEMA)
+        self._migrate()
         if path != ":memory:":
             # WAL keeps concurrent CLI readers (status verb) from
             # blocking the serving process's boundary writes
@@ -199,6 +257,17 @@ class JobStore:
             "INSERT OR IGNORE INTO meta (k, v) VALUES ('schema', ?)",
             (SCHEMA_VERSION,))
 
+    def _migrate(self) -> None:
+        """Bring a store created by an older schema up to date (``CREATE
+        TABLE IF NOT EXISTS`` never adds columns to an existing file)."""
+        have = {row[1] for row in
+                self._db.execute("PRAGMA table_info(jobs)").fetchall()}
+        for col, decl in (("qos", "TEXT"), ("owner", "TEXT"),
+                          ("lease_expires", "REAL"),
+                          ("reclaims", "INTEGER NOT NULL DEFAULT 0")):
+            if col not in have:
+                self._db.execute(f"ALTER TABLE jobs ADD COLUMN {col} {decl}")
+
     @classmethod
     def memory(cls) -> "JobStore":
         """In-memory backend: same schema/API, no disk, no durability —
@@ -206,6 +275,7 @@ class JobStore:
         return cls(":memory:")
 
     def close(self) -> None:
+        """Close the underlying SQLite connection."""
         with self._lock:
             self._db.close()
 
@@ -221,11 +291,15 @@ class JobStore:
                       spec: Optional[dict] = None,
                       deadline: Optional[float] = None,
                       state: str = RUNNING,
+                      qos: Optional[str] = None,
                       at: Optional[float] = None) -> int:
         """Record a job submission; returns its id. ``job_id=None``
         allocates the next id. An existing row (a recovery re-submission)
         is NOT overwritten — its original spec, kernel count, and
-        completions survive; only its state advances to ``state``."""
+        completions survive; only its state advances to ``state``.
+        ``qos`` stamps the shard key worker fleets route claims by
+        (``state=SUBMITTED`` puts the job on the claimable queue rather
+        than marking it already running)."""
         now = time.time() if at is None else at
         with self._lock:
             if job_id is not None:
@@ -239,23 +313,28 @@ class JobStore:
             cur = self._db.execute(
                 "INSERT INTO jobs (job_id, process, args, priority, "
                 "n_kernels, deadline, spec, state, submitted_at, "
-                "updated_at) VALUES (?, ?, ?, ?, ?, ?, ?, ?, ?, ?)",
+                "updated_at, qos) VALUES (?, ?, ?, ?, ?, ?, ?, ?, ?, ?, ?)",
                 (job_id, key.process, json.dumps(list(key.args)), priority,
                  n_kernels, deadline,
                  None if spec is None else json.dumps(spec),
-                 state, now, now))
+                 state, now, now, qos))
             return job_id if job_id is not None else cur.lastrowid
 
     def record_state(self, job_id: int, state: str,
                      at: Optional[float] = None) -> None:
+        """Advance a job's lifecycle state. A terminal state (``done``/
+        ``cancelled``) also releases any lease — a finished job can
+        never be simultaneously claimable."""
         if state not in STATES:
             raise ValueError(f"unknown job state {state!r} "
                              f"(known: {list(STATES)})")
         now = time.time() if at is None else at
+        release = (", owner = NULL, lease_expires = NULL"
+                   if state in TERMINAL_STATES else "")
         with self._lock:
             cur = self._db.execute(
-                "UPDATE jobs SET state = ?, updated_at = ? "
-                "WHERE job_id = ?", (state, now, job_id))
+                f"UPDATE jobs SET state = ?, updated_at = ?{release} "
+                f"WHERE job_id = ?", (state, now, job_id))
             if cur.rowcount == 0:
                 raise UnknownJob(f"job {job_id} not in store")
 
@@ -303,7 +382,8 @@ class JobStore:
 
     def _hydrate(self, row) -> JobRecord:
         (job_id, process, args, priority, n_kernels, deadline, spec,
-         state, submitted_at) = row
+         state, submitted_at, updated_at, qos, owner, lease_expires,
+         reclaims) = row
         return JobRecord(
             job_id=job_id,
             key=TaskKey(process, tuple(json.loads(args))),
@@ -311,10 +391,24 @@ class JobStore:
             completed=self._watermark(job_id), state=state,
             deadline=deadline,
             spec=None if spec is None else json.loads(spec),
-            submitted_at=submitted_at or 0.0)
+            submitted_at=submitted_at or 0.0,
+            updated_at=updated_at or 0.0,
+            qos=qos, owner=owner, lease_expires=lease_expires,
+            reclaims=reclaims or 0)
 
     _JOB_COLS = ("job_id, process, args, priority, n_kernels, deadline, "
-                 "spec, state, submitted_at")
+                 "spec, state, submitted_at, updated_at, qos, owner, "
+                 "lease_expires, reclaims")
+
+    def _select_jobs(self, ids: Sequence[int]) -> List[JobRecord]:
+        if not ids:
+            return []
+        marks = ",".join("?" * len(ids))
+        rows = self._db.execute(
+            f"SELECT {self._JOB_COLS} FROM jobs "
+            f"WHERE job_id IN ({marks}) ORDER BY priority, job_id",
+            tuple(ids)).fetchall()
+        return [self._hydrate(r) for r in rows]
 
     def job(self, job_id: int) -> JobRecord:
         with self._lock:
@@ -373,6 +467,235 @@ class JobStore:
             ids.append(rec.job_id)
             bases.append(rec.completed)
         return specs, ids, bases
+
+    # -------------------------------------------------------------- leases
+    def claim_jobs(self, worker: str, *, limit: int = 1,
+                   lease_s: float = 5.0,
+                   shards: Optional[Sequence[str]] = None,
+                   now: Optional[float] = None) -> List[JobRecord]:
+        """Atomically claim up to ``limit`` replayable ``submitted`` jobs
+        for ``worker``: stamp ``owner`` + ``lease_expires`` and advance
+        them to ``running`` inside one ``BEGIN IMMEDIATE`` transaction,
+        so two workers sharing the store file can never claim the same
+        job. Selection is strict-priority (then submission order) —
+        gold-class work is always claimed before bronze. ``shards``
+        restricts the claim to jobs whose ``qos`` shard key is in the
+        sequence (None = any shard, the work-stealing fallback).
+
+        A row whose lease is still live is NOT claimable even while its
+        state reads ``submitted`` — the owning worker's simulator
+        write-ahead parks claimed jobs in ``submitted`` until their
+        arrival event fires, and only lease expiry (not that transient)
+        may hand work to another worker.
+
+        Returns the claimed rows, hydrated; an empty list when nothing
+        matched."""
+        if limit < 1:
+            raise ValueError(f"claim limit must be >= 1, got {limit}")
+        t = time.time() if now is None else now
+        where = ("state = ? AND spec IS NOT NULL "
+                 "AND (owner IS NULL OR lease_expires < ?)")
+        params: list = [SUBMITTED, t]
+        if shards is not None:
+            shards = list(shards)
+            if not shards:
+                return []
+            where += (" AND qos IN ("
+                      + ",".join("?" * len(shards)) + ")")
+            params += shards
+        with self._lock:
+            self._db.execute("BEGIN IMMEDIATE")
+            try:
+                rows = self._db.execute(
+                    f"SELECT {self._JOB_COLS} FROM jobs WHERE {where} "
+                    f"ORDER BY priority, job_id LIMIT ?",
+                    (*params, limit)).fetchall()
+                ids = [r[0] for r in rows]
+                if ids:
+                    # claiming over a stale owner IS a reclaim (the
+                    # crash-before-arrival window leaves rows submitted
+                    # with an expired lease; no reap pass sees them)
+                    marks = ",".join("?" * len(ids))
+                    self._db.execute(
+                        f"UPDATE jobs SET reclaims = reclaims + (CASE "
+                        f"WHEN owner IS NOT NULL AND owner != ? THEN 1 "
+                        f"ELSE 0 END), owner = ?, lease_expires = ?, "
+                        f"state = ?, updated_at = ? "
+                        f"WHERE job_id IN ({marks})",
+                        (worker, worker, t + lease_s, RUNNING, t, *ids))
+                self._db.execute("COMMIT")
+            except BaseException:
+                self._db.execute("ROLLBACK")
+                raise
+            return self._select_jobs(ids)
+
+    def renew_leases(self, worker: str, lease_s: float = 5.0,
+                     now: Optional[float] = None) -> int:
+        """Heartbeat: extend every lease ``worker`` currently holds (and
+        refresh its worker-table heartbeat). Returns how many leases
+        were renewed — 0 tells a worker its leases were reaped out from
+        under it (it should stop writing and re-claim)."""
+        t = time.time() if now is None else now
+        with self._lock:
+            cur = self._db.execute(
+                "UPDATE jobs SET lease_expires = ? "
+                "WHERE owner = ? AND state = ?",
+                (t + lease_s, worker, RUNNING))
+            self._db.execute(
+                "UPDATE workers SET last_heartbeat = ? WHERE worker_id = ?",
+                (t, worker))
+            return cur.rowcount
+
+    def reap_expired(self, by: Optional[str] = None,
+                     now: Optional[float] = None) -> List[JobRecord]:
+        """Reclaim every job whose lease expired: back to ``submitted``
+        with the lease cleared and ``reclaims`` bumped, so a surviving
+        worker's next ``claim_jobs`` re-runs exactly the remaining
+        kernel suffix (completions — the watermark — are untouched).
+        ``by`` credits the reap to a worker's fleet-status counters.
+        Returns the reclaimed rows (post-reap state)."""
+        t = time.time() if now is None else now
+        with self._lock:
+            self._db.execute("BEGIN IMMEDIATE")
+            try:
+                rows = self._db.execute(
+                    f"SELECT {self._JOB_COLS} FROM jobs "
+                    f"WHERE state = ? AND owner IS NOT NULL "
+                    f"AND lease_expires < ?", (RUNNING, t)).fetchall()
+                ids = [r[0] for r in rows]
+                if ids:
+                    marks = ",".join("?" * len(ids))
+                    self._db.execute(
+                        f"UPDATE jobs SET state = ?, owner = NULL, "
+                        f"lease_expires = NULL, reclaims = reclaims + 1, "
+                        f"updated_at = ? WHERE job_id IN ({marks})",
+                        (SUBMITTED, t, *ids))
+                    if by is not None:
+                        self._db.execute(
+                            "UPDATE workers SET reaped = reaped + ? "
+                            "WHERE worker_id = ?", (len(ids), by))
+                self._db.execute("COMMIT")
+            except BaseException:
+                self._db.execute("ROLLBACK")
+                raise
+            return self._select_jobs(ids)
+
+    def pending_jobs(self, shards: Optional[Sequence[str]] = None,
+                     now: Optional[float] = None) -> int:
+        """How many replayable jobs are claimable right now (``submitted``
+        state, no live lease), optionally restricted to ``shards`` — the
+        backpressure probe and the drain-on-empty check. Matches the
+        ``claim_jobs`` predicate exactly."""
+        t = time.time() if now is None else now
+        where = ("state = ? AND spec IS NOT NULL "
+                 "AND (owner IS NULL OR lease_expires < ?)")
+        params: list = [SUBMITTED, t]
+        if shards is not None:
+            shards = list(shards)
+            if not shards:
+                return 0
+            where += " AND qos IN (" + ",".join("?" * len(shards)) + ")"
+            params += shards
+        with self._lock:
+            row = self._db.execute(
+                f"SELECT COUNT(*) FROM jobs WHERE {where}",
+                params).fetchone()
+        return row[0]
+
+    def leased_jobs(self) -> int:
+        """How many non-terminal jobs are currently held under a worker
+        lease (live or expired — an expired lease still means a reap or
+        re-claim is owed, so a draining sibling must not exit yet)."""
+        with self._lock:
+            row = self._db.execute(
+                "SELECT COUNT(*) FROM jobs WHERE owner IS NOT NULL "
+                "AND state NOT IN (?, ?)", TERMINAL_STATES).fetchone()
+        return row[0]
+
+    def lease_churn(self) -> int:
+        """Total lease reclaims across all jobs (fleet churn metric)."""
+        with self._lock:
+            row = self._db.execute(
+                "SELECT COALESCE(SUM(reclaims), 0) FROM jobs").fetchone()
+        return row[0]
+
+    def shards(self) -> List[str]:
+        """Distinct shard keys stamped on stored jobs (sorted), for a
+        supervisor partitioning shards across workers."""
+        with self._lock:
+            rows = self._db.execute(
+                "SELECT DISTINCT qos FROM jobs "
+                "WHERE qos IS NOT NULL ORDER BY qos").fetchall()
+        return [r[0] for r in rows]
+
+    # ------------------------------------------------------------- workers
+    def register_worker(self, worker: str, state: str = "running",
+                        now: Optional[float] = None) -> None:
+        """Create (or reset) a worker's fleet-status row."""
+        t = time.time() if now is None else now
+        with self._lock:
+            self._db.execute(
+                "INSERT INTO workers (worker_id, state, started_at, "
+                "last_heartbeat) VALUES (?, ?, ?, ?) "
+                "ON CONFLICT (worker_id) DO UPDATE SET state = excluded."
+                "state, started_at = excluded.started_at, last_heartbeat "
+                "= excluded.last_heartbeat, jobs_done = 0, kernels_done "
+                "= 0, steals = 0, reaped = 0, batches = 0",
+                (worker, state, t, t))
+
+    def worker_update(self, worker: str, state: Optional[str] = None,
+                      jobs_done: int = 0, kernels_done: int = 0,
+                      steals: int = 0, batches: int = 0,
+                      now: Optional[float] = None) -> None:
+        """Accumulate a worker's drained-work counters (deltas) and
+        optionally advance its lifecycle state."""
+        t = time.time() if now is None else now
+        with self._lock:
+            self._db.execute(
+                "UPDATE workers SET jobs_done = jobs_done + ?, "
+                "kernels_done = kernels_done + ?, steals = steals + ?, "
+                "batches = batches + ?, last_heartbeat = ? "
+                "WHERE worker_id = ?",
+                (jobs_done, kernels_done, steals, batches, t, worker))
+            if state is not None:
+                self._db.execute(
+                    "UPDATE workers SET state = ? WHERE worker_id = ?",
+                    (state, worker))
+
+    def workers(self) -> List[dict]:
+        """All registered workers' fleet-status rows, as dicts."""
+        cols = ("worker_id", "state", "started_at", "last_heartbeat",
+                "jobs_done", "kernels_done", "steals", "reaped", "batches")
+        with self._lock:
+            rows = self._db.execute(
+                f"SELECT {', '.join(cols)} FROM workers "
+                f"ORDER BY worker_id").fetchall()
+        return [dict(zip(cols, r)) for r in rows]
+
+    # --------------------------------------------------------------- flags
+    def set_flag(self, key: str, value: str) -> None:
+        """Set a cross-process coordination flag (e.g. the supervisor's
+        ``workers_go`` start gate or the ``workers_stop`` drain signal).
+        Flags live in the meta table under a ``flag:`` namespace."""
+        with self._lock:
+            self._db.execute(
+                "INSERT INTO meta (k, v) VALUES (?, ?) "
+                "ON CONFLICT (k) DO UPDATE SET v = excluded.v",
+                (f"flag:{key}", value))
+
+    def flag(self, key: str) -> Optional[str]:
+        """Read a coordination flag; None when never set/cleared."""
+        with self._lock:
+            row = self._db.execute(
+                "SELECT v FROM meta WHERE k = ?",
+                (f"flag:{key}",)).fetchone()
+        return None if row is None else row[0]
+
+    def clear_flag(self, key: str) -> None:
+        """Delete a coordination flag."""
+        with self._lock:
+            self._db.execute("DELETE FROM meta WHERE k = ?",
+                             (f"flag:{key}",))
 
     # ------------------------------------------------------------ profiles
     def snapshot_profiles(self, data: ProfiledData,
@@ -437,11 +760,15 @@ class JobStore:
 
 def coerce_store(spec) -> Optional[JobStore]:
     """Normalize an engine's ``jobstore=`` argument: None -> None, a path
-    string -> opened file store, a ``JobStore`` -> itself."""
+    string -> opened file store, a ``JobStore`` — or any object exposing
+    the store write interface, like a worker's pacing proxy -> itself."""
     if spec is None:
         return None
     if isinstance(spec, JobStore):
         return spec
     if isinstance(spec, (str, os.PathLike)):
         return JobStore(os.fspath(spec))
+    if (hasattr(spec, "record_submit")
+            and hasattr(spec, "record_completion")):
+        return spec
     raise TypeError(f"jobstore= expects None/path/JobStore, got {spec!r}")

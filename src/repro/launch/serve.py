@@ -33,13 +33,16 @@ import random
 import statistics as st
 import sys as _sys
 
-from repro.config import get_config
 from repro.core.jobstore import JobStore
 from repro.core.queues import QUEUE_DISCIPLINES
 from repro.core.scheduler import Mode
-from repro.serving import InferenceService, QoSClass, ServingSystem
 from repro.serving.loadgen import (diurnal_arrivals, merge_schedules,
                                    poisson_arrivals, replay)
+
+# NOTE: repro.serving engine / repro.config imports (which pull in JAX
+# and the model zoo) happen inside the commands that run models — the
+# pure-store verbs (status, controls, workers) must start in
+# milliseconds.
 
 
 def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
@@ -66,6 +69,8 @@ def serve_pair(high: str, low: str, mode: str = "fikit", requests: int = 8,
     (cancel/pause/resume/drain, see ``main``) act on this run through
     the shared store; ``resume=True`` first re-runs every invocation a
     previous (killed) run left incomplete in the store."""
+    from repro.config import get_config
+    from repro.serving import InferenceService, ServingSystem
     hi = InferenceService(get_config(high).reduced(), priority=0,
                           batch=batch, seq=seq, host_gap=host_gap)
     lo = InferenceService(get_config(low).reduced(), priority=5,
@@ -141,6 +146,8 @@ def serve_load(high: str, low: str, mode: str = "fikit",
     with ``deadline`` set, SLO shedding. The measurement phase's JCTs
     prime the plane's service-time EMA, so shedding is informed from the
     first request."""
+    from repro.config import get_config
+    from repro.serving import InferenceService, QoSClass, ServingSystem
     hi = InferenceService(get_config(high).reduced(), priority=0,
                           batch=1, seq=32)
     lo = InferenceService(get_config(low).reduced(), priority=5,
@@ -189,7 +196,11 @@ def serve_load(high: str, low: str, mode: str = "fikit",
 
 #: CLI verbs; anything else as the first argv token means the legacy
 #: flat form, which is rewritten to ``submit`` for back-compat
-VERBS = ("submit", "load", "status", "cancel", "pause", "resume", "drain")
+VERBS = ("submit", "load", "status", "cancel", "pause", "resume", "drain",
+         "workers")
+
+#: Sub-verbs of ``workers`` (the multi-process fleet surface).
+WORKER_VERBS = ("run", "status", "stop")
 
 
 def _cmd_submit(args) -> None:
@@ -229,6 +240,52 @@ def _cmd_control(verb: str, args) -> None:
 def _add_store_arg(p, required=True) -> None:
     p.add_argument("--jobstore", required=required,
                    help="path of the durable job store (SQLite)")
+
+
+def _cmd_workers(args) -> None:
+    """The fleet surface: ``workers run`` spawns N worker processes
+    over one store and drains it; ``workers status`` aggregates the
+    fleet view (per-worker goodput, per-class JCT, lease churn);
+    ``workers stop`` requests a graceful drain (each worker finishes
+    its current batch, then exits)."""
+    import json as _json
+
+    from repro.serving.workers import WorkerSupervisor, fleet_status
+    if args.wverb == "run":
+        sup = WorkerSupervisor(args.jobstore, n=args.n, mode=args.mode,
+                               lease_s=args.lease,
+                               heartbeat_s=args.heartbeat,
+                               batch=args.batch, pace_s=args.pace,
+                               shard=args.shard)
+        sup.start()
+        try:
+            summaries = sup.wait(timeout=args.timeout)
+        finally:
+            sup.kill()
+        for s in summaries:
+            print(f"  {s['worker_id']}: jobs={s['jobs_done']} "
+                  f"kernels={s['kernels_done']} steals={s['steals']} "
+                  f"batches={s['batches']}")
+    with JobStore(args.jobstore) as store:
+        if args.wverb == "stop":
+            store.set_flag("workers_stop", "1")
+            print(f"queued fleet stop in {args.jobstore}")
+            return
+        fs = fleet_status(store)
+    if getattr(args, "json", False):
+        print(_json.dumps(fs, indent=2))
+        return
+    print(f"{'worker':<10} {'state':<9} {'jobs':>5} {'kernels':>8} "
+          f"{'steals':>6} {'reaped':>6} {'goodput/s':>10}")
+    for w in fs["workers"]:
+        print(f"{w['worker_id']:<10} {w['state']:<9} {w['jobs_done']:>5} "
+              f"{w['kernels_done']:>8} {w['steals']:>6} {w['reaped']:>6} "
+              f"{w['goodput_kps']:>10.1f}")
+    for name, c in fs["classes"].items():
+        print(f"  class {name}: jobs={c['jobs']} "
+              f"jct_p50={c['jct_p50']:.3f}s jct_p99={c['jct_p99']:.3f}s")
+    print(f"  pending={fs['pending']} leased={fs['leased']} "
+          f"lease_churn={fs['lease_churn']}")
 
 
 def main(argv=None):
@@ -288,6 +345,40 @@ def main(argv=None):
 
     st_ = sub.add_parser("status", help="print the store's job table")
     _add_store_arg(st_)
+
+    wp = sub.add_parser("workers", help="multi-process worker fleet "
+                                        "over one job store")
+    wsub = wp.add_subparsers(dest="wverb", required=True)
+    wr = wsub.add_parser("run", help="spawn N workers and drain the "
+                                     "store's submitted jobs")
+    wr.add_argument("-n", type=int, default=2, help="worker processes")
+    wr.add_argument("--mode", default="fikit",
+                    choices=[m.value for m in Mode])
+    wr.add_argument("--batch", type=int, default=16,
+                    help="max jobs per claimed batch")
+    wr.add_argument("--pace", type=float, default=0.0,
+                    help="wall seconds slept per kernel completion "
+                         "(0 = replay at store speed)")
+    wr.add_argument("--lease", type=float, default=5.0,
+                    help="claim lease duration (s); crashed workers' "
+                         "jobs are reclaimed after expiry")
+    wr.add_argument("--heartbeat", type=float, default=1.0,
+                    help="lease renewal period (s)")
+    wr.add_argument("--shard", action="store_true",
+                    help="partition the store's qos shard keys across "
+                         "workers (with any-shard stealing) instead of "
+                         "one shared queue")
+    wr.add_argument("--timeout", type=float, default=300.0)
+    _add_store_arg(wr)
+    ws = wsub.add_parser("status", help="aggregated fleet status: "
+                                        "per-worker goodput, per-class "
+                                        "JCT, lease churn")
+    ws.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    _add_store_arg(ws)
+    wx = wsub.add_parser("stop", help="graceful fleet drain (workers "
+                                      "finish their batch, then exit)")
+    _add_store_arg(wx)
     for verb, jobbed in (("cancel", True), ("pause", True),
                          ("resume", True), ("drain", False)):
         vp = sub.add_parser(verb, help=f"queue a {verb} for the live "
@@ -309,6 +400,8 @@ def main(argv=None):
                    speed=args.speed, devices=args.devices, seed=args.seed)
     elif args.verb == "status":
         _cmd_status(args)
+    elif args.verb == "workers":
+        _cmd_workers(args)
     else:
         _cmd_control(args.verb, args)
 

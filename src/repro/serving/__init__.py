@@ -1,3 +1,36 @@
-from repro.serving.engine import InferenceService, ServingSystem  # noqa: F401
-from repro.serving.admission import (  # noqa: F401
-    AdmissionPlane, AdmissionTicket, QoSClass, DEFAULT_CLASSES)
+"""Serving package: engine-hosted services, admission plane, workers.
+
+Imports are lazy (PEP 562): ``repro.serving.engine`` pulls in JAX and
+the model zoo, which an engine-worker subprocess (``python -m
+repro.serving.workers``) never needs — resolving names on first access
+keeps worker start-up to the pure-python scheduler core.
+"""
+_LAZY = {
+    "InferenceService": ("repro.serving.engine", "InferenceService"),
+    "ServingSystem": ("repro.serving.engine", "ServingSystem"),
+    "AdmissionPlane": ("repro.serving.admission", "AdmissionPlane"),
+    "AdmissionTicket": ("repro.serving.admission", "AdmissionTicket"),
+    "QoSClass": ("repro.serving.admission", "QoSClass"),
+    "DEFAULT_CLASSES": ("repro.serving.admission", "DEFAULT_CLASSES"),
+    "EngineWorker": ("repro.serving.workers", "EngineWorker"),
+    "WorkerConfig": ("repro.serving.workers", "WorkerConfig"),
+    "WorkerSupervisor": ("repro.serving.workers", "WorkerSupervisor"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value          # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -54,8 +54,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["QoSClass", "AdmissionTicket", "AdmissionPlane",
-           "DEFAULT_CLASSES", "REJECTED", "SHED", "COMPLETED", "FAILED",
-           "CANCELLED", "REQUEUED"]
+           "DEFAULT_CLASSES", "SHARD_ROUTERS", "REJECTED", "SHED",
+           "COMPLETED", "FAILED", "CANCELLED", "REQUEUED"]
 
 #: ticket outcomes
 REJECTED = "rejected"      # backpressure: bounded queue full / not admitting
@@ -66,6 +66,18 @@ CANCELLED = "cancelled"    # an ops-plane cancel verb hit the invocation
 REQUEUED = "requeued"      # still queued at stop(): resubmit later
 
 _UNSET = object()
+
+#: Pluggable shard routing for backend dispatch, mirroring the placement
+#: layer's device-election seam: a router maps an admitted (service,
+#: qos-class-name) pair to the shard key stamped on the dispatched job —
+#: ``"qos"`` keeps each QoS class together (gold jobs land on gold
+#: workers), ``"service"`` keeps each service's stream together (cache
+#: affinity). Register more by name.
+SHARD_ROUTERS: Dict[str, object] = {
+    "qos": lambda service, qos: qos,
+    "service": lambda service, qos: getattr(
+        getattr(service, "key", None), "process", None) or str(service),
+}
 
 
 @dataclass(frozen=True)
@@ -198,12 +210,29 @@ class AdmissionPlane:
     skips the background thread; callers then ``pump()`` manually (the
     deterministic mode the property tests use). ``record_events=True``
     keeps an append-only decision log of (seq, action, class, ...)
-    tuples for invariant checking."""
+    tuples for invariant checking.
+
+    **Conservation invariant** (the plane's load-bearing contract,
+    pinned by the property suite and the ``require_conservation`` bench
+    gate): every offered request resolves exactly one way, per class —
+
+        offered == admitted + rejected + shed + requeued
+
+    and, once the plane has stopped,
+
+        admitted == completed + failed + cancelled
+
+    No path may drop a ticket silently or resolve it twice; anything
+    that admits, rejects, sheds, or requeues MUST bump exactly one
+    counter under ``_lock`` and resolve the ticket exactly once.
+    ``stats()`` exposes the counters; code that adds a new outcome must
+    extend both equations or the conservation checks go red."""
 
     def __init__(self, system, classes: Sequence[QoSClass] = None,
                  max_inflight: int = 4, clock=time.perf_counter,
                  enabled: bool = True, dispatcher: bool = True,
-                 record_events: bool = False, ema_alpha: float = 0.3):
+                 record_events: bool = False, ema_alpha: float = 0.3,
+                 backend=None, shard_by: str = "qos"):
         classes = tuple(DEFAULT_CLASSES if classes is None else classes)
         if not classes:
             raise ValueError("AdmissionPlane needs at least one QoSClass")
@@ -212,7 +241,19 @@ class AdmissionPlane:
             raise ValueError(f"duplicate QoS class names: {names}")
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if shard_by not in SHARD_ROUTERS:
+            raise ValueError(f"unknown shard router {shard_by!r} "
+                             f"(have {sorted(SHARD_ROUTERS)})")
         self._system = system
+        #: dispatch backend: None routes launches to the in-process
+        #: engine (``system._invoke_async``, the default path — kept
+        #: bit-identical); an object with ``dispatch(service, on_done,
+        #: deadline=, shard=)`` + ``overloaded(shard)`` (e.g.
+        #: ``repro.serving.workers.StoreBackend``) persists them for a
+        #: worker fleet instead, with per-worker backpressure folded
+        #: into admission.
+        self._backend = backend
+        self._shard_of = SHARD_ROUTERS[shard_by]
         # strict-priority dispatch order: highest QoS (lowest level) first
         self.classes = tuple(sorted(classes,
                                     key=lambda c: (c.priority, c.name)))
@@ -306,12 +347,21 @@ class AdmissionPlane:
         t = AdmissionTicket(service, st.cls.name, now, abs_deadline)
         if not self.enabled:
             return self._submit_passthrough(st, t, rel)
+        retry = (None if self._backend is None else
+                 self._backend.overloaded(self._shard_of(service,
+                                                         st.cls.name)))
         with self._cond:
             st.offered += 1
             if self._stopping or self._draining:
                 st.rejected += 1
                 self._log("reject", st.cls.name, "not-admitting")
                 t._resolve(REJECTED, self.clock(), requeue=True)
+            elif retry is not None:
+                # per-worker backpressure: the backend's claimable
+                # backlog already exceeds the live fleet's budget
+                st.rejected += 1
+                self._log("reject", st.cls.name, "backend-overloaded")
+                t._resolve(REJECTED, self.clock(), retry_after=retry)
             elif len(st.queue) >= st.cls.queue_limit:
                 st.rejected += 1
                 self._log("reject", st.cls.name, "queue-full")
@@ -452,10 +502,15 @@ class AdmissionPlane:
         rel = None
         if deadlines:
             rel = max(0.0, min(deadlines) - self.clock())
-        self._system._invoke_async(
-            members[0].service,
-            lambda jct, error: self._group_done(st, members, jct, error),
-            deadline=rel)
+        def cb(jct, error):
+            self._group_done(st, members, jct, error)
+        if self._backend is not None:
+            self._backend.dispatch(
+                members[0].service, cb, deadline=rel,
+                shard=self._shard_of(members[0].service, st.cls.name))
+        else:
+            self._system._invoke_async(members[0].service, cb,
+                                       deadline=rel)
 
     def _group_done(self, st: _ClassState, members, jct, error) -> None:
         """Completion callback (device thread, no engine lock): resolve

@@ -523,7 +523,11 @@ class ServingSystem:
 
     def status(self) -> dict:
         """Operator summary: job rows by state + engine counters +
-        control-poller health + per-QoS-class admission stats."""
+        control-poller health + per-QoS-class admission stats. When a
+        worker fleet has registered against the attached store, its
+        rows (per-worker counters + states) ride along under
+        ``workers`` — the aggregated view lives in
+        ``repro.serving.workers.fleet_status``."""
         out = {"mode": self.mode.value,
                "devices": self.devices,
                "cancelled_invocations": self.cancelled_invocations,
@@ -543,6 +547,9 @@ class ServingSystem:
             for j in jobs:
                 by_state[j.state] = by_state.get(j.state, 0) + 1
             out["by_state"] = by_state
+            workers = self.jobstore.workers()
+            if workers:
+                out["workers"] = workers
         if self.engine is not None:
             out["fills"] = self.engine.fill_count
             out["steals"] = self.engine.steal_count

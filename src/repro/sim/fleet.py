@@ -13,6 +13,15 @@ into a single ``SimReport`` whose decision traces are **identical** to
 the monolithic run after remapping shard-local instance ids to global
 ones (pinned by ``tests/test_sim_fastcore.py``).
 
+**No-coupling rule** (the module's one load-bearing assumption): a
+shard may depend on nothing outside its own task subset. Any feature
+that lets one device's events influence another — dynamic election,
+steal migration, a shared RNG stream, a shared mutable collaborator —
+is coupling, and coupled configurations must be **rejected eagerly**
+(raise at ``simulate_fleet`` entry), never sharded approximately. The
+concrete rejections below are instances of this rule; when extending
+the fleet runner, add the check rather than weakening the guarantee.
+
 Equivalence contract — the sharded run matches the monolithic K-device
 run bit-for-bit only when:
 

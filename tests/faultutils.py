@@ -146,6 +146,46 @@ def crash_then_recover(scenario, mode, boundary, store_path):
     return store, rec
 
 
+# -------------------------------------------------------- worker fleets
+def seed_worker_store(store_path, scenario, qos=None):
+    """Preload a store file with a scenario's specs as CLAIMABLE rows
+    (state=submitted + shard keys) and a profile snapshot — what a
+    worker fleet drains. ``qos`` is a shard key string or a callable
+    ``spec -> key``. Returns (specs, job_ids)."""
+    from repro.serving.workers import enqueue_specs
+    specs = SCENARIOS[scenario]()
+    with JobStore(os.fspath(store_path)) as store:
+        ids = enqueue_specs(store, specs, qos=qos)
+        store.snapshot_profiles(profiles(specs))
+        store.checkpoint()
+    return specs, ids
+
+
+def spawn_worker(store_path, worker_id, *, lease=0.5, heartbeat=0.1,
+                 batch=100, crash_at=None, shards=None, extra=()):
+    """Launch one REAL worker subprocess (``python -m
+    repro.serving.workers``) against a store file. ``crash_at`` scripts
+    a hard os._exit(86) at that global kernel boundary of its first
+    batch — the mid-lease death the reclamation tests need. Caller
+    communicates()/waits."""
+    import subprocess
+    cmd = [sys.executable, "-m", "repro.serving.workers",
+           "--jobstore", os.fspath(store_path), "--worker-id", worker_id,
+           "--lease", str(lease), "--heartbeat", str(heartbeat),
+           "--batch", str(batch)]
+    if crash_at is not None:
+        cmd += ["--crash-at", str(crash_at)]
+    if shards:
+        cmd += ["--shards", ",".join(shards)]
+    cmd += list(extra)
+    env = dict(os.environ)
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+
+
 # ------------------------------------------------------- subprocess entry
 def child_main(argv=None) -> int:
     ap = argparse.ArgumentParser()

@@ -7,6 +7,11 @@ here: link-target extraction (scheme/anchor skipping, relative
 resolution), the path-shaped-code-span heuristic (what is and is NOT a
 checked path), ``check_document``'s missing list, and ``main``'s exit
 codes and failure messaging, against synthetic repos in tmp_path.
+
+Also pinned: the serve-CLI verb check (the AST-parsed registry must
+equal the live ``repro.launch.serve`` tuples — the one place the
+no-imports CI parse could drift from the real argparse tree) and the
+``BENCH_*.json`` filename check.
 """
 from __future__ import annotations
 
@@ -95,6 +100,94 @@ def test_check_document_clean_doc_returns_empty(tmp_path, monkeypatch):
     doc = tmp_path / "README.md"
     doc.write_text("plain prose, a [link](#anchor), `repro.core.policy` "
                    "and `python -m benchmarks.run` — nothing checkable")
+    assert cdr.check_document(doc) == []
+
+
+# ---------------------------------------------------------------------------
+# serve CLI verbs
+# ---------------------------------------------------------------------------
+
+def test_registry_matches_live_argparse_module():
+    """The AST parse must equal the imported module's tuples; if serve.py
+    restructures its verb registry, this is the test that fails loudly
+    instead of the docs job silently checking nothing."""
+    from repro.launch import serve
+    verbs, worker_verbs = cdr.serve_verb_registry()
+    assert verbs == serve.VERBS
+    assert worker_verbs == serve.WORKER_VERBS
+
+
+def test_unknown_verb_and_subverb_flagged(tmp_path, monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    doc = tmp_path / "README.md"
+    doc.write_text("run `python -m repro.launch.serve frobnicate --x`\n"
+                   "then `python -m repro.launch.serve workers explode`\n")
+    errs = dict(cdr.check_document(doc))
+    assert "unknown serve verb 'frobnicate'" in errs[
+        "`-m repro.launch.serve frobnicate`"]
+    assert "unknown serve workers sub-verb 'explode'" in errs[
+        "`-m repro.launch.serve workers`"]
+
+
+def test_known_verbs_subverbs_and_flat_form_pass(tmp_path, monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    doc = tmp_path / "README.md"
+    doc.write_text(
+        # real verbs, incl. a workers sub-verb and a flag after a verb
+        "```\n"
+        "python -m repro.launch.serve submit --high x\n"
+        "python -m repro.launch.serve workers status --json\n"
+        "python -m repro.launch.serve drain --jobstore /tmp/j.db\n"
+        # legacy flat form: flags directly after the module, no verb
+        "python -m repro.launch.serve \\\n  --high a --lo b\n"
+        # usage-line placeholder, not a literal verb
+        "python -m repro.launch.serve <verb> ...\n"
+        # continuation between module and verb
+        "python -m repro.launch.serve \\\n  submit --high x\n"
+        "```\n")
+    assert cdr.check_document(doc) == []
+
+
+def test_pipe_joined_verbs_each_validated(tmp_path, monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    doc = tmp_path / "README.md"
+    doc.write_text("`python -m repro.launch.serve cancel|pause|resume`")
+    assert cdr.check_document(doc) == []
+    doc.write_text("`python -m repro.launch.serve cancel|explode`")
+    (ref, err), = cdr.check_document(doc)
+    assert "unknown serve verb 'explode'" in err
+
+
+def test_inline_serve_spans_checked(tmp_path, monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    doc = tmp_path / "README.md"
+    doc.write_text("use `serve workers run` then `serve status`; "
+                   "prose mentioning serve alone is not checked")
+    assert cdr.check_document(doc) == []
+    doc.write_text("use `serve workers explode` here")
+    (ref, err), = cdr.check_document(doc)
+    assert ref == "`serve workers explode`"
+    assert "unknown serve workers sub-verb" in err
+
+
+# ---------------------------------------------------------------------------
+# BENCH_*.json filenames
+# ---------------------------------------------------------------------------
+
+def test_bench_json_mentions_must_exist_at_repo_root(tmp_path,
+                                                     monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    (tmp_path / "BENCH_real.json").write_text("{}")
+    doc = tmp_path / "README.md"
+    doc.write_text("gates in BENCH_real.json and BENCH_ghost.json")
+    assert cdr.check_document(doc) == [
+        ("`BENCH_ghost.json`", "BENCH_ghost.json not at repo root")]
+
+
+def test_bench_json_templates_and_globs_skipped(tmp_path, monkeypatch):
+    _fake_repo(tmp_path, monkeypatch)
+    doc = tmp_path / "README.md"
+    doc.write_text("emits `BENCH_<name>.json` files; see BENCH_*.json")
     assert cdr.check_document(doc) == []
 
 

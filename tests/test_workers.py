@@ -1,0 +1,410 @@
+"""Multi-process worker fleet over one durable store.
+
+Four layers of proof:
+
+1. **Lease protocol unit tests** — claim atomicity/ordering, the
+   live-lease exclusion (a leased row is unclaimable even while its
+   state transiently reads ``submitted``), renew, reap, churn
+   accounting, worker rows, coordination flags.
+2. **Equivalence pin** — ONE worker claiming everything in one batch is
+   decision-trace-identical to the single-process
+   ``SimScheduler.recover`` path, for every scenario x sharing mode.
+3. **Crash reclamation** — a REAL worker subprocess hard-crashes
+   (``os._exit(86)``) mid-lease; a survivor reaps the expired leases
+   and completes exactly the remaining suffix: zero lost, zero
+   duplicated (the PR-7 conservation assertion, fleet edition).
+4. **Admission seam** — ``AdmissionPlane(backend=StoreBackend(...))``
+   persists admitted groups as sharded claimable rows, resolves tickets
+   from store-observed completion, and folds per-worker backpressure
+   into the admission decision.
+"""
+import shutil
+import threading
+import time
+
+import pytest
+
+from faultutils import (SCENARIOS, SWEEP_MODES, assert_conserved, profiles,
+                        seed_worker_store, spawn_worker, total_kernels)
+from repro.core.faults import CRASH_EXIT
+from repro.core.jobstore import DONE, SUBMITTED, JobStore
+from repro.core.kernel_id import KernelID
+from repro.core.scheduler import Mode, SimScheduler
+from repro.core.task import TaskKey, TaskSpec, TraceKernel
+from repro.serving.workers import (EngineWorker, SpecService, StoreBackend,
+                                   WorkerConfig, WorkerSupervisor,
+                                   enqueue_specs, fleet_status)
+
+pytestmark = pytest.mark.fast
+
+
+def k(name, dur=0.01, gap=0.002):
+    return TraceKernel(KernelID(name), dur, gap)
+
+
+def spec(name, prio, n=4):
+    return TaskSpec(TaskKey(name), prio, [k(f"{name}/{i}")
+                                          for i in range(n)])
+
+
+# ---------------------------------------------------------------------------
+# 1. lease protocol on the store
+# ---------------------------------------------------------------------------
+class TestLeases:
+    def test_claim_is_priority_ordered_and_exclusive(self):
+        with JobStore.memory() as store:
+            enqueue_specs(store, [spec("lo", 5), spec("hi", 0),
+                                  spec("mid", 2)])
+            a = store.claim_jobs("wA", limit=2, lease_s=5.0)
+            assert [r.key.process for r in a] == ["hi", "mid"]
+            assert all(r.owner == "wA" and r.state == "running"
+                       for r in a)
+            b = store.claim_jobs("wB", limit=5, lease_s=5.0)
+            assert [r.key.process for r in b] == ["lo"]
+
+    def test_live_lease_blocks_claim_even_in_submitted_state(self):
+        """The sim's write-ahead parks claimed jobs back in
+        ``submitted`` until their arrival event; only lease EXPIRY may
+        hand them to a peer."""
+        with JobStore.memory() as store:
+            (jid,) = enqueue_specs(store, [spec("x", 0)])
+            store.claim_jobs("wA", lease_s=5.0, now=100.0)
+            store.record_submit(jid, TaskKey("x"), 0, n_kernels=4,
+                                state=SUBMITTED)     # write-ahead replay
+            assert store.job(jid).state == SUBMITTED
+            assert store.claim_jobs("wB", now=101.0) == []
+            assert store.pending_jobs(now=101.0) == 0
+            assert store.leased_jobs() == 1
+            # ... but an EXPIRED lease is claimable directly, and that
+            # claim counts as a reclaim
+            got = store.claim_jobs("wB", now=106.0)
+            assert [r.job_id for r in got] == [jid]
+            assert got[0].owner == "wB" and got[0].reclaims == 1
+            assert store.lease_churn() == 1
+
+    def test_renew_extends_and_reports_lost_leases(self):
+        with JobStore.memory() as store:
+            store.register_worker("wA")
+            enqueue_specs(store, [spec("x", 0)])
+            store.claim_jobs("wA", lease_s=1.0, now=100.0)
+            assert store.renew_leases("wA", lease_s=10.0, now=100.5) == 1
+            assert store.reap_expired(now=105.0) == []   # renewed past it
+            reaped = store.reap_expired(now=111.0)
+            assert len(reaped) == 1
+            assert reaped[0].state == SUBMITTED
+            assert reaped[0].owner is None
+            assert store.renew_leases("wA", now=111.0) == 0   # lost
+
+    def test_reap_preserves_watermark_and_credits_reaper(self):
+        with JobStore.memory() as store:
+            store.register_worker("wB")
+            (jid,) = enqueue_specs(store, [spec("x", 0, n=6)])
+            store.claim_jobs("wA", lease_s=0.5, now=100.0)
+            store.record_completion(jid, 0)
+            store.record_completion(jid, 1)
+            reaped = store.reap_expired(by="wB", now=101.0)
+            assert reaped[0].completed == 2       # watermark intact
+            assert reaped[0].reclaims == 1
+            assert store.workers()[0]["reaped"] == 1
+            # the re-claim sees the suffix: 4 kernels remain
+            (rec,) = store.claim_jobs("wB", now=101.0)
+            assert rec.remaining == 4
+
+    def test_terminal_state_releases_lease(self):
+        with JobStore.memory() as store:
+            (jid,) = enqueue_specs(store, [spec("x", 0)])
+            store.claim_jobs("wA", lease_s=500.0)
+            store.record_state(jid, DONE)
+            rec = store.job(jid)
+            assert rec.owner is None and rec.lease_expires is None
+            assert store.leased_jobs() == 0
+
+    def test_shard_filtered_claim_and_pending(self):
+        with JobStore.memory() as store:
+            enqueue_specs(store, [spec("g", 0), spec("b", 5)],
+                          qos=lambda s: "gold" if s.priority == 0
+                          else "bronze")
+            assert store.shards() == ["bronze", "gold"]
+            assert store.pending_jobs(["gold"]) == 1
+            got = store.claim_jobs("w", shards=["bronze"])
+            assert [r.qos for r in got] == ["bronze"]
+            assert store.claim_jobs("w", shards=[]) == []
+
+    def test_flags_roundtrip(self):
+        with JobStore.memory() as store:
+            assert store.flag("workers_go") is None
+            store.set_flag("workers_go", "1")
+            assert store.flag("workers_go") == "1"
+            store.clear_flag("workers_go")
+            assert store.flag("workers_go") is None
+
+    def test_worker_rows_accumulate(self):
+        with JobStore.memory() as store:
+            store.register_worker("w0")
+            store.worker_update("w0", jobs_done=2, kernels_done=10,
+                                steals=1, batches=1)
+            store.worker_update("w0", jobs_done=1, kernels_done=5,
+                                state="stopped")
+            (row,) = store.workers()
+            assert (row["jobs_done"], row["kernels_done"],
+                    row["steals"], row["state"]) == (3, 15, 1, "stopped")
+
+
+# ---------------------------------------------------------------------------
+# 2. workers=1 pinned equivalent to the single-process recover() path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+@pytest.mark.parametrize("mode", SWEEP_MODES)
+def test_one_worker_trace_identical_to_recover(scenario, mode, tmp_path):
+    base = tmp_path / "base.db"
+    seed_worker_store(base, scenario)
+    a, b = tmp_path / "a.db", tmp_path / "b.db"
+    shutil.copy(base, a)
+    shutil.copy(base, b)
+
+    with JobStore(str(a)) as sa:
+        ref = SimScheduler.recover(sa, mode)
+        ref.run()
+    with JobStore(str(b)) as sb:
+        w = EngineWorker(sb, WorkerConfig(worker_id="solo", mode=mode,
+                                          batch=1000))
+        w.run()
+        assert w.last_sim is not None
+        assert w.last_sim.policy.trace == ref.policy.trace
+        assert_conserved(sb, SCENARIOS[scenario]())
+
+
+def test_worker_claims_own_shard_first_then_steals():
+    with JobStore.memory() as store:
+        enqueue_specs(store, [spec("g1", 0), spec("g2", 0), spec("b1", 5),
+                              spec("b2", 5)],
+                      qos=lambda s: "gold" if s.priority == 0
+                      else "bronze")
+        w = EngineWorker(store, WorkerConfig(
+            worker_id="wG", batch=2, shards=("gold",), steal=True,
+            heartbeat_s=0.05, lease_s=2.0))
+        summary = w.run()
+    assert summary["jobs_done"] == 4
+    assert summary["steals"] == 2            # the two bronze jobs
+    assert summary["batches"] == 2
+
+
+def test_worker_without_steal_leaves_foreign_shards(tmp_path):
+    with JobStore(str(tmp_path / "s.db")) as store:
+        enqueue_specs(store, [spec("g", 0), spec("b", 5)],
+                      qos=lambda s: "gold" if s.priority == 0
+                      else "bronze")
+        w = EngineWorker(store, WorkerConfig(
+            worker_id="wG", shards=("gold",), steal=False,
+            drain_on_empty=True, heartbeat_s=0.05, lease_s=2.0,
+            poll_s=0.01))
+        t = threading.Thread(target=w.run, daemon=True)
+        t.start()
+        deadline = time.monotonic() + 10
+        while (store.pending_jobs(["gold"]) > 0
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        store.set_flag("workers_stop", "1")   # it polls forever otherwise
+        t.join(timeout=10)
+        assert not t.is_alive()
+        assert store.pending_jobs(["bronze"]) == 1
+        assert store.pending_jobs(["gold"]) == 0
+
+
+def test_paced_store_stamps_wall_time(tmp_path):
+    """The worker's sink must overwrite the sim's virtual timestamps
+    with wall time — fleet JCT stats subtract enqueue wall time."""
+    with JobStore(str(tmp_path / "s.db")) as store:
+        t0 = time.time()
+        enqueue_specs(store, [spec("x", 0)])
+        EngineWorker(store, WorkerConfig(worker_id="w",
+                                         heartbeat_s=0.05)).run()
+        rec = store.jobs()[0]
+        assert rec.state == DONE
+        # virtual completion would be ~0.05; wall epoch is ~1.7e9
+        assert rec.updated_at >= t0
+        assert 0.0 <= rec.updated_at - rec.submitted_at < 60.0
+
+
+# ---------------------------------------------------------------------------
+# 3. crash reclamation across REAL processes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario,boundary", [("pair", 3), ("tiers", 7),
+                                               ("churn", 11)])
+def test_worker_crash_survivor_reclaims_suffix(scenario, boundary,
+                                               tmp_path):
+    db = tmp_path / "fleet.db"
+    specs, _ = seed_worker_store(db, scenario, qos="gold")
+
+    victim = spawn_worker(db, "victim", lease=0.5, heartbeat=0.1,
+                          crash_at=boundary)
+    _, verr = victim.communicate(timeout=60)
+    assert victim.returncode == CRASH_EXIT, verr[-500:]
+    with JobStore(str(db)) as store:
+        assert store.leased_jobs() > 0        # died holding leases
+        done_before = sum(1 for r in store.jobs() if r.state == DONE)
+
+    survivor = spawn_worker(db, "survivor", lease=0.5, heartbeat=0.1)
+    sout, serr = survivor.communicate(timeout=60)
+    assert survivor.returncode == 0, serr[-500:]
+
+    with JobStore(str(db)) as store:
+        assert_conserved(store, specs)        # zero lost, zero duplicated
+        assert store.leased_jobs() == 0
+        assert store.lease_churn() >= len(specs) - done_before
+        by_id = {w["worker_id"]: w for w in store.workers()}
+        assert by_id["survivor"]["reaped"] + by_id["survivor"][
+            "jobs_done"] > 0
+
+
+def test_two_survivors_race_for_reclaimed_work(tmp_path):
+    """Both survivors reap/claim concurrently; claims are transactional,
+    so the suffix still completes exactly once."""
+    db = tmp_path / "fleet.db"
+    specs, _ = seed_worker_store(db, "churn")
+    victim = spawn_worker(db, "victim", lease=0.4, heartbeat=0.1,
+                          crash_at=9)
+    victim.communicate(timeout=60)
+    assert victim.returncode == CRASH_EXIT
+
+    s1 = spawn_worker(db, "s1", lease=0.5, heartbeat=0.1, batch=2)
+    s2 = spawn_worker(db, "s2", lease=0.5, heartbeat=0.1, batch=2)
+    for p in (s1, s2):
+        _, err = p.communicate(timeout=60)
+        assert p.returncode == 0, err[-500:]
+    with JobStore(str(db)) as store:
+        assert_conserved(store, specs)
+
+
+# ---------------------------------------------------------------------------
+# 4. supervisor + fleet status
+# ---------------------------------------------------------------------------
+def test_supervisor_drains_store_across_two_workers(tmp_path):
+    db = tmp_path / "fleet.db"
+    specs, _ = seed_worker_store(
+        db, "churn", qos=lambda s: "gold" if s.priority <= 1 else "bulk")
+    sup = WorkerSupervisor(str(db), n=2, shard=True, batch=2,
+                           lease_s=2.0, heartbeat_s=0.2)
+    sup.start()
+    try:
+        summaries = sup.wait(timeout=60)
+    finally:
+        sup.kill()
+    assert sum(s["jobs_done"] for s in summaries) == len(specs)
+    assert sum(s["kernels_done"] for s in summaries) == \
+        total_kernels(specs)
+    with JobStore(str(db)) as store:
+        assert_conserved(store, specs)
+        fs = fleet_status(store)
+    assert {w["worker_id"] for w in fs["workers"]} == {"w0", "w1"}
+    assert all(w["state"] == "stopped" for w in fs["workers"])
+    assert fs["pending"] == 0 and fs["leased"] == 0
+    assert fs["jobs_done"] == len(specs)
+    assert set(fs["classes"]) <= {"gold", "bulk"}
+    for c in fs["classes"].values():
+        assert c["jct_p50"] <= c["jct_p99"]
+        assert c["jct_p99"] < 120.0           # wall seconds, not virtual
+
+
+def test_stop_flag_halts_polling_worker(tmp_path):
+    """A worker running with ``--no-drain-on-empty`` polls forever; the
+    graceful-drain flag (what ``serve workers stop`` sets) ends it."""
+    db = tmp_path / "fleet.db"
+    with JobStore(str(db)):
+        pass                                   # empty store
+    p = spawn_worker(db, "w0", extra=("--no-drain-on-empty",
+                                      "--poll", "0.01"))
+    time.sleep(0.3)
+    with JobStore(str(db)) as store:
+        store.set_flag("workers_stop", "1")
+    out, err = p.communicate(timeout=30)
+    assert p.returncode == 0, err[-500:]
+    import json
+    assert json.loads(out.strip().splitlines()[-1])["jobs_done"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 5. the admission seam: StoreBackend dispatch + per-worker backpressure
+# ---------------------------------------------------------------------------
+def _mk_plane(store, **kw):
+    from repro.serving.admission import AdmissionPlane, QoSClass
+    classes = (QoSClass("gold", priority=0, queue_limit=64, deadline=None,
+                        max_batch=1),
+               QoSClass("bronze", priority=5, queue_limit=64,
+                        deadline=None, max_batch=1))
+    return AdmissionPlane(None, classes=classes, **kw)
+
+
+def test_admission_dispatches_through_store_to_worker(tmp_path):
+    db = str(tmp_path / "s.db")
+    store = JobStore(db)
+    backend = StoreBackend(store, per_worker_backlog=1000)
+    plane = _mk_plane(store, backend=backend).start()
+    wstore = JobStore(db)
+    worker = EngineWorker(wstore, WorkerConfig(
+        worker_id="w0", drain_on_empty=False, poll_s=0.01,
+        heartbeat_s=0.2, lease_s=2.0))
+    t = threading.Thread(target=worker.run, daemon=True)
+    t.start()
+    try:
+        tickets = [plane.submit(SpecService(spec(f"s{i}",
+                                                 0 if i % 2 else 5)),
+                                "gold" if i % 2 else "bronze")
+                   for i in range(6)]
+        outcomes = [tk.result(timeout=60) for tk in tickets]
+        assert outcomes == ["completed"] * 6
+        stats = plane.stats()["classes"]
+        assert stats["gold"]["completed"] == 3
+        assert stats["bronze"]["completed"] == 3
+        assert all(tk.jct is not None and tk.jct >= 0.0
+                   for tk in tickets)
+        with JobStore(db) as chk:
+            assert sorted({r.qos for r in chk.jobs()}) == ["bronze",
+                                                           "gold"]
+    finally:
+        store.set_flag("workers_stop", "1")
+        t.join(timeout=15)
+        plane.stop()
+        backend.close()
+        store.close()
+        wstore.close()
+
+
+def test_backend_backpressure_rejects_with_retry_hint(tmp_path):
+    db = str(tmp_path / "s.db")
+    with JobStore(db) as store:
+        backend = StoreBackend(store, per_worker_backlog=2,
+                               retry_after=0.123)
+        plane = _mk_plane(store, backend=backend, dispatcher=False)
+        # no live workers: budget is one worker's backlog = 2
+        enqueue_specs(store, [spec("a", 0), spec("b", 0)], qos="gold")
+        t = plane.submit(SpecService(spec("c", 0)), "gold")
+        assert t.outcome == "rejected"
+        assert t.retry_after == pytest.approx(0.123)
+        st = plane.stats()["classes"]["gold"]
+        assert st["offered"] == st["rejected"] == 1
+        backend.close()
+
+
+def test_backend_overload_budget_scales_with_live_workers(tmp_path):
+    db = str(tmp_path / "s.db")
+    with JobStore(db) as store:
+        backend = StoreBackend(store, per_worker_backlog=2)
+        enqueue_specs(store, [spec("a", 0), spec("b", 0)], qos="gold")
+        assert backend.overloaded("gold") is not None
+        store.register_worker("w0")
+        store.register_worker("w1")            # budget now 4
+        assert backend.overloaded("gold") is None
+        backend.close()
+
+
+def test_shard_router_by_service():
+    from repro.serving.admission import SHARD_ROUTERS
+    svc = SpecService(spec("llama", 0))
+    assert SHARD_ROUTERS["qos"](svc, "gold") == "gold"
+    assert SHARD_ROUTERS["service"](svc, "gold") == "llama"
+
+
+def test_unknown_shard_router_rejected():
+    with pytest.raises(ValueError, match="shard router"):
+        _mk_plane(JobStore.memory(), shard_by="nope")
